@@ -1,0 +1,64 @@
+"""Paper §2.4 — inference-time merging: decode-step latency with the live TT
+contraction vs the pre-merged (fold-into-dense) weights. The paper's claim:
+after merging, MetaTT serving cost == LoRA == base model."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro import configs as registry
+from repro.config.base import RunConfig, SHAPES
+from repro.core import tt as ttlib
+from repro.core.merge import fold_into_dense
+from repro.models import model as M, transformer as T
+from repro.peft import api as peft_api
+
+
+def run() -> list:
+    rows = []
+    cfg = registry.get_smoke_config("stablelm-1.6b")
+    run_cfg = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                        adapter_kind="metatt", adapter_rank=8)
+    spec = M.build_adapter_spec(run_cfg)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, spec, key)
+    params["adapter"] = {"cores": ttlib.random_tt(key, spec.cfg.mode_sizes,
+                                                  8, scale=0.1)}
+    bc, pl = peft_api.adapter_factors(spec, params["adapter"],
+                                      params["frozen"])
+    B, S = 4, 64
+    token = jax.random.randint(key, (B, 1), 0, cfg.vocab_size)
+    caches = T.init_caches(cfg, B, S, jnp.float32)
+    pos = jnp.int32(3)
+
+    live = jax.jit(lambda tok, c: T.decode_step(
+        params["base"], cfg, spec, bc, pl, tok, c, pos)[0])
+    us_live = time_call(live, token, caches)
+    rows.append(emit("serving/decode_live_tt", us_live, "adapter=metatt-r8"))
+
+    # merged: fold ΔW into q/v, run with NO adapter (paper's pre-compute)
+    folded = dict(params["base"])
+    blk = dict(folded["blocks"][0])
+    mixer = dict(blk["mixer"])
+    merged = fold_into_dense(params["adapter"], spec.cfg,
+                             {"attn_q": mixer["wq"], "attn_v": mixer["wv"]})
+    mixer["wq"], mixer["wv"] = merged["attn_q"], merged["attn_v"]
+    blk["mixer"] = mixer
+    folded["blocks"] = [blk]
+    merged_fn = jax.jit(lambda tok, c: T.decode_step(
+        folded, cfg, peft_api.NONE, {}, None, tok, c, pos)[0])
+    us_merged = time_call(merged_fn, token, caches)
+    rows.append(emit("serving/decode_merged", us_merged,
+                     f"overhead_removed={us_live-us_merged:.0f}us"))
+
+    base_fn = jax.jit(lambda tok, c: T.decode_step(
+        params["base"], cfg, peft_api.NONE, {}, None, tok, c, pos)[0])
+    us_base = time_call(base_fn, token, caches)
+    rows.append(emit("serving/decode_base_no_adapter", us_base,
+                     f"merged_vs_base_ratio={us_merged/us_base:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,76 @@
+"""Paper Table 1 — single-task fine-tuning: adapter parameter counts (exact
+paper parity) + train-step wall time per PEFT method on RoBERTa-base/large
+dims (smoke-scale step timing: CPU container; the parameter counts are the
+paper's actual Table 1 column and are exact at full scale)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro import configs as registry
+from repro.config.base import RunConfig, SHAPES, TrainConfig
+from repro.core import metatt
+from repro.distributed import GradCompressor
+from repro.models import model as M
+from repro.peft import api as peft_api, lora, lotr, vera
+from repro.train import train_step as ts
+
+# (method, rank) rows of Table 1 with the paper's published param counts
+TABLE1_BASE = [
+    ("lora", 8, lora.paper_count(768, 12, 2, 8), 295),
+    ("vera", 1024, vera.paper_count(768, 12, 2, 1024), 43),
+    ("lotr", 40, lotr.paper_count(768, 12, 2, 40), 100),
+    ("lotr", 80, lotr.paper_count(768, 12, 2, 80), 276),
+    ("metatt-4d", 8, metatt.paper_count_4d(768, 12, 2, 8), 13),
+    ("metatt-4d", 24, metatt.paper_count_4d(768, 12, 2, 24), 45),
+    ("metatt-4d", 64, metatt.paper_count_4d(768, 12, 2, 64), 156),
+    ("metatt-5d", 16, metatt.paper_count_5d(768, 12, 12, 2, 16), 20),
+    ("metatt-5d", 64, metatt.paper_count_5d(768, 12, 12, 2, 64), 160),
+]
+TABLE1_LARGE = [
+    ("lora", 8, lora.paper_count(1024, 24, 2, 8), 786),
+    ("vera", 256, vera.paper_count(1024, 24, 2, 256), 61),
+    ("lotr", 64, lotr.paper_count(1024, 24, 2, 64), 328),
+    ("metatt-4d", 16, metatt.paper_count_4d(1024, 24, 2, 16), 39),
+    ("metatt-4d", 32, metatt.paper_count_4d(1024, 24, 2, 32), 92),
+    ("metatt-5d", 32, metatt.paper_count_5d(1024, 16, 24, 2, 32), 78),
+    ("metatt-5d", 64, metatt.paper_count_5d(1024, 16, 24, 2, 64), 242),
+]
+
+
+def run() -> list:
+    rows = []
+    for model_name, table in (("roberta-base", TABLE1_BASE),
+                              ("roberta-large", TABLE1_LARGE)):
+        for method, rank, count, paper_k in table:
+            ok = abs(count / 1000 - paper_k) < 1.0
+            rows.append(emit(
+                f"table1/{model_name}/{method}-r{rank}/params", 0.0,
+                f"params={count} paper={paper_k}k match={ok}"))
+    # step-time comparison at matched rank (smoke dims, CPU)
+    cfg = registry.get_smoke_config("roberta-base")
+    key = jax.random.PRNGKey(0)
+    toks = jax.random.randint(key, (8, 64), 0, cfg.vocab_size)
+    for kind, variant in [("metatt", "4d"), ("metatt", "5d"),
+                          ("lora", "4d"), ("vera", "4d"), ("lotr", "4d")]:
+        run_cfg = RunConfig(model=cfg, shape=SHAPES["train_4k"],
+                            adapter_kind=kind, adapter_variant=variant,
+                            adapter_rank=8, train=TrainConfig(remat="none"))
+        spec = M.build_adapter_spec(run_cfg)
+        params = M.init_params(cfg, spec, key)
+        state = ts.init_train_state(params["adapter"], GradCompressor("none"))
+        step = ts.make_train_step(cfg, spec, run_cfg.optimizer,
+                                  run_cfg.train, 100, donate=False)
+        us = time_call(lambda s=state: step(s, params["base"],
+                                            params["frozen"],
+                                            {"tokens": toks})[0].adapter)
+        n = peft_api.count_trainable(spec, params["adapter"])
+        label = f"{kind}-{variant}" if kind == "metatt" else kind
+        rows.append(emit(f"table1/step_time/{label}", us,
+                         f"trainable={n}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Paper Table 2 — multi-task learning: parameter overhead of the task core
+(MetaTT-(4+1)D vs MetaTT-4D vs one shared LoRA) + per-step time of joint
+training with task cycling."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_call
+from repro import configs as registry
+from repro.config.base import RunConfig, SHAPES, TrainConfig
+from repro.core import metatt
+from repro.data import ClassificationTasks
+from repro.distributed import GradCompressor
+from repro.models import model as M
+from repro.peft import api as peft_api, lora
+from repro.train import train_step as ts
+
+
+def run() -> list:
+    rows = []
+    # exact Table 2 param columns (RoBERTa-base/large, q+v, r=8, T=3)
+    for D, L, name in ((768, 12, "roberta-base"), (1024, 24, "roberta-large")):
+        n4 = metatt.paper_count_4d(D, L, 2, 8)
+        n41 = n4 + 3 * 64          # one extra (T, r, r) core
+        nl = lora.paper_count(D, L, 2, 8)
+        rows.append(emit(f"table2/{name}/params", 0.0,
+                         f"lora={nl} metatt4d={n4} metatt4+1d={n41} "
+                         f"ratio_lora_over_4+1d={nl/n41:.1f}"))
+    # joint-training step time with the task core (smoke dims)
+    cfg = registry.get_smoke_config("roberta-base")
+    key = jax.random.PRNGKey(0)
+    tasks = ClassificationTasks(vocab_size=cfg.vocab_size, seq_len=16,
+                                batch=8, num_tasks=3)
+    for variant in ("4d", "4+1d"):
+        run_cfg = RunConfig(model=cfg, shape=SHAPES["train_4k"],
+                            adapter_kind="metatt", adapter_variant=variant,
+                            adapter_rank=8, num_tasks=3,
+                            train=TrainConfig(remat="none"))
+        spec = M.build_adapter_spec(run_cfg)
+        params = M.init_params(cfg, spec, key)
+        state = ts.init_train_state(params["adapter"], GradCompressor("none"))
+        step = ts.make_train_step(cfg, spec, run_cfg.optimizer,
+                                  run_cfg.train, 100, donate=False)
+        b = tasks.sample(0)
+        import jax.numpy as jnp
+        batch = {"tokens": jnp.asarray(b["tokens"]),
+                 "mask": jnp.asarray(b["mask"])}
+        if variant == "4+1d":
+            batch["task"] = jnp.int32(0)
+        us = time_call(lambda s=state: step(s, params["base"],
+                                            params["frozen"],
+                                            batch)[0].adapter)
+        n = peft_api.count_trainable(spec, params["adapter"])
+        rows.append(emit(f"table2/step_time/metatt-{variant}", us,
+                         f"trainable={n}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

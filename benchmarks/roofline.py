@@ -1,0 +1,114 @@
+"""Roofline table generator (deliverable g).
+
+Reads artifacts/dryrun/*.json (written by repro.launch.dryrun) and emits the
+EXPERIMENTS.md §Roofline markdown table: three terms per (arch × shape ×
+mesh), dominant bound, MODEL_FLOPS/HLO_FLOPS ratio, and the per-cell
+improvement note.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16 · 819 GB/s HBM ·
+~50 GB/s/link ICI — defined in repro/launch/dryrun.py.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+NOTES = {
+    "compute": ("raise MXU utilization: bigger per-chip microbatch or fewer "
+                "remat recomputes"),
+    "memory": ("cut HBM traffic: fuse elementwise chains, shrink f32 "
+               "buffers, avoid re-gathering FSDP weights per microbatch"),
+    "collective": ("cut wire bytes: fewer FSDP weight all-gathers "
+                   "(microbatch count), SP only where activations dominate, "
+                   "bf16 collectives"),
+}
+
+
+def load(out_dir: str = "artifacts/dryrun", tag: str = "") -> list:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, f"*{tag}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if tag == "" and rec.get("tag"):
+            continue
+        rows.append(rec)
+    return rows
+
+
+def fmt_seconds(s: float) -> str:
+    if s >= 1:
+        return f"{s:8.2f}s"
+    if s >= 1e-3:
+        return f"{s*1e3:6.1f}ms"
+    return f"{s*1e6:6.0f}us"
+
+
+def table(rows: list, mesh: str = "single") -> str:
+    out = ["| arch | shape | compute | memory | collective | bound | "
+           "frac | useful | args/chip | temp/chip(TPU est) |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    shapes_order = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    rows = [r for r in rows if r.get("mesh") == mesh]
+    rows.sort(key=lambda r: (r["arch"], shapes_order.index(r["shape"])))
+    for r in rows:
+        if r["status"] == "SKIP":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | SKIP | "
+                       f"— | — | — | — |")
+            continue
+        if r["status"] != "OK":
+            out.append(f"| {r['arch']} | {r['shape']} | FAIL: "
+                       f"{r.get('error','')[:60]} | | | | | | | |")
+            continue
+        ro = r["roofline"]
+        m = r["memory_analysis"]
+        args = m.get("argument_size_in_bytes", 0) / 2**30
+        temp = m.get("tpu_temp_estimate_bytes",
+                     m.get("temp_size_in_bytes", 0)) / 2**30
+        useful = ro.get("useful_compute_ratio")
+        out.append(
+            f"| {r['arch']} | {r['shape']} |"
+            f" {fmt_seconds(ro['compute_s'])} |"
+            f" {fmt_seconds(ro['memory_s'])} |"
+            f" {fmt_seconds(ro['collective_s'])} |"
+            f" **{ro['bound']}** |"
+            f" {ro['roofline_fraction']:.3f} |"
+            f" {useful:.2f} |"
+            f" {args:.2f}GB | {temp:.2f}GB |")
+    return "\n".join(out)
+
+
+def summary(rows: list) -> dict:
+    ok = [r for r in rows if r["status"] == "OK"]
+    skip = [r for r in rows if r["status"] == "SKIP"]
+    fail = [r for r in rows if r["status"] == "FAIL"]
+    worst = sorted((r for r in ok if r["mesh"] == "single"),
+                   key=lambda r: r["roofline"]["roofline_fraction"])[:5]
+    most_coll = sorted(
+        (r for r in ok if r["mesh"] == "single"),
+        key=lambda r: -(r["roofline"]["collective_s"]
+                        / max(sum((r["roofline"]["compute_s"],
+                                   r["roofline"]["memory_s"],
+                                   r["roofline"]["collective_s"])),
+                              1e-30)))[:5]
+    return {"ok": len(ok), "skip": len(skip), "fail": len(fail),
+            "worst_fraction": [(r["arch"], r["shape"],
+                                round(r["roofline"]["roofline_fraction"], 4))
+                               for r in worst],
+            "most_collective_bound": [
+                (r["arch"], r["shape"],
+                 round(r["roofline"]["collective_s"], 3)) for r in most_coll]}
+
+
+def main() -> None:
+    rows = load()
+    print("## single-pod (16x16 = 256 chips)\n")
+    print(table(rows, "single"))
+    print("\n## multi-pod (2x16x16 = 512 chips)\n")
+    print(table(rows, "multi"))
+    print("\n## summary\n")
+    print(json.dumps(summary(rows), indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Benchmark driver — one suite per paper table/figure + roofline summary.
+
+Prints ``name,us_per_call,derived`` CSV rows. Roofline terms come from the
+dry-run artifacts (benchmarks/roofline.py); run
+``python -m repro.launch.dryrun --all`` first to refresh them.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import (bench_fig2_dmrg, bench_init_ablation,
+                            bench_kernels, bench_serving, bench_table1,
+                            bench_table2, roofline)
+    bench_table1.run()
+    bench_table2.run()
+    bench_fig2_dmrg.run()
+    bench_init_ablation.run()
+    bench_serving.run()
+    bench_kernels.run()
+    # roofline summary rows (from dry-run artifacts, if present)
+    for out_dir, label in (("artifacts/dryrun", "baseline"),
+                           ("artifacts/dryrun_opt", "optimized")):
+        if not os.path.isdir(out_dir):
+            continue
+        rows = roofline.load(out_dir)
+        for r in rows:
+            if r.get("status") != "OK" or r.get("mesh") != "single":
+                continue
+            ro = r["roofline"]
+            print(f"roofline-{label}/{r['arch']}/{r['shape']},0.0,"
+                  f"bound={ro['bound']} compute_s={ro['compute_s']:.3e} "
+                  f"memory_s={ro['memory_s']:.3e} "
+                  f"collective_s={ro['collective_s']:.3e} "
+                  f"fraction={ro['roofline_fraction']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

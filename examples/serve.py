@@ -1,0 +1,86 @@
+"""Batched serving with a MetaTT adapter (paper §2.4).
+
+Demonstrates the two serving modes:
+  * live   — the TT contraction runs per decode step (two small GEMMs),
+  * merged — ΔW folded into the frozen weights once (zero overhead;
+             "matching the speeds of LoRA" per the paper).
+
+    PYTHONPATH=src python examples/serve.py [--tokens 16]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as registry
+from repro.config.base import RunConfig, SHAPES
+from repro.core import tt as ttlib
+from repro.core.merge import fold_into_dense
+from repro.models import model as M
+from repro.peft import api as peft_api
+from repro.train import train_step as ts
+
+
+def generate(base, cfg, spec, adapter, prompt, steps, cache_len):
+    """Greedy prefill + decode."""
+    prefill = ts.make_prefill(cfg, spec, cache_len)
+    logits, caches, _ = prefill(base, adapter, {}, prompt)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    out = [tok]
+    pos = prompt.shape[1]
+    step = ts.make_serve_step(cfg, spec)
+    for i in range(steps - 1):
+        lg, caches = step(base, adapter, {}, tok, caches,
+                          jnp.int32(pos + i))
+        tok = jnp.argmax(lg, axis=-1)[:, None]
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = registry.get_smoke_config("stablelm-1.6b")
+    run = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                    adapter_kind="metatt", adapter_rank=8)
+    spec = M.build_adapter_spec(run)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, spec, key)
+    params["adapter"] = {"cores": ttlib.random_tt(
+        key, spec.cfg.mode_sizes, 8, scale=0.1)}
+    prompt = jax.random.randint(key, (args.batch, 8), 0, cfg.vocab_size)
+    cache_len = prompt.shape[1] + args.tokens
+
+    t0 = time.perf_counter()
+    live = generate(params["base"], cfg, spec, params["adapter"], prompt,
+                    args.tokens, cache_len)
+    t_live = time.perf_counter() - t0
+
+    # merge ΔW into q/v once, then serve with NO adapter at all
+    folded = dict(params["base"])
+    blk = dict(folded["blocks"][0])
+    mixer = dict(blk["mixer"])
+    merged = fold_into_dense(params["adapter"], spec.cfg,
+                             {"attn_q": mixer["wq"], "attn_v": mixer["wv"]})
+    mixer["wq"], mixer["wv"] = merged["attn_q"], merged["attn_v"]
+    blk["mixer"] = mixer
+    folded["blocks"] = [blk]
+    t0 = time.perf_counter()
+    merged_out = generate(folded, cfg, peft_api.NONE, {}, prompt,
+                          args.tokens, cache_len)
+    t_merged = time.perf_counter() - t0
+
+    same = bool(jnp.all(live == merged_out))
+    print(f"generated {args.tokens} tokens x batch {args.batch}")
+    print(f"live TT adapter : {t_live:.2f}s (incl. compile)")
+    print(f"merged weights  : {t_merged:.2f}s (incl. compile)")
+    print(f"identical greedy output: {same}")
+    print(f"first sequence: {live[0].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

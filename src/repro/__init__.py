@@ -1,0 +1,4 @@
+"""repro: MetaTT — a global tensor-train adapter for parameter-efficient
+fine-tuning, as a production-grade multi-pod JAX framework."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,9 @@
+from repro.config.base import (  # noqa: F401
+    SHAPES,
+    MeshConfig,
+    ModelConfig,
+    OptimizerConfig,
+    RunConfig,
+    ShapeConfig,
+    TrainConfig,
+)

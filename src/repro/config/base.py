@@ -1,0 +1,193 @@
+"""Config system.
+
+`ModelConfig` is expressive enough for all 10 assigned architectures plus the
+paper's own RoBERTa targets; `ShapeConfig` is one input-shape cell of the
+assignment grid; `RunConfig` bundles model + shape + adapter + mesh + trainer
+knobs and is what the launcher consumes.
+
+Layer heterogeneity (jamba's 1:7 mamba:attn interleave, xlstm's
+sLSTM/mLSTM alternation, MoE-every-k) is expressed as a repeating
+**super-block pattern**: `block_pattern` is a tuple of `(mixer, ffn)` pairs
+and the model scans over `num_layers / len(block_pattern)` super-blocks.
+This keeps the HLO O(pattern) instead of O(num_layers) — essential for
+compiling 61-88 layer models at 512 devices (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional
+
+import jax.numpy as jnp
+
+MIXERS = ("attn", "mamba", "mlstm", "slstm", "none")
+FFNS = ("dense", "moe", "none")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | vlm | audio | ssm | hybrid
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 -> d_model // num_heads
+    block_pattern: tuple = (("attn", "dense"),)
+    mlp: str = "swiglu"            # swiglu | geglu | gelu
+    norm_kind: str = "rmsnorm"     # rmsnorm | layernorm
+    norm_eps: float = 1e-5
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = True
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    num_shared_experts: int = 0    # kimi-style always-on shared expert(s)
+    moe_capacity_factor: float = 2.0  # GShard capacity dispatch (models/moe.py)
+    # load-balance/z losses train the ROUTER — which is frozen under PEFT, so
+    # they only add compute + a 0.2TB/step probs gather (kimi dry-run, §Perf
+    # iteration K3). 0 disables them; set >0 for full fine-tuning.
+    moe_aux_weight: float = 0.0
+    # --- mamba ---
+    mamba_d_state: int = 16
+    mamba_expand: int = 2
+    mamba_dt_rank: int = 0         # 0 -> ceil(d_model / 16)
+    mamba_conv: int = 4
+    # --- enc-dec (whisper) ---
+    encoder_layers: int = 0
+    encoder_seq: int = 0           # fixed encoder length (1500 audio frames)
+    # --- frontends (stubs per assignment) ---
+    frontend: str = "none"         # none | patch_stub | audio_stub
+    frontend_seq: int = 0          # patches/frames prepended to the text seq
+    # --- dtypes ---
+    param_dtype: Any = jnp.bfloat16
+    compute_dtype: Any = jnp.bfloat16
+
+    # ------------------------------------------------------------------
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding rows padded to a 128 multiple so the vocab dim shards
+        cleanly on any 16-way mesh axis (whisper's 51866 otherwise forces
+        fully-replicated multi-GB f32 logits — §Perf iteration W2). Padded
+        ids are masked out of the loss; real token ids never touch them."""
+        return -(-self.vocab_size // 128) * 128
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.resolved_head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.resolved_head_dim
+
+    @property
+    def mamba_d_inner(self) -> int:
+        return self.mamba_expand * self.d_model
+
+    @property
+    def resolved_dt_rank(self) -> int:
+        return self.mamba_dt_rank or -(-self.d_model // 16)
+
+    @property
+    def pattern_len(self) -> int:
+        return len(self.block_pattern)
+
+    @property
+    def num_super_blocks(self) -> int:
+        if self.num_layers % self.pattern_len:
+            raise ValueError(
+                f"{self.name}: num_layers={self.num_layers} not divisible by "
+                f"pattern length {self.pattern_len}")
+        return self.num_layers // self.pattern_len
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def total_layers(self) -> int:
+        """Adapter L axis: encoder layers (if any) + decoder layers."""
+        return self.encoder_layers + self.num_layers
+
+    def validate(self) -> "ModelConfig":
+        for mixer, ffn in self.block_pattern:
+            if mixer not in MIXERS or ffn not in FFNS:
+                raise ValueError(f"bad block pattern entry {(mixer, ffn)}")
+        _ = self.num_super_blocks
+        if any(f == "moe" for _, f in self.block_pattern):
+            if not (self.num_experts and self.experts_per_token):
+                raise ValueError(f"{self.name}: moe blocks need num_experts")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One cell of the assignment's shape grid."""
+    name: str                      # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+    @property
+    def is_train(self) -> bool:
+        return self.kind == "train"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"
+    lr: float = 1e-3               # paper's MetaTT grid: {1e-3, 5e-4}
+    betas: tuple = (0.9, 0.999)
+    eps: float = 1e-8
+    weight_decay: float = 0.0      # paper App. D: weight_decay = 0.0
+    warmup_ratio: float = 0.06     # paper App. A.3
+    grad_clip: float = 3.0         # paper App. B: max grad norm 3.0
+    schedule: str = "linear"       # linear | cosine | constant
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 100
+    microbatch: int = 0            # 0 -> no gradient accumulation
+    remat: str = "block"           # none | block (checkpoint each super-block)
+    seed: int = 42                 # one of the paper's seeds (App. D)
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: str = ""
+    ckpt_keep: int = 3
+    grad_compression: str = "none"  # none | int8 | topk
+    train_base: bool = False       # True -> full fine-tuning baseline (FT row)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    shape: tuple = (1,)
+    axes: tuple = ("data",)
+    multi_pod: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig
+    adapter_kind: str = "metatt"   # metatt | lora | vera | lotr | none
+    adapter_variant: str = "4d"    # metatt only: 4d | 5d | 4+1d | 4+ed
+    adapter_rank: int = 8
+    adapter_alpha: float = 4.0
+    adapter_matrices: tuple = ()   # () -> arch default
+    num_tasks: int = 0
+    optimizer: OptimizerConfig = OptimizerConfig()
+    train: TrainConfig = TrainConfig()

@@ -1,0 +1,53 @@
+"""Architecture registry: one module per assigned architecture (+ the
+paper's own RoBERTa targets). ``get_config("<arch-id>")`` returns the exact
+assignment config; ``get_smoke_config`` returns the reduced same-family
+config used by CPU smoke tests."""
+from __future__ import annotations
+
+import importlib
+
+_MODULES = {
+    "granite-moe-1b-a400m": "granite_moe_1b",
+    "kimi-k2-1t-a32b": "kimi_k2",
+    "paligemma-3b": "paligemma_3b",
+    "mistral-large-123b": "mistral_large_123b",
+    "stablelm-1.6b": "stablelm_1_6b",
+    "gemma-7b": "gemma_7b",
+    "granite-34b": "granite_34b",
+    "whisper-large-v3": "whisper_large_v3",
+    "xlstm-125m": "xlstm_125m",
+    "jamba-v0.1-52b": "jamba_52b",
+    "roberta-base": "roberta",
+    "roberta-large": "roberta",
+}
+
+ARCH_IDS = tuple(k for k in _MODULES if not k.startswith("roberta"))
+ALL_IDS = tuple(_MODULES)
+
+
+def _mod(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get_config(name: str):
+    mod = _mod(name)
+    if name == "roberta-large":
+        return mod.CONFIG_LARGE
+    if name == "roberta-base":
+        return mod.CONFIG_BASE
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str):
+    return _mod(name).smoke_config(name)
+
+
+def supports_shape(cfg, shape_name: str) -> bool:
+    """Assignment skip rules: long_500k only for sub-quadratic-decode archs
+    (SSM / hybrid / linear-attention); decode shapes skipped for
+    encoder-only archs (none assigned)."""
+    if shape_name == "long_500k":
+        return cfg.family in ("ssm", "hybrid")
+    return True

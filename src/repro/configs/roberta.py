@@ -1,0 +1,54 @@
+"""The paper's own fine-tuning targets: RoBERTa-base / RoBERTa-large
+(Liu et al. 2019) — used by the paper-reproduction benchmarks (Tables 1, 2,
+Fig. 2) and the examples.
+
+NOTE: RoBERTa is a bidirectional *encoder*; this framework's zoo is
+decoder-LM shaped, so the reproduction uses a causal LM of identical
+dimensions with last-token classification (synthetic GLUE-like tasks —
+DESIGN.md §6). Every *parameter-count* claim (what Table 1 ranks methods by)
+depends only on (D, L, M, H, r) and transfers exactly; adapter param counts
+are asserted against the paper's numbers in tests/test_param_counts.py.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+
+CONFIG_BASE = ModelConfig(
+    name="roberta-base",
+    family="dense",
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    d_ff=3072,
+    vocab_size=50265,
+    mlp="gelu",
+    norm_kind="layernorm",
+    param_dtype=jnp.float32,
+    compute_dtype=jnp.float32,
+).validate()
+
+CONFIG_LARGE = ModelConfig(
+    name="roberta-large",
+    family="dense",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=50265,
+    mlp="gelu",
+    norm_kind="layernorm",
+    param_dtype=jnp.float32,
+    compute_dtype=jnp.float32,
+).validate()
+
+CONFIG = CONFIG_BASE
+
+
+def smoke_config(name: str = "") -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG_BASE, name="roberta-smoke", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=128).validate()

@@ -1,0 +1,39 @@
+"""whisper-large-v3 [arXiv:2212.04356] — encoder-decoder, audio.
+
+32L encoder + 32L decoder, d_model=1280 20H (kv=20) d_ff=5120 vocab=51866,
+layernorm + gelu. The conv audio frontend is a STUB per the assignment:
+``input_specs()`` provides 1500 precomputed frame embeddings for the encoder.
+Adapter L axis spans enc+dec (64); M axis includes cross-attention q/v
+(DESIGN.md §4).
+"""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    family="audio",
+    num_layers=32,
+    d_model=1280,
+    num_heads=20,
+    num_kv_heads=20,
+    d_ff=5120,
+    vocab_size=51866,
+    mlp="gelu",
+    norm_kind="layernorm",
+    encoder_layers=32,
+    # 1500 mel frames padded to 1536 = 16*96 so the encoder sequence is
+    # shardable over the 16-way mesh axes (stub frontend pads with zeros).
+    encoder_seq=1536,
+    frontend="audio_stub",
+).validate()
+
+
+def smoke_config(name: str = "") -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, name=CONFIG.name + "-smoke", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=128,
+        encoder_layers=2, encoder_seq=16, param_dtype=jnp.float32,
+        compute_dtype=jnp.float32).validate()

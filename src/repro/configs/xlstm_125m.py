@@ -1,0 +1,30 @@
+"""xlstm-125m [arXiv:2405.04517] — sLSTM + mLSTM blocks, no FFN (d_ff=0).
+
+12L d_model=768 4H vocab=50304, alternating mLSTM/sLSTM blocks.
+Linear-time recurrent decode -> runs the long_500k cell the attention archs
+skip.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-125m",
+    family="ssm",
+    num_layers=12,
+    d_model=768,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    block_pattern=(("mlstm", "none"), ("slstm", "none")),
+).validate()
+
+
+def smoke_config(name: str = "") -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, name=CONFIG.name + "-smoke", num_layers=4, d_model=64,
+        num_heads=4, num_kv_heads=4, vocab_size=128,
+        param_dtype=jnp.float32, compute_dtype=jnp.float32).validate()

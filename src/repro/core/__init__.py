@@ -1,0 +1,22 @@
+"""MetaTT core: the paper's contribution as a composable JAX module."""
+from repro.core.metatt import (  # noqa: F401
+    MetaTTConfig,
+    apply,
+    delta_out,
+    init_params,
+    materialize_delta,
+    num_params,
+    paper_count_4d,
+    paper_count_5d,
+    paper_count_lora,
+    project_in,
+    step_factors,
+    zero_at_init,
+)
+from repro.core.dmrg import (  # noqa: F401
+    RankSchedule,
+    SweepResult,
+    dmrg_sweep,
+    two_site_sweep,
+)
+from repro.core.merge import LoRAForm, fold_into_dense, to_lora_form  # noqa: F401

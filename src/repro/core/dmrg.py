@@ -1,0 +1,192 @@
+"""DMRG-inspired rank-adaptive sweep (paper §3.3, Algorithm 1).
+
+Starting from a (sufficiently high-rank) TT, a sweep merges neighbouring
+cores, truncates with an SVD to a target rank, and re-splits:
+
+  left→right:  G_i ← U,   G_{i+1} ← S·Vᵀ     (i = 1 .. d-1)
+  right→left:  G_{i-1} ← U·S,   G_i ← Vᵀ     (i = d .. 2)
+
+After a sweep the bond ranks (and hence parameter shapes) change, so the
+optimizer moments must be re-initialized (paper §3.3) — see
+optim/adamw.py::reinit_state and train/trainer.py.
+
+Beyond the paper's fixed-target sweep we also provide:
+  * adaptive truncation by relative singular-value tolerance (`rtol`),
+  * a left-canonicalization pre-pass so the right-to-left truncations are
+    locally optimal (standard DMRG practice; the paper's Algorithm 1 is the
+    plain two-pass variant, which we keep as the default for faithfulness),
+  * per-bond rank schedules (paper Fig. 2 uses 10 → … → 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+
+from repro.core import tt
+from repro.core.metatt import MetaTTConfig, Params
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    params: Params
+    ranks: tuple
+    # singular-value spectra per bond from the final (right-to-left) pass —
+    # the diagnostic the paper uses to pick rank schedules (App. C).
+    spectra: tuple
+
+
+def dmrg_sweep(params: Params, target_rank: int | Sequence[int] | None = None,
+               *, rtol: float | None = None, max_rank: int | None = None,
+               canonicalize: bool = False) -> SweepResult:
+    """One full DMRG sweep (Algorithm 1). Host-side: changes array shapes.
+
+    target_rank: hard per-bond target (int -> uniform). If None, ranks are
+        chosen adaptively from singular values via ``rtol`` (and capped at
+        ``max_rank``).
+    canonicalize: QR left-canonicalize first (beyond-paper numerical nicety).
+    """
+    cores = list(params["cores"])
+    d = len(cores)
+    nbonds = d - 1
+    if target_rank is None and rtol is None:
+        raise ValueError("need target_rank or rtol")
+    if isinstance(target_rank, int):
+        targets = [target_rank] * nbonds
+    elif target_rank is not None:
+        targets = list(target_rank)
+        if len(targets) != nbonds:
+            raise ValueError(f"need {nbonds} per-bond targets")
+    else:
+        targets = [None] * nbonds
+
+    if canonicalize:
+        cores = tt.left_canonicalize(cores)
+
+    # left -> right (lines 1-5): G_i <- U (isometry), G_{i+1} <- S Vt
+    for i in range(d - 1):
+        merged = tt.merge_pair(cores[i], cores[i + 1])
+        a, b, _ = tt.split_merged(merged, targets[i], left_orthogonal=True,
+                                  rtol=rtol, max_rank=max_rank)
+        cores[i], cores[i + 1] = a, b
+
+    # right -> left (lines 6-10): G_{i-1} <- U S, G_i <- Vt
+    spectra = [None] * nbonds
+    for i in range(d - 1, 0, -1):
+        merged = tt.merge_pair(cores[i - 1], cores[i])
+        a, b, s = tt.split_merged(merged, targets[i - 1],
+                                  left_orthogonal=False,
+                                  rtol=rtol, max_rank=max_rank)
+        cores[i - 1], cores[i] = a, b
+        spectra[i - 1] = s
+
+    out = dict(params)
+    out["cores"] = cores
+    return SweepResult(params=out, ranks=tt.ranks(cores),
+                       spectra=tuple(spectra))
+
+
+@dataclasses.dataclass(frozen=True)
+class RankSchedule:
+    """Epoch -> target-rank schedule for interspersed DMRG sweeps.
+
+    The paper (Fig. 2 / App. C) reduces ranks *slowly* from a high starting
+    rank (10) down to the final target (4), sweeping right after chosen
+    epochs; between sweeps AdamW trains at fixed shapes.
+    """
+    milestones: tuple  # ((epoch, rank), ...) sorted by epoch
+
+    @staticmethod
+    def linear(start_rank: int, end_rank: int, start_epoch: int,
+               every: int = 1, step: int = 1) -> "RankSchedule":
+        ms, r, e = [], start_rank, start_epoch
+        while r > end_rank:
+            r = max(end_rank, r - step)
+            ms.append((e, r))
+            e += every
+        return RankSchedule(tuple(ms))
+
+    def rank_after_epoch(self, epoch: int) -> int | None:
+        """Target rank if a sweep is scheduled right after ``epoch``."""
+        for e, r in self.milestones:
+            if e == epoch:
+                return r
+        return None
+
+    @property
+    def final_rank(self) -> int:
+        return self.milestones[-1][1]
+
+
+def two_site_sweep(params: Params, loss_fn, target_rank: int, *,
+                   inner_steps: int = 3, lr: float = 1e-2) -> SweepResult:
+    """Two-site DMRG with *local loss optimization* — the paper's App. C
+    second proposed extension ("use powerful local optimizers to minimize
+    directly the loss function with respect to each merged tensor at each
+    step of the DMRG-inspired sweep").
+
+    At each bond: merge the neighbouring cores, take ``inner_steps`` plain
+    gradient steps on the MERGED tensor against ``loss_fn(params)`` (all
+    other cores frozen — the true DMRG local problem), then tSVD-split back
+    to ``target_rank``. This both adapts ranks AND descends the training
+    loss inside the sweep, instead of only projecting (Algorithm 1).
+
+    loss_fn: params-dict -> scalar. Host-side (shapes change).
+    """
+    import jax
+
+    cores = list(params["cores"])
+    d = len(cores)
+
+    def local_loss(merged, i, rest):
+        a, b, _ = tt.split_merged(merged, rank=merged.shape[0] *
+                                  merged.shape[1])  # exact resplit
+        cs = list(rest)
+        cs[i], cs[i + 1] = a, b
+        return loss_fn({"cores": cs})
+
+    spectra = [None] * (d - 1)
+    for direction in (range(d - 1), range(d - 2, -1, -1)):
+        for i in direction:
+            merged = tt.merge_pair(cores[i], cores[i + 1])
+            g = jax.grad(local_loss)(merged, i, cores)
+            for _ in range(inner_steps):
+                merged = merged - lr * g
+                g = jax.grad(local_loss)(merged, i, cores)
+            left = isinstance(direction, range) and direction.step != -1
+            a, b, s = tt.split_merged(merged, target_rank,
+                                      left_orthogonal=left)
+            cores[i], cores[i + 1] = a, b
+            spectra[i] = s
+    out = dict(params)
+    out["cores"] = cores
+    return SweepResult(params=out, ranks=tt.ranks(cores),
+                       spectra=tuple(spectra))
+
+
+def reconstruction_error(params: Params, swept: Params) -> float:
+    """Relative Frobenius error ||G - G̃|| / ||G|| between two TTs of the
+    same mode sizes, computed fully in TT form (no materialization).
+
+    Host-side float64: the ‖a‖² − 2⟨a,b⟩ + ‖b‖² form cancels catastrophically
+    in fp32 when the TTs are close (which is exactly when we care).
+    """
+    import numpy as np
+
+    a = [np.asarray(c, dtype=np.float64) for c in params["cores"]]
+    b = [np.asarray(c, dtype=np.float64) for c in swept["cores"]]
+
+    def inner(x, y):
+        env = None
+        for cx, cy in zip(x, y):
+            if env is None:
+                env = np.einsum("inr,ins->rs", cx, cy)
+            else:
+                env = np.einsum("ij,inr,jns->rs", env, cx, cy)
+        return env[0, 0]
+
+    aa, ab, bb = inner(a, a), inner(a, b), inner(b, b)
+    num = np.sqrt(max(aa - 2 * ab + bb, 0.0))
+    den = np.sqrt(max(aa, 1e-300))
+    return float(num / den)

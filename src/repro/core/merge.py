@@ -1,0 +1,66 @@
+"""Inference-time core merging (paper §2.4).
+
+"During inference, one can match the speeds of LoRA by adding a single
+pre-computation step where one can merge the middle tensor cores with G1 or
+G4 once the adapters are trained."
+
+``to_lora_form`` folds the middle cores into the *left* boundary, producing a
+per-(layer, matrix[, task]) pair (A, B) with A ∈ R^{L,M,D_in,r}, B ∈ R^{r,D_out}
+— exactly a (shared-B) LoRA adapter, so the serving path runs two GEMMs per
+adapted matrix, identical to LoRA. ``fold_into_dense`` goes one step further
+and adds ΔW into the frozen weights (zero serving overhead), which is what
+the serving example uses by default.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.metatt import MetaTTConfig, Params, step_factors
+
+
+@dataclasses.dataclass
+class LoRAForm:
+    """Merged serving form: y += alpha already folded into A."""
+    a: jnp.ndarray  # (L, [T,] M, d_in_max, r)
+    b: jnp.ndarray  # (r, d_out_max)
+
+    def delta(self, cfg: MetaTTConfig, x, layer: int, m: str,
+              task: int | None = None):
+        mi = cfg.m_index(m)
+        a = (self.a[layer, task, mi] if task is not None
+             else self.a[layer, mi])
+        a = a[: x.shape[-1]]
+        b = self.b[:, : cfg.d_out[mi]]
+        return (x @ a.astype(x.dtype)) @ b.astype(x.dtype)
+
+
+def to_lora_form(params: Params, cfg: MetaTTConfig) -> LoRAForm:
+    f = step_factors(params, cfg)
+    # fold alpha and the middle cores into the left factor:
+    # A[l, m] = alpha * G1 @ C[l, m]   -> (..., d_in, r_last)
+    a = cfg.alpha * jnp.einsum("dr,...rs->...ds", f.g1, f.c)
+    return LoRAForm(a=a, b=f.g4)
+
+
+def fold_into_dense(params: Params, cfg: MetaTTConfig,
+                    weights: dict, *, task: int | None = None) -> dict:
+    """Return a copy of ``weights`` with ΔW added into each adapted matrix.
+
+    ``weights`` maps matrix-type name -> stacked (L, d_in, d_out) array (the
+    scan-stacked layout used by the model zoo). Zero serving overhead after
+    this fold; un-merging is exact (subtract the same delta).
+    """
+    f = step_factors(params, cfg)
+    out = dict(weights)
+    for mi, name in enumerate(cfg.matrix_types):
+        if name not in weights:
+            continue
+        w = weights[name]
+        c = f.c[:, task, mi] if task is not None else f.c[:, mi]
+        delta = cfg.alpha * jnp.einsum(
+            "dr,lrs,se->lde",
+            f.g1[: w.shape[1]], c, f.g4[:, : w.shape[2]])
+        out[name] = (w + delta.astype(w.dtype))
+    return out

@@ -1,0 +1,290 @@
+"""MetaTT adapters (paper §2.2–§2.4).
+
+One *global* tensor train parameterizes the low-rank update of every adapted
+linear map in the network:
+
+  MetaTT-4D    ΔW[D_in, L, M, D_out]              (paper Eq. (2), (5))
+  MetaTT-5D    ΔW[D_in, L, M, H, D_out/H]         (paper Eq. (3))
+  MetaTT-(4+1)D ΔW[D_in, L, T, M, D_out]          (paper Eq. (4)/(6), task axis)
+  MetaTT-(4+E)D ΔW[D_in, L, E, M, D_out]          (expert axis — the paper's
+                "expert partitions" extension, §4; used for MoE archs)
+
+Parameters are stored as the *canonical* TT core list (see core/tt.py), which
+makes the DMRG sweep (core/dmrg.py) operate on MetaTT params directly.
+
+Heterogeneous shapes (GQA kv-dim, GeGLU d_ff, mamba projections) are handled
+by **boundary-core slicing** (DESIGN.md §4): the boundary cores are sized to
+``max`` input/output dims and matrix type ``m`` reads ``G1[:d_in(m)]`` /
+``G4[:, :d_out(m)]``.  When all adapted matrices are d×d this reduces exactly
+to the paper's construction.
+
+The hot-path contraction is factored for TPU (DESIGN.md §3):
+
+  per step :  C[l, m] = G2[l] · G3[m]           (tiny r×r merges, once/step)
+  per layer:  P       = x · G1                  (shared across m with same d_in)
+  per matrix: Δy      = α · (P · C[l, m]) · G4  (one r×r + one r×D matmul)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tt
+
+Params = dict  # {"cores": [c0, c1, ...]} — a pytree of jnp arrays
+
+
+@dataclasses.dataclass(frozen=True)
+class MetaTTConfig:
+    """Static configuration of a MetaTT adapter.
+
+    variant: "4d" | "5d" | "4+1d" | "4+ed"
+    matrix_types: names of adapted matrix types — the M axis (paper default
+        ("q", "v"), App. A.2).
+    d_in / d_out: per-matrix-type input/output dims, parallel to matrix_types.
+    rank: uniform bond rank (paper trains uniform ranks; DMRG may later make
+        them non-uniform — runtime shapes come from the params, not from here).
+    num_heads/head_dim: 5d only — H is the *query* head count; matrix types
+        with fewer kv heads use the leading slices (head-major layout).
+    num_tasks / num_experts: size of the extra axis for 4+1d / 4+ed.
+    """
+    num_layers: int
+    matrix_types: tuple
+    d_in: tuple
+    d_out: tuple
+    rank: int
+    variant: str = "4d"
+    alpha: float = 1.0
+    num_heads: int = 0
+    head_dim: int = 0
+    num_tasks: int = 0
+    num_experts: int = 0
+    init: str = ""          # "" -> default per-variant scheme
+    dtype: Any = jnp.float32
+
+    # ---- derived ------------------------------------------------------
+    @property
+    def num_matrices(self) -> int:
+        return len(self.matrix_types)
+
+    @property
+    def d_in_max(self) -> int:
+        return max(self.d_in)
+
+    @property
+    def d_out_max(self) -> int:
+        if self.variant == "5d":
+            return self.num_heads * self.head_dim
+        return max(self.d_out)
+
+    @property
+    def mode_sizes(self) -> tuple:
+        L, M = self.num_layers, self.num_matrices
+        if self.variant == "4d":
+            return (self.d_in_max, L, M, self.d_out_max)
+        if self.variant == "5d":
+            return (self.d_in_max, L, M, self.num_heads, self.head_dim)
+        if self.variant == "4+1d":
+            return (self.d_in_max, L, self.num_tasks, M, self.d_out_max)
+        if self.variant == "4+ed":
+            return (self.d_in_max, L, self.num_experts, M, self.d_out_max)
+        raise ValueError(f"unknown variant {self.variant}")
+
+    @property
+    def default_init(self) -> str:
+        n = len(self.mode_sizes)
+        return "-".join(["ze"] + ["id"] * (n - 1))
+
+    @property
+    def init_scheme(self) -> str:
+        return self.init or self.default_init
+
+    def m_index(self, name: str) -> int:
+        return self.matrix_types.index(name)
+
+    def num_params(self) -> int:
+        shapes = self.mode_sizes
+        d = len(shapes)
+        bonds = [1] + [self.rank] * (d - 1) + [1]
+        return int(sum(bonds[k] * shapes[k] * bonds[k + 1] for k in range(d)))
+
+
+# --------------------------------------------------------------------------
+# paper's closed-form parameter counts (§2.4) — used by tests to pin our
+# implementation to the paper's Table 1 numbers.
+# --------------------------------------------------------------------------
+
+def paper_count_4d(D: int, L: int, M: int, r: int) -> int:
+    """MetaTT-4D: 2Dr + (L+M)r^2   (paper §2.4)."""
+    return 2 * D * r + (L + M) * r * r
+
+
+def paper_count_5d(D: int, H: int, L: int, M: int, r: int) -> int:
+    """MetaTT-5D: (D + D/H)r + (L+M+H)r^2   (paper §2.4)."""
+    return (D + D // H) * r + (L + M + H) * r * r
+
+
+def paper_count_lora(D: int, L: int, M: int, r: int) -> int:
+    """LoRA: 2LMDr   (paper §2.4)."""
+    return 2 * L * M * D * r
+
+
+# --------------------------------------------------------------------------
+# init (paper App. A.1): scheme string like "ze-id-id-id", one token per core:
+#   ze -> zeros, id -> rectangular identity per slice, no -> Normal(0, 0.2).
+# Any scheme with >=1 "ze" core guarantees ΔW == 0 at init (paper requirement).
+# --------------------------------------------------------------------------
+
+def _init_core(key, tok: str, shape, dtype):
+    r_prev, n, r_next = shape
+    if tok == "ze":
+        return jnp.zeros(shape, dtype)
+    if tok == "id":
+        if r_prev == 1:                      # left boundary: (n, r) rect-eye
+            return jnp.eye(n, r_next, dtype=dtype)[None]
+        if r_next == 1:                      # right boundary: (r, n) rect-eye
+            return jnp.eye(r_prev, n, dtype=dtype)[:, :, None]
+        eye = jnp.eye(r_prev, r_next, dtype=dtype)
+        return jnp.broadcast_to(eye[:, None, :], shape).astype(dtype)
+    if tok == "no":
+        return 0.2 * jax.random.normal(key, shape, dtype)
+    raise ValueError(f"unknown init token {tok!r}")
+
+
+def init_params(cfg: MetaTTConfig, key) -> Params:
+    shapes = cfg.mode_sizes
+    d = len(shapes)
+    toks = cfg.init_scheme.split("-")
+    if len(toks) != d:
+        raise ValueError(
+            f"init scheme {cfg.init_scheme!r} has {len(toks)} tokens for a "
+            f"{d}-core TT")
+    if "ze" not in toks:
+        raise ValueError(
+            "at least one core must be zero-initialized so that ΔW == 0 at "
+            "the start of fine-tuning (paper App. A.1)")
+    bonds = [1] + [cfg.rank] * (d - 1) + [1]
+    keys = jax.random.split(key, d)
+    cores = [
+        _init_core(keys[k], toks[k], (bonds[k], shapes[k], bonds[k + 1]),
+                   cfg.dtype)
+        for k in range(d)
+    ]
+    return {"cores": cores}
+
+
+def num_params(params: Params) -> int:
+    return tt.num_params(params["cores"])
+
+
+# --------------------------------------------------------------------------
+# hot-path contraction
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StepFactors:
+    """Activation-independent merged factors, computed once per step.
+
+    g1:  (d_in_max, r_first)      — left boundary core
+    c:   (L, [T|E,] M, r_first, r_last)  — merged middle cores
+    g4:  (r_last, d_out_max)      — merged right side (5d: head core folded in)
+    """
+    g1: jnp.ndarray
+    c: jnp.ndarray
+    g4: jnp.ndarray
+
+
+def step_factors(params: Params, cfg: MetaTTConfig) -> StepFactors:
+    """Merge the middle cores once per training step (DESIGN.md §3).
+
+    Mathematically identical to the paper's sequential contraction (Eq. (5));
+    it just exploits that G2[l]·G3[m] does not depend on the activations, so
+    merging it once per step removes two rank-r GEMMs per adapted matrix call.
+    """
+    cores = params["cores"]
+    g1 = cores[0][0]                       # (Din, r1)
+    if cfg.variant == "4d":
+        c = jnp.einsum("alb,bmc->lmac", cores[1], cores[2])
+        g4 = cores[3][..., 0]              # (r3, Dout)
+    elif cfg.variant == "5d":
+        c = jnp.einsum("alb,bmc->lmac", cores[1], cores[2])
+        # fold head core into the right boundary: (r3, H, hd) -> (r3, H*hd)
+        bh = jnp.einsum("chr,rd->chd", cores[3], cores[4][..., 0])
+        g4 = bh.reshape(bh.shape[0], -1)
+    elif cfg.variant in ("4+1d", "4+ed"):
+        # order (D, L, T|E, M, D): C[l, t, m] = G2[l] G3[t] G4[m]
+        c = jnp.einsum("alb,btc,cmd->ltmad", cores[1], cores[2], cores[3])
+        g4 = cores[4][..., 0]
+    else:
+        raise ValueError(cfg.variant)
+    return StepFactors(g1=g1, c=c, g4=g4)
+
+
+def project_in(f: StepFactors, cfg: MetaTTConfig, x: jnp.ndarray,
+               m: str) -> jnp.ndarray:
+    """P = x · G1[:d_in(m)] — shared across matrix types with equal d_in."""
+    d_in = cfg.d_in[cfg.m_index(m)]
+    g1 = f.g1 if d_in == f.g1.shape[0] else f.g1[:d_in]
+    return x @ g1.astype(x.dtype)
+
+
+def delta_out(f: StepFactors, cfg: MetaTTConfig, p: jnp.ndarray,
+              c_l: jnp.ndarray, m: str, *,
+              task: jnp.ndarray | int | None = None) -> jnp.ndarray:
+    """α · (P · C[l, m]) · G4[:, :d_out(m)].
+
+    c_l: this layer's slice of ``StepFactors.c`` — shape (M, r, r) for
+    4d/5d, (T|E, M, r, r) for the 5-core variants (supplied by the scan).
+    task: task/expert index (scalar) for 4+1d/4+ed.
+    """
+    mi = cfg.m_index(m)
+    if cfg.variant == "4+1d":
+        if task is None:
+            raise ValueError("variant 4+1d needs a task index")
+        c_lm = c_l[task, mi]
+    elif cfg.variant == "4+ed":
+        # non-expert matrix types read the shared slice 0 of the expert axis;
+        # expert-indexed application happens inside the MoE sorted path
+        # (models/moe.py::_expert_delta).
+        c_lm = c_l[0 if task is None else task, mi]
+    else:
+        c_lm = c_l[mi]
+    d_out = cfg.d_out[mi]
+    g4 = f.g4 if d_out == f.g4.shape[1] else f.g4[:, :d_out]
+    y = (p @ c_lm.astype(p.dtype)) @ g4.astype(p.dtype)
+    return cfg.alpha * y
+
+
+def apply(params: Params, cfg: MetaTTConfig, x: jnp.ndarray, layer: int,
+          m: str, *, task: int | None = None) -> jnp.ndarray:
+    """Reference single-call path: α · x·G1·G2[l](·G3[t])·G3[m]·G4 (Eq. (5)).
+
+    Used by tests and by the non-scan (eager) model path. The scan path uses
+    step_factors + project_in/delta_out with C pre-sliced by the scan.
+    """
+    f = step_factors(params, cfg)
+    p = project_in(f, cfg, x, m)
+    return delta_out(f, cfg, p, f.c[layer], m, task=task)
+
+
+def materialize_delta(params: Params, cfg: MetaTTConfig, layer: int, m: str,
+                      *, task: int | None = None) -> jnp.ndarray:
+    """Dense ΔW_{l,m} (d_in(m), d_out(m)) — tests/small dims only."""
+    mi = cfg.m_index(m)
+    f = step_factors(params, cfg)
+    c_l = f.c[layer]
+    c_lm = c_l[task, mi] if cfg.variant in ("4+1d", "4+ed") else c_l[mi]
+    g1 = f.g1[: cfg.d_in[mi]]
+    g4 = f.g4[:, : cfg.d_out[mi]]
+    return cfg.alpha * (g1 @ c_lm @ g4)
+
+
+def zero_at_init(params: Params, cfg: MetaTTConfig) -> bool:
+    """Check the paper's init invariant: every ΔW slice is exactly zero."""
+    f = step_factors(params, cfg)
+    return bool(jnp.all(f.g1 == 0) or jnp.all(f.g4 == 0)
+                or jnp.all(f.c == 0))

@@ -1,0 +1,191 @@
+"""Tensor-train (TT) algebra used by the MetaTT adapter.
+
+A TT of order ``d`` represents a tensor ``G[i1,...,id]`` as a product of
+per-mode cores ``C_k`` of shape ``(r_{k-1}, n_k, r_k)`` with ``r_0 = r_d = 1``
+(Oseledets 2011; paper Eq. (1)).  This module implements the *generic* TT
+operations — contraction, materialization, neighbour-core merging, truncated
+SVD re-splitting and canonicalization — on a plain list of jnp arrays, so the
+MetaTT variants (core/metatt.py) and the DMRG sweep (core/dmrg.py) share one
+set of well-tested primitives.
+
+All functions are pure and jit-compatible unless they change array *shapes*
+(truncation), which is inherently a host-side / trace-time operation.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+Cores = list  # list[jnp.ndarray], each of shape (r_{k-1}, n_k, r_k)
+
+
+def validate_cores(cores: Sequence[jnp.ndarray]) -> None:
+    """Raise ValueError unless ``cores`` is a well-formed TT."""
+    if not cores:
+        raise ValueError("empty TT")
+    if cores[0].shape[0] != 1 or cores[-1].shape[-1] != 1:
+        raise ValueError(
+            f"boundary ranks must be 1, got {cores[0].shape[0]} and "
+            f"{cores[-1].shape[-1]}")
+    for k in range(len(cores) - 1):
+        if cores[k].ndim != 3 or cores[k + 1].ndim != 3:
+            raise ValueError("TT cores must be rank-3 (r_prev, n, r_next)")
+        if cores[k].shape[-1] != cores[k + 1].shape[0]:
+            raise ValueError(
+                f"bond mismatch between core {k} and {k+1}: "
+                f"{cores[k].shape} vs {cores[k+1].shape}")
+
+
+def ranks(cores: Sequence[jnp.ndarray]) -> tuple:
+    """Internal bond dimensions (r_1, ..., r_{d-1})."""
+    return tuple(int(c.shape[-1]) for c in cores[:-1])
+
+
+def mode_sizes(cores: Sequence[jnp.ndarray]) -> tuple:
+    return tuple(int(c.shape[1]) for c in cores)
+
+
+def num_params(cores: Sequence[jnp.ndarray]) -> int:
+    return int(sum(np.prod(c.shape) for c in cores))
+
+
+def materialize(cores: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """Contract a TT back into the full dense tensor (tests / tiny dims only).
+
+    Returns an array of shape ``(n_1, ..., n_d)``.
+    """
+    validate_cores(cores)
+    out = cores[0]  # (1, n1, r1)
+    for core in cores[1:]:
+        # (..., r) x (r, n, r') -> (..., n, r')
+        out = jnp.tensordot(out, core, axes=[[-1], [0]])
+    # squeeze the two boundary ranks of size 1
+    return out.reshape(out.shape[1:-1])
+
+
+def slice_matrix(cores: Sequence[jnp.ndarray], idx: Sequence[int]) -> jnp.ndarray:
+    """Dense matrix ``G[:, idx..., :]`` for a TT whose first/last modes are the
+    matrix dimensions and whose middle modes are indexed by ``idx``.
+
+    E.g. for MetaTT-4D cores (D_in, L, M, D_out) and idx=(l, m), returns the
+    ``ΔW_{l,m}`` dense matrix of shape (D_in, D_out).
+    """
+    if len(idx) != len(cores) - 2:
+        raise ValueError(f"need {len(cores)-2} middle indices, got {len(idx)}")
+    left = cores[0][0]  # (n1, r1)
+    mid = None
+    for core, i in zip(cores[1:-1], idx):
+        m = core[:, i, :]  # (r_prev, r_next)
+        mid = m if mid is None else mid @ m
+    right = cores[-1][..., 0]  # (r_last, n_d)
+    if mid is None:
+        return left @ right
+    return left @ mid @ right
+
+
+def merge_pair(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """MERGE of Algorithm 1: contract neighbouring cores into one 4-tensor
+    ``(r_prev, n_a, n_b, r_next)``."""
+    return jnp.einsum("iar,rbj->iabj", a, b)
+
+
+def split_merged(merged: jnp.ndarray, rank: int | None = None,
+                 *, left_orthogonal: bool = True,
+                 rtol: float | None = None,
+                 max_rank: int | None = None):
+    """tSVD + re-split of Algorithm 1 (one step of a DMRG sweep).
+
+    merged: (r_prev, n_a, n_b, r_next).
+    rank: hard target bond rank; if None, rank is chosen adaptively from
+        singular values with relative tolerance ``rtol`` (capped by max_rank).
+    left_orthogonal: if True the left factor is the isometry (U) — used in the
+        left-to-right sweep; otherwise the right factor absorbs nothing and
+        the left absorbs S (right-to-left sweep, line 9 of Algorithm 1).
+
+    Returns (core_a, core_b, sigma) with core_a (r_prev, n_a, r),
+    core_b (r, n_b, r_next) and the retained singular values sigma.
+    """
+    r_prev, n_a, n_b, r_next = merged.shape
+    mat = merged.reshape(r_prev * n_a, n_b * r_next)
+    u, s, vt = jnp.linalg.svd(mat, full_matrices=False)
+    if rank is None:
+        if rtol is None:
+            raise ValueError("need rank or rtol")
+        keep = int(np.asarray(jnp.sum(s > rtol * s[0])))
+        keep = max(keep, 1)
+        if max_rank is not None:
+            keep = min(keep, max_rank)
+    else:
+        keep = min(rank, s.shape[0])
+    u, s, vt = u[:, :keep], s[:keep], vt[:keep, :]
+    if left_orthogonal:
+        a = u
+        b = (s[:, None] * vt)
+    else:
+        a = u * s[None, :]
+        b = vt
+    return (a.reshape(r_prev, n_a, keep),
+            b.reshape(keep, n_b, r_next),
+            s)
+
+
+def truncation_error(merged: jnp.ndarray, rank: int) -> jnp.ndarray:
+    """Frobenius-norm error of the rank-``rank`` tSVD of a merged pair.
+
+    By Eckart–Young this equals sqrt(sum of squared dropped singular values);
+    used by property tests.
+    """
+    r_prev, n_a, n_b, r_next = merged.shape
+    s = jnp.linalg.svd(merged.reshape(r_prev * n_a, n_b * r_next),
+                       compute_uv=False)
+    return jnp.sqrt(jnp.sum(s[rank:] ** 2))
+
+
+def left_canonicalize(cores: Cores) -> Cores:
+    """QR-sweep left→right so every core but the last is a left isometry.
+
+    Keeps ranks; puts the TT in the canonical form DMRG expects before a
+    right-to-left truncation sweep (numerically optimal local truncations).
+    """
+    out = [c for c in cores]
+    for k in range(len(out) - 1):
+        r_prev, n, r_next = out[k].shape
+        q, r = jnp.linalg.qr(out[k].reshape(r_prev * n, r_next))
+        keep = q.shape[1]
+        out[k] = q.reshape(r_prev, n, keep)
+        out[k + 1] = jnp.tensordot(r, out[k + 1], axes=[[1], [0]])
+    return out
+
+
+def tt_norm(cores: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """Frobenius norm of the full tensor, computed in TT form (no materialize)."""
+    # transfer-matrix contraction: E = sum_n core[:,n,:]^T ⊗ core[:,n,:]
+    env = None
+    for c in cores:
+        if env is None:
+            env = jnp.einsum("inr,ins->rs", c, c)
+        else:
+            env = jnp.einsum("ij,inr,jns->rs", env, c, c)
+    return jnp.sqrt(jnp.abs(env[0, 0]))
+
+
+def random_tt(key, shape: Sequence[int], rank: int | Sequence[int],
+              scale: float = 0.2) -> Cores:
+    """Random-normal TT with given mode sizes and (uniform or per-bond) ranks."""
+    import jax
+
+    d = len(shape)
+    if isinstance(rank, int):
+        bonds = [1] + [rank] * (d - 1) + [1]
+    else:
+        bonds = [1] + list(rank) + [1]
+        if len(bonds) != d + 1:
+            raise ValueError("rank list must have d-1 entries")
+    keys = jax.random.split(key, d)
+    cores = []
+    for k in range(d):
+        cores.append(scale * jax.random.normal(
+            keys[k], (bonds[k], shape[k], bonds[k + 1]), dtype=jnp.float32))
+    return cores

@@ -1,0 +1,1 @@
+from repro.data.synthetic import ClassificationTasks, LMStream  # noqa: F401

@@ -1,0 +1,12 @@
+from repro.distributed.compression import (  # noqa: F401
+    GradCompressor,
+    compressed_psum,
+    int8_decode,
+    int8_encode,
+)
+from repro.distributed.fault_tolerance import (  # noqa: F401
+    FailureInjector,
+    SimulatedFailure,
+    Watchdog,
+    remesh,
+)

@@ -1,0 +1,81 @@
+"""Fault tolerance & elasticity.
+
+At 1000+ nodes the failure model is: a chip/host dies mid-run, or a host
+straggles persistently. The recovery ladder implemented here:
+
+ 1. **Checkpoint/restart** — CheckpointManager snapshots (adapter, optimizer,
+    data-iterator state) atomically; `Trainer` auto-resumes from the latest
+    snapshot. Because the base model is frozen, snapshots are tiny and can be
+    taken every few steps (checkpoint/ckpt.py).
+ 2. **Elastic remesh** — `remesh` re-device_puts a params pytree onto a new
+    mesh (e.g. 2 pods -> 1 pod after a pod loss, or a shrunk data axis).
+    Adapter state is replicated (trivially elastic); base params re-shard by
+    the same named rules, so any mesh whose axes divide the dims works.
+ 3. **Straggler watchdog** — per-step wall-clock EWMA; when a step exceeds
+    ``threshold``× the EWMA, the trainer checkpoints and (in a real
+    deployment) triggers the resize; here the hook is a callback that tests
+    can observe.
+
+All of this is exercised by tests/test_fault_tolerance.py with simulated
+failures (process-local, as the assignment's CPU container dictates).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+from jax.sharding import Mesh
+
+from repro.sharding import params_sharding
+
+
+def remesh(params: Any, new_mesh: Mesh) -> Any:
+    """Reshard a params pytree onto a new mesh using the named rules.
+
+    Works across mesh *shape* changes (16x16 -> 8x16, 2x16x16 -> 16x16 …):
+    sharding specs are derived from parameter names, not from the old mesh.
+    """
+    shardings = params_sharding(params, new_mesh)
+    return jax.device_put(params, shardings)
+
+
+@dataclasses.dataclass
+class Watchdog:
+    """Wall-clock straggler detector with EWMA baseline."""
+    threshold: float = 3.0
+    decay: float = 0.9
+    min_steps: int = 5
+    on_straggler: Optional[Callable[[int, float, float], None]] = None
+    _ewma: float = 0.0
+    _steps: int = 0
+
+    def step(self, step_idx: int, dt: float) -> bool:
+        """Record one step duration; returns True if flagged as straggler."""
+        flagged = False
+        if self._steps >= self.min_steps and dt > self.threshold * self._ewma:
+            flagged = True
+            if self.on_straggler is not None:
+                self.on_straggler(step_idx, dt, self._ewma)
+        if self._ewma == 0.0:
+            self._ewma = dt
+        else:
+            self._ewma = self.decay * self._ewma + (1 - self.decay) * dt
+        self._steps += 1
+        return flagged
+
+
+class SimulatedFailure(RuntimeError):
+    """Raised by tests to model a node loss mid-training."""
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Deterministically fail at a given step — used by integration tests to
+    prove restart-resume equivalence."""
+    fail_at_step: int = -1
+
+    def check(self, step: int) -> None:
+        if step == self.fail_at_step:
+            raise SimulatedFailure(f"simulated node failure at step {step}")

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the perf-critical compute paths.
+
+tt_linear        — fused base-matmul + rank-r TT epilogue (paper Eq. (5))
+flash_attention  — blockwise online-softmax attention (train/prefill path)
+
+Each has a pure-jnp oracle in ref.py and a shape/dtype-sweeping allclose
+test in tests/test_kernels.py (interpret=True on CPU; TPU is the target).
+"""
+from repro.kernels.ops import flash_attention, tt_linear  # noqa: F401

@@ -1,0 +1,102 @@
+"""Flash attention (forward) as a Pallas TPU kernel.
+
+Blockwise online-softmax attention: the (T, S) score matrix never
+materializes in HBM — each (bq, bkv) tile lives in VMEM with running
+(row-max m, row-sum l, output acc) scratch carried across the innermost
+(sequential) KV grid dimension. This is the TPU-native replacement for the
+pure-XLA chunked path in models/attention.py (same math; the XLA path is
+what the CPU dry-run lowers, this kernel is the TPU fast path).
+
+Strictly-above-diagonal tiles are skipped under causal masking (the
+``pl.when`` guard), halving work for training/prefill.
+
+Layout: (B·H, T, d) per head — GQA callers broadcast kv heads before the
+call (ops.py). d is kept whole per tile (d ≤ 256 across the zoo).
+Validated in interpret mode against kernels/ref.py::flash_attention_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, bq: int, bkv: int, kv_steps: int):
+    i, j = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = (j * bkv <= i * bq + bq - 1) if causal else True
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0]                                   # (bq, d)
+        k = k_ref[0]                                   # (bkv, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bkv)
+        if causal:
+            qi = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+            ki = j * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+            valid = qi >= ki
+            s = jnp.where(valid, s, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        if causal:
+            p = jnp.where(valid, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+            p.astype(v_ref.dtype), v_ref[0],
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == kv_steps - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bkv",
+                                             "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, bq: int = 256, bkv: int = 256,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q: (BH, T, d); k, v: (BH, S, d) -> (BH, T, d)."""
+    bh, t, d = q.shape
+    s_len = k.shape[1]
+    assert t % bq == 0 and s_len % bkv == 0, (t, s_len, bq, bkv)
+    grid = (bh, t // bq, s_len // bkv)
+    kernel = functools.partial(
+        _kernel, scale=d ** -0.5, causal=causal, bq=bq, bkv=bkv,
+        kv_steps=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

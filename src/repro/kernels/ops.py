@@ -1,0 +1,85 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+These handle the gap between model-land and kernel-land: leading batch dims,
+tile padding, GQA head broadcast, dtype policy, and backend dispatch —
+``backend="auto"`` uses the Pallas kernel on TPU and the pure-jnp oracle
+elsewhere (the CPU container runs kernels only under interpret=True, which
+is for correctness tests, not speed).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.tt_linear import tt_linear as _tt_linear
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, axis: int, mult: int):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+def tt_linear(x, w, a, b, *, alpha: float = 1.0, backend: str = "auto",
+              interpret: bool | None = None):
+    """Adapted linear layer y = x·W + α·(x·A)·B with arbitrary leading dims.
+
+    x: (..., K); w: (K, N); a: (K, r); b: (r, N).
+    """
+    if backend == "ref" or (backend == "auto" and not _on_tpu()):
+        return _ref.tt_linear_ref(x, w, a, b, alpha)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    lead = x.shape[:-1]
+    k_dim = x.shape[-1]
+    xf = x.reshape(-1, k_dim)
+    bm = 256 if xf.shape[0] % 256 == 0 else 128
+    xf, m0 = _pad_to(xf, 0, bm)
+    rpad = (-a.shape[1]) % 128
+    if rpad:
+        a = jnp.pad(a, ((0, 0), (0, rpad)))
+        b = jnp.pad(b, ((0, rpad), (0, 0)))
+    y = _tt_linear(xf, w, a, b, alpha=alpha, bm=bm,
+                   bn=min(256, w.shape[1]), bk=min(512, k_dim),
+                   interpret=interp)
+    return y[:m0].reshape(*lead, w.shape[1])
+
+
+def flash_attention(q, k, v, *, causal: bool = True, backend: str = "auto",
+                    interpret: bool | None = None):
+    """GQA flash attention. q: (B, T, H, d); k, v: (B, S, KV, d).
+
+    KV heads are broadcast to the query-head count before the per-head
+    kernel call (zero-copy under XLA when G == 1).
+    """
+    if backend == "ref" or (backend == "auto" and not _on_tpu()):
+        g = q.shape[2] // k.shape[2]
+        kk = jnp.repeat(k, g, axis=2) if g > 1 else k
+        vv = jnp.repeat(v, g, axis=2) if g > 1 else v
+        out = _ref.flash_attention_ref(
+            q.transpose(0, 2, 1, 3), kk.transpose(0, 2, 1, 3),
+            vv.transpose(0, 2, 1, 3), causal=causal)
+        return out.transpose(0, 2, 1, 3)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    b, t, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qh = q.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    kh = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, s, d)
+    vh = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, s, d)
+    bq = 256 if t % 256 == 0 else 128
+    bkv = 256 if s % 256 == 0 else 128
+    out = _flash(qh, kh, vh, causal=causal, bq=bq, bkv=bkv,
+                 interpret=interp)
+    return out.reshape(b, h, t, d).transpose(0, 2, 1, 3)

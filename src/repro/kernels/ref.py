@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tt_linear_ref(x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray,
+                  b: jnp.ndarray, alpha: float = 1.0) -> jnp.ndarray:
+    """y = x·W + α·(x·A)·B  — the adapted linear layer (paper Eq. (5) with
+    the middle cores pre-merged into A = G1·G2[l]·G3[m], B = G4)."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    p = jnp.dot(x, a, preferred_element_type=jnp.float32)
+    y = y + alpha * jnp.dot(p, b.astype(p.dtype),
+                            preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True) -> jnp.ndarray:
+    """q,k,v: (B, H, T, d) -> (B, H, T, d), softmax in f32."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if causal:
+        t, s_len = q.shape[2], k.shape[2]
+        mask = jnp.arange(t)[:, None] >= jnp.arange(s_len)[None, :]
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)

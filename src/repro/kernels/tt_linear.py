@@ -1,0 +1,92 @@
+"""Fused TT-adapted linear layer: Y = X·W + α·(X·A)·B  (one Pallas kernel).
+
+This is the paper's serving/training hot spot (Eq. (5)) with the middle TT
+cores pre-merged (A = G1·G2[l]·G3[m] ∈ R^{K×r}, B = G4 ∈ R^{r×N},
+DESIGN.md §3). The unfused XLA path writes Y_base to HBM, reads it back,
+adds the rank-r delta — 3 extra HBM round-trips of the (M, N) output.
+Here the rank-r epilogue is applied while the output tile is still in VMEM:
+
+  grid (M/bm, N/bn, K/bk), K innermost ("arbitrary" = sequential):
+    acc   (bm, bn) f32 VMEM scratch — base matmul accumulator
+    acc_p (bm, r)  f32 VMEM scratch — P = X·A accumulator (r ≤ 256)
+    k-step:  acc += X_tile @ W_tile ;  acc_p += X_tile @ A_tile
+    last k:  OUT = acc + α · acc_p @ B_tile     (epilogue, in VMEM)
+
+Tile choices: bm/bn/bk multiples of the MXU native (128×128; 8-sublane f32
+scratch). VMEM footprint = bm·bk + bk·bn + bm·bn·4 + (bm+bn)·r·4 + bk·r
+≈ 1.3 MB at (256, 256, 512, r=64) — comfortably inside the ~16 MB/core VMEM
+budget, leaving room for double buffering.
+
+Validated in interpret mode on CPU against kernels/ref.py::tt_linear_ref
+(tests/test_kernels.py sweeps shapes/dtypes/ranks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, a_ref, b_ref, out_ref, acc_ref, accp_ref, *,
+            alpha: float, k_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        accp_ref[...] = jnp.zeros_like(accp_ref)
+
+    x = x_ref[...]
+    acc_ref[...] += jax.lax.dot(
+        x, w_ref[...], preferred_element_type=jnp.float32)
+    accp_ref[...] += jax.lax.dot(
+        x, a_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        delta = jax.lax.dot(accp_ref[...].astype(b_ref.dtype), b_ref[...],
+                            preferred_element_type=jnp.float32)
+        out_ref[...] = (acc_ref[...] + alpha * delta).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "bm", "bn", "bk",
+                                             "interpret"))
+def tt_linear(x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray,
+              b: jnp.ndarray, *, alpha: float = 1.0, bm: int = 256,
+              bn: int = 256, bk: int = 512,
+              interpret: bool = True) -> jnp.ndarray:
+    """x: (M, K); w: (K, N); a: (K, r); b: (r, N) -> (M, N).
+
+    Dims must be multiples of the tile sizes (ops.py pads otherwise); r is
+    kept whole per tile (r ≤ 256 in every paper configuration).
+    """
+    m, k_dim = x.shape
+    _, n = w.shape
+    r = a.shape[1]
+    assert m % bm == 0 and n % bn == 0 and k_dim % bk == 0, \
+        (m, n, k_dim, bm, bn, bk)
+    grid = (m // bm, n // bn, k_dim // bk)
+
+    kernel = functools.partial(_kernel, alpha=alpha, k_steps=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk, r), lambda i, j, k: (k, 0)),
+            pl.BlockSpec((r, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, r), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w, a, b)

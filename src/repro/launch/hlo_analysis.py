@@ -1,0 +1,299 @@
+"""Trip-count-aware analysis of compiled (post-SPMD) HLO.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop body ONCE, which
+under-counts everything this framework puts inside ``lax.scan`` (layers,
+microbatches, attention chunks) by the trip count. This module re-derives
+the roofline inputs by walking the HLO text with loop multipliers:
+
+  * flops — 2·(output elems)·K per ``dot`` (batch dims included via the
+    output), scaled by the product of enclosing known_trip_counts.
+    Elementwise flops are excluded: on the MXU roofline only contraction
+    flops count, and elementwise work is bandwidth-bound (captured in
+    ``bytes``).
+  * bytes — HBM-traffic proxy: for every *top-level* instruction (fusion
+    internals excluded — fused values never hit HBM), result bytes (one
+    write) + operand bytes (one read per use), with loop multipliers.
+  * collectives — per kind: count, payload bytes and a ring-model wire-byte
+    estimate per chip (``_wire``), with loop multipliers.
+
+Shapes in post-SPMD HLO are per-chip, so all outputs are per-chip
+quantities; the roofline terms divide by per-chip peak rates directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+    "u4": 1, "s4": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z]\w*)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUP_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUP_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+# call-site attrs that enter *control-flow* computations (bytes DO recurse)
+_FLOW_CALLS = re.compile(r"(?:body|condition|to_apply"
+                         r"|true_computation|false_computation"
+                         r"|branch_computations=\{)[=]?(%[\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+# attrs that enter *fusion* computations (flops/collectives recurse; bytes
+# do not — fused intermediates never materialize in HBM)
+_FUSION_CALLS = re.compile(r"calls=(%[\w.\-]+)")
+
+
+def _dims(s: str) -> List[int]:
+    return [int(d) for d in s.split(",") if d]
+
+
+def _shape_info(type_str: str):
+    return [(_DTYPE_BYTES.get(dt, 0), _dims(ds))
+            for dt, ds in _SHAPE_RE.findall(type_str)]
+
+
+def _nbytes(type_str: str) -> int:
+    total = 0
+    for bpe, dims in _shape_info(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * bpe
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    attrs: str
+    operands: List[str]
+
+
+def _parse_instr(line: str) -> Optional[Instr]:
+    m = _INSTR_RE.match(line)
+    if m is None:
+        return None
+    name, rhs = m.groups()
+    # tuple result types may contain /*index=N*/ comments but never nested
+    # parens, so [^()]* is safe
+    om = re.match(
+        r"^((?:\([^()]*\)|[a-z]\w*\[[\d,]*\]\S*)?)\s*([a-z][\w\-]*)\(", rhs)
+    if om is None:
+        return None
+    type_str, op = om.groups()
+    rest = rhs[om.end():]
+    depth, i = 1, 0
+    while i < len(rest) and depth:
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+        i += 1
+    args, attrs = rest[:i - 1], rest[i:]
+    return Instr(name=name, type_str=type_str, op=op, attrs=attrs,
+                 operands=re.findall(r"%[\w.\-]+", args))
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+
+
+def parse_module(text: str):
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_RE.match(line.strip())
+            if m:
+                cur = Computation(name=m.group(1), instrs=[])
+                if line.strip().startswith("ENTRY"):
+                    entry = m.group(1)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        ins = _parse_instr(line)
+        if ins is not None:
+            cur.instrs.append(ins)
+    return comps, entry
+
+
+def _dot_flops(ins: Instr, shape_of) -> float:
+    out_elems = 1
+    for _, dims in _shape_info(ins.type_str):
+        for d in dims:
+            out_elems *= d
+    lhs = shape_of.get(ins.operands[0]) if ins.operands else None
+    cm = _CDIMS_RE.search(ins.attrs)
+    if lhs is None or cm is None:
+        return 2.0 * out_elems
+    k = 1
+    for ci in _dims(cm.group(1)):
+        if ci < len(lhs):
+            k *= lhs[ci]
+    return 2.0 * out_elems * k
+
+
+def _group_size(attrs: str, default: int = 2) -> int:
+    m = _GROUP_IOTA_RE.search(attrs)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUP_LIST_RE.search(attrs)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return default
+
+
+def _wire(kind: str, nbytes: float, g: int) -> float:
+    g = max(g, 2)
+    frac = (g - 1) / g
+    if kind == "all-gather":
+        return nbytes * frac
+    if kind == "all-reduce":
+        return 2 * nbytes * frac
+    if kind == "reduce-scatter":
+        return nbytes * (g - 1)
+    if kind == "all-to-all":
+        return nbytes * frac
+    return float(nbytes)      # collective-permute
+
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "call", "conditional", "after-all",
+               "partition-id", "iota", "replica-id"}
+
+
+def _zero_coll():
+    return {k: {"count": 0.0, "payload_bytes": 0.0, "wire_bytes": 0.0,
+                "wire_bytes_f32": 0.0}
+            for k in COLLECTIVES}
+
+
+def analyze(text: str) -> dict:
+    """Returns per-chip {"flops", "bytes", "coll", "collective_wire_bytes",
+    "collective_payload_bytes"} with loop multipliers applied."""
+    comps, entry = parse_module(text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    memo: Dict[str, dict] = {}
+
+    def cost(name: str) -> dict:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        out = {"flops": 0.0, "bytes": 0.0, "coll": _zero_coll()}
+        memo[name] = out
+        if comp is None:
+            return out
+        shape_of = {}
+        bytes_of = {}
+        for i in comp.instrs:
+            si = _shape_info(i.type_str)
+            shape_of[i.name] = si[0][1] if si else []
+            bytes_of[i.name] = _nbytes(i.type_str)
+        for ins in comp.instrs:
+            base = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+            if ins.op in ("dot", "convolution"):
+                out["flops"] += _dot_flops(ins, shape_of)
+            if base in COLLECTIVES and not ins.op.endswith("-done"):
+                nb = float(_nbytes(ins.type_str))
+                if ins.op.endswith("-start"):
+                    nb /= 2          # (in, out) tuple result type
+                g = _group_size(ins.attrs)
+                c = out["coll"][base]
+                c["count"] += 1
+                c["payload_bytes"] += nb
+                c["wire_bytes"] += _wire(base, nb, g)
+                # f32-payload share: XLA:CPU legalizes bf16 GEMMs via f32
+                # upcasts that get hoisted ABOVE collectives, so bf16 models
+                # see 2x-inflated wire bytes vs native-bf16 TPU. dryrun.py
+                # reports a TPU estimate halving this share for bf16 models.
+                if ins.type_str.lstrip("(").startswith("f32"):
+                        c["wire_bytes_f32"] += _wire(base, nb, g)
+            if ins.op not in _SKIP_BYTES and not ins.op.endswith("-done"):
+                out["bytes"] += bytes_of[ins.name]
+                res_b = bytes_of[ins.name]
+                for opnd in ins.operands:
+                    ob = bytes_of.get(opnd, 0)
+                    # operand-utilization model (§Perf iteration X2):
+                    #  * dot/conv stream their operands in full;
+                    #  * slice-like ops touch ~result bytes of the operand;
+                    #  * fusions with tiny results reading huge closed-over
+                    #    arrays (per-step slices of scan stacks) are capped —
+                    #    charging the full array per loop iteration
+                    #    overcounted xlstm's recurrent scan ~40x.
+                    if ins.op in ("dot", "convolution"):
+                        out["bytes"] += ob
+                    elif ins.op in ("dynamic-slice", "gather", "slice"):
+                        out["bytes"] += min(ob, res_b)
+                    else:
+                        out["bytes"] += min(ob, 8 * res_b)
+            # ---- recurse -------------------------------------------------
+            mult = 1.0
+            if ins.op == "while":
+                tm = _TRIP_RE.search(ins.attrs)
+                mult = float(tm.group(1)) if tm else 1.0
+            flow = _FLOW_CALLS.findall(ins.attrs)
+            bm = _BRANCHES.search(ins.attrs)
+            if bm:
+                flow += re.findall(r"%[\w.\-]+", bm.group(1))
+            for callee in flow:
+                sub = cost(callee)
+                out["flops"] += mult * sub["flops"]
+                out["bytes"] += mult * sub["bytes"]
+                for k, v in sub["coll"].items():
+                    for f in v:
+                        out["coll"][k][f] += mult * v[f]
+            for callee in _FUSION_CALLS.findall(ins.attrs):
+                sub = cost(callee)
+                out["flops"] += sub["flops"]
+                for k, v in sub["coll"].items():
+                    for f in v:
+                        out["coll"][k][f] += v[f]
+        return out
+
+    total = cost(entry)
+    total["collective_wire_bytes"] = sum(
+        v["wire_bytes"] for v in total["coll"].values())
+    total["collective_payload_bytes"] = sum(
+        v["payload_bytes"] for v in total["coll"].values())
+    total["collective_wire_bytes_f32"] = sum(
+        v["wire_bytes_f32"] for v in total["coll"].values())
+    total["cpu_f32_upcast_bytes"] = entry_f32_upcast_bytes(comps, entry)
+    return total
+
+
+def entry_f32_upcast_bytes(comps, entry: str, min_bytes: int = 1 << 26) -> float:
+    """CPU-backend artifact accounting: XLA:CPU legalizes bf16 GEMMs by
+    upcasting operands to f32 and hoists loop-invariant weight upcasts into
+    persistent entry-level buffers. These do not exist on TPU (native bf16
+    MXU) — the dry-run reports temp minus this as the TPU estimate."""
+    comp = comps.get(entry)
+    if comp is None:
+        return 0.0
+    total = 0.0
+    for ins in comp.instrs:
+        if ins.op == "convert" or (ins.op == "fusion"
+                                   and "wrapped_convert" in ins.attrs):
+            if ins.type_str.startswith("f32"):
+                nb = _nbytes(ins.type_str)
+                if nb >= min_bytes:
+                    total += nb
+    return total

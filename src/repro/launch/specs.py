@@ -1,0 +1,149 @@
+"""input_specs + lowerable step builders for the multi-pod dry-run.
+
+Everything here is ShapeDtypeStruct-based (``jax.eval_shape``): no array is
+ever allocated — a 1T-parameter base model "exists" only as shapes with
+NamedShardings attached, and ``jit(fn).lower(*specs).compile()`` proves the
+distributed program is coherent.
+
+One builder per shape kind:
+  train_*    -> the full PEFT train step (fwd + bwd + AdamW on the adapter)
+  prefill_*  -> batched forward returning logits
+  decode_* / long_* -> single-token serve_step against full-length caches
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs as config_registry
+from repro.config.base import RunConfig, SHAPES, TrainConfig
+from repro.distributed import GradCompressor
+from repro.models import model as model_lib
+from repro.models import transformer
+from repro.peft import api as peft_api
+from repro.sharding import rules
+from repro.train import train_step as ts
+
+
+def make_run_config(arch: str, shape_name: str, *, adapter_kind="metatt",
+                    adapter_variant="4d", adapter_rank=16,
+                    microbatch: Optional[int] = None) -> RunConfig:
+    cfg = config_registry.get_config(arch)
+    shape = SHAPES[shape_name]
+    if microbatch is None:
+        # big archs: keep per-chip live activations modest under the scan
+        microbatch = 8 if (shape.is_train and cfg.d_model >= 1024) else 0
+    variant = adapter_variant
+    if variant == "4+ed" and not cfg.num_experts:
+        variant = "4d"
+    return RunConfig(
+        model=cfg, shape=shape, adapter_kind=adapter_kind,
+        adapter_variant=variant, adapter_rank=adapter_rank,
+        train=TrainConfig(microbatch=microbatch, remat="block"),
+    )
+
+
+def _attach(sds_tree, mesh: Mesh, spec_fn) -> object:
+    """Attach NamedShardings (filtered by divisibility) to an SDS pytree."""
+    flat = rules._paths(sds_tree)
+    leaves = [
+        jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype,
+            sharding=NamedSharding(
+                mesh, rules._filter_spec(mesh, spec_fn(p, leaf.shape),
+                                         leaf.shape)))
+        for p, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(sds_tree), leaves)
+
+
+def _repl_spec(path, shape) -> P:
+    return P()
+
+
+def _batch_first(path, shape) -> P:
+    return P(rules.BATCH)
+
+
+def input_specs(run: RunConfig, mesh: Mesh) -> dict:
+    """ShapeDtypeStruct stand-ins (with shardings) for every input of this
+    (arch x shape) cell, plus the jitted fn to lower.
+
+    Returns {"fn": callable, "args": tuple, "kind": str, "spec": AdapterSpec}.
+    """
+    cfg, shape = run.model, run.shape
+    spec = model_lib.build_adapter_spec(run)
+    b, t = shape.global_batch, shape.seq_len
+    key = jax.random.PRNGKey(0)
+
+    base = _attach(
+        jax.eval_shape(lambda: transformer.init_base_params(cfg, key)),
+        mesh, rules.spec_for_param)
+    adapter_raw, frozen_raw = jax.eval_shape(
+        lambda: peft_api.init_adapter(spec, key))
+    adapter = _attach(adapter_raw, mesh, _repl_spec)
+    frozen = _attach(frozen_raw, mesh, _repl_spec)
+
+    def batch_inputs(tokens_len: int) -> dict:
+        raw = {"tokens": jax.ShapeDtypeStruct((b, tokens_len), jnp.int32)}
+        if cfg.frontend == "patch_stub":
+            raw["embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_seq, cfg.d_model), cfg.compute_dtype)
+        if cfg.is_encdec:
+            raw["enc_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), cfg.compute_dtype)
+        return _attach(raw, mesh, _batch_first)
+
+    if shape.kind == "train":
+        text_len = t - (cfg.frontend_seq if cfg.frontend == "patch_stub"
+                        else 0)
+        batch = batch_inputs(text_len)
+        state = _attach(
+            jax.eval_shape(
+                lambda a: ts.init_train_state(
+                    a, GradCompressor(run.train.grad_compression)),
+                adapter_raw),
+            mesh, _repl_spec)
+        step = ts.make_train_step(cfg, spec, run.optimizer, run.train,
+                                  total_steps=1000, chunk=512, donate=False)
+        return {"fn": step, "args": (state, base, frozen, batch),
+                "kind": "train", "spec": spec}
+
+    if shape.kind == "prefill":
+        text_len = t - (cfg.frontend_seq if cfg.frontend == "patch_stub"
+                        else 0)
+        batch = batch_inputs(text_len)
+
+        def prefill_fn(base, adapter, frozen, batch):
+            bc, pl = peft_api.adapter_factors(spec, adapter, frozen)
+            out = transformer.forward(
+                base, cfg, spec, bc, pl, batch.get("tokens"),
+                embeds=batch.get("embeds"),
+                enc_embeds=batch.get("enc_embeds"), chunk=512)
+            return out.logits
+
+        return {"fn": jax.jit(prefill_fn),
+                "args": (base, adapter, frozen, batch),
+                "kind": "prefill", "spec": spec}
+
+    # ---- decode: one token against a full-length cache -------------------
+    caches = _attach(
+        jax.eval_shape(
+            lambda: transformer.init_caches(cfg, b, t, cfg.compute_dtype)),
+        mesh, rules.cache_spec_for)
+    token = _attach({"t": jax.ShapeDtypeStruct((b, 1), jnp.int32)},
+                    mesh, _batch_first)["t"]
+    pos = _attach({"p": jax.ShapeDtypeStruct((), jnp.int32)},
+                  mesh, _repl_spec)["p"]
+    serve = ts.make_serve_step(cfg, spec)
+    args = [base, adapter, frozen, token, caches, pos]
+    if cfg.is_encdec:
+        enc = _attach({"e": jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), cfg.compute_dtype)},
+            mesh, _batch_first)["e"]
+        args.append(enc)
+    return {"fn": serve, "args": tuple(args), "kind": "decode", "spec": spec}

@@ -1,0 +1,16 @@
+"""Model zoo for the 10 assigned architectures."""
+from repro.models.model import (  # noqa: F401
+    build_adapter_spec,
+    count_params,
+    default_matrices,
+    init_params,
+    loss_fn,
+    matrix_dims,
+    next_token_loss,
+)
+from repro.models.transformer import (  # noqa: F401
+    decode_step,
+    forward,
+    init_base_params,
+    init_caches,
+)

@@ -1,0 +1,188 @@
+"""GQA/MQA attention with RoPE, KV cache, cross-attention and a
+flash-style chunked path for long sequences.
+
+Three execution paths:
+  * naive      — full score matrix; smoke tests / short sequences.
+  * chunked    — queries processed in chunks under ``lax.map`` with
+                 ``jax.checkpoint`` on the chunk body, so backward recomputes
+                 scores per chunk: O(chunk × S) live memory (flash-attention
+                 memory behaviour expressed in pure XLA; the Pallas kernel in
+                 kernels/flash_attention.py is the TPU-native variant).
+  * decode     — one query token against a sequence-sharded KV cache
+                 (S over "model": GQA kv-heads are often < |model|, see
+                 sharding/rules.py).
+
+Adapter hook: q/k/v/o projections go through ``adapted_linear`` with matrix
+types "<prefix>_q" etc., so MetaTT's M axis addresses them (paper §2.2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models.layers import AdapterCtx, adapted_linear, apply_rope
+from repro.sharding import BATCH, SEQ, maybe_shard
+
+NEG_INF = -1e30
+
+
+def _split_heads(x, n_heads, head_dim):
+    b, t, _ = x.shape
+    return x.reshape(b, t, n_heads, head_dim)
+
+
+def _gqa_scores(q, k, scale):
+    """q: (B,T,KV,G,hd)  k: (B,S,KV,hd) -> (B,KV,G,T,S) in f32."""
+    return jnp.einsum("btkgh,bskh->bkgts", q, k,
+                      preferred_element_type=jnp.float32) * scale
+
+
+def _gqa_out(probs, v):
+    """probs: (B,KV,G,T,S)  v: (B,S,KV,hd) -> (B,T,KV,G,hd)."""
+    return jnp.einsum("bkgts,bskh->btkgh", probs.astype(v.dtype), v)
+
+
+def _softmax_attend(q, k, v, mask, scale):
+    s = _gqa_scores(q, k, scale)
+    if mask is not None:
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(p, v)
+
+
+def _causal_mask(t, s, q_offset=0):
+    qi = jnp.arange(t)[:, None] + q_offset
+    ki = jnp.arange(s)[None, :]
+    return (qi >= ki)[None, None, None]         # (1,1,1,T,S)
+
+
+def _chunked_attend(q, k, v, scale, causal, chunk):
+    """Query-chunked attention: lax.map over q chunks, checkpointed chunk
+    body -> flash-like live memory, recompute in backward."""
+    b, t, kv, g, hd = q.shape
+    s = k.shape[1]
+    n = t // chunk
+
+    @jax.checkpoint
+    def one(args):
+        qc, off = args                           # (B, chunk, KV, G, hd)
+        mask = _causal_mask(chunk, s, off) if causal else None
+        return _softmax_attend(qc, k, v, mask, scale)
+
+    qs = q.reshape(b, n, chunk, kv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    offs = jnp.arange(n) * chunk
+    out = jax.lax.map(one, (qs, offs))           # (n, B, chunk, KV, G, hd)
+    return out.transpose(1, 0, 2, 3, 4, 5).reshape(b, t, kv, g, hd)
+
+
+def attention(x: jnp.ndarray, w: dict, ctx: AdapterCtx, cfg: ModelConfig, *,
+              causal: bool = True,
+              positions: Optional[jnp.ndarray] = None,
+              prefix: str = "attn",
+              use_rope: bool = True,
+              chunk: int = 0,
+              kv_x: Optional[jnp.ndarray] = None,
+              cache: Optional[dict] = None,
+              cache_pos: Optional[jnp.ndarray] = None):
+    """Returns (y, new_cache).
+
+    Self-attention when kv_x is None; cross-attention otherwise (kv_x is the
+    encoder output; cache then holds precomputed k/v and is not updated).
+    Decode mode when ``cache is not None and x.shape[1] == 1`` for self-attn.
+    """
+    hd = cfg.resolved_head_dim
+    n_h, n_kv = cfg.num_heads, cfg.num_kv_heads
+    g = n_h // n_kv
+    scale = hd ** -0.5
+    b, t, _ = x.shape
+
+    q = _split_heads(adapted_linear(x, w["wq"], ctx, f"{prefix}_q"), n_h, hd)
+    if kv_x is None:
+        kv_in = x
+    else:
+        kv_in = kv_x
+    if cache is not None and kv_x is not None and "k" in cache:
+        # cross-attention decode: reuse precomputed encoder k/v
+        k, v = cache["k"], cache["v"]
+        new_cache = cache
+    else:
+        k = _split_heads(adapted_linear(kv_in, w["wk"], ctx, f"{prefix}_k"),
+                         n_kv, hd)
+        v = _split_heads(adapted_linear(kv_in, w["wv"], ctx, f"{prefix}_v"),
+                         n_kv, hd)
+        new_cache = None
+
+    if positions is None:
+        positions = jnp.arange(t)
+    if use_rope and kv_x is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        if new_cache is None or "k" not in (cache or {}):
+            k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is not None and kv_x is None:
+        # ---- self-attention decode: one new token into a full-length cache
+        assert t == 1, "decode path expects a single query token"
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
+        ck = maybe_shard(ck, BATCH, "model", None, None)
+        cv = maybe_shard(cv, BATCH, "model", None, None)
+        s_len = ck.shape[1]
+        qh = q.reshape(b, 1, n_kv, g, hd)
+        mask = (jnp.arange(s_len) <= cache_pos)[None, None, None, None, :]
+        out = _softmax_attend(qh, ck, cv, mask, scale)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        # ---- train / prefill / cross
+        from repro.sharding import current_mesh
+        mesh = current_mesh()
+        n_model = (mesh.shape["model"] if mesh is not None
+                   and "model" in mesh.axis_names else 1)
+        # TP applies when the QUERY heads divide the model axis (k/v may
+        # stay replicated under GQA — they are the cheap operands)
+        heads_shardable = n_model == 1 or n_h % n_model == 0
+        q = maybe_shard(q, BATCH, None, "model", None)
+        k = maybe_shard(k, BATCH, None, "model", None)
+        v = maybe_shard(v, BATCH, None, "model", None)
+        qh = q.reshape(b, t, n_kv, g, hd)
+        if (not heads_shardable and t % n_model == 0
+                and t // n_model <= max(chunk, 512)):
+            # §Perf iteration W1 (whisper: 20 heads vs 16-way model axis):
+            # context-parallel scores — shard the query-T axis of the score
+            # tensor over "model"; each chip computes a T/16 query stripe
+            # against the full KV instead of all heads redundantly.
+            mask = _causal_mask(t, k.shape[1]) if (causal and kv_x is None) \
+                else None
+            s = _gqa_scores(qh, k, scale)
+            s = maybe_shard(s, BATCH, None, None, "model", None)
+            if mask is not None:
+                s = jnp.where(mask, s, NEG_INF)
+            p = jax.nn.softmax(s, axis=-1)
+            p = maybe_shard(p, BATCH, None, None, "model", None)
+            out = _gqa_out(p, v)
+        elif chunk and t % chunk == 0 and t > chunk:
+            out = _chunked_attend(qh, k, v, scale, causal and kv_x is None,
+                                  chunk)
+        else:
+            mask = _causal_mask(t, k.shape[1]) if (causal and kv_x is None) \
+                else None
+            out = _softmax_attend(qh, k, v, mask, scale)
+        if cache is not None and kv_x is not None and new_cache is None:
+            new_cache = {"k": k, "v": v}     # prefill of a cross cache
+        elif kv_x is None and cache is None and new_cache is None:
+            new_cache = {"k": k, "v": v}     # prefill returns cache to caller
+
+    out = out.reshape(b, t, n_h * hd)
+    y = adapted_linear(out, w["wo"], ctx, f"{prefix}_o")
+    return maybe_shard(y, BATCH, SEQ, None), new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, length: int, dtype) -> dict:
+    hd = cfg.resolved_head_dim
+    shape = (batch, length, cfg.num_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

@@ -1,0 +1,133 @@
+"""Shared building blocks for the model zoo."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.peft import api as peft_api
+from repro.sharding import BATCH, SEQ, maybe_shard
+
+
+@dataclasses.dataclass
+class AdapterCtx:
+    """Everything a layer needs to apply the (global) adapter.
+
+    spec is static; broadcast is closed over the scan; layer is this layer's
+    slice of the per-layer factors (sliced by the scan / by position);
+    task is the MTL task index (4+1d) — None otherwise.
+    """
+    spec: peft_api.AdapterSpec
+    broadcast: Any
+    layer: Any
+    task: Optional[Any] = None
+
+    def at(self, layer_slice) -> "AdapterCtx":
+        return AdapterCtx(self.spec, self.broadcast, layer_slice, self.task)
+
+
+NO_ADAPTER = AdapterCtx(peft_api.NONE, {}, None)
+
+
+def adapted_linear(x: jnp.ndarray, w: jnp.ndarray, ctx: AdapterCtx, m: str,
+                   b: jnp.ndarray | None = None) -> jnp.ndarray:
+    """y = x·W (+ bias) + adapter delta for matrix type ``m``.
+
+    This is the paper's Eq. (5): the frozen pre-trained map plus the TT
+    (or baseline-adapter) low-rank update.
+    """
+    y = x @ w.astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    d = peft_api.adapter_delta(ctx.spec, ctx.broadcast, ctx.layer, x, m,
+                               task=ctx.task)
+    if d is not None:
+        y = y + d.astype(y.dtype)
+    return y
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    h = x.astype(jnp.float32)
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)
+    return (h * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    h = x.astype(jnp.float32)
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.mean((h - mu) ** 2, axis=-1, keepdims=True)
+    h = (h - mu) * jax.lax.rsqrt(var + eps)
+    return (h * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm(x, weights: dict, eps: float):
+    if "b" in weights:
+        return layernorm(x, weights["w"], weights["b"], eps)
+    return rmsnorm(x, weights["w"], eps)
+
+
+# --------------------------------------------------------------------------
+# RoPE (half-split / llama convention)
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (B, T, n_heads, head_dim); positions: (B, T) or (T,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B?, T, hd/2)
+    if ang.ndim == 2:
+        ang = ang[None]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# dense FFN variants
+# --------------------------------------------------------------------------
+
+def dense_ffn(x: jnp.ndarray, w: dict, ctx: AdapterCtx, kind: str) -> jnp.ndarray:
+    """kind: swiglu | geglu | gelu. Adapted matrix types ffn_up / ffn_down
+    (off by default — paper adapts attention q/v only, App. A.2)."""
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else (
+            lambda v: jax.nn.gelu(v, approximate=True))
+        g = act(adapted_linear(x, w["wg"], ctx, "ffn_gate"))
+        u = adapted_linear(x, w["wu"], ctx, "ffn_up")
+        h = g * u
+    elif kind == "gelu":
+        h = jax.nn.gelu(adapted_linear(x, w["wu"], ctx, "ffn_up"),
+                        approximate=True)
+    else:
+        raise ValueError(kind)
+    h = maybe_shard(h, BATCH, None, "model")
+    return adapted_linear(h, w["wd"], ctx, "ffn_down")
+
+
+def embed_tokens(tokens: jnp.ndarray, embed: jnp.ndarray,
+                 compute_dtype) -> jnp.ndarray:
+    return jnp.take(embed, tokens, axis=0).astype(compute_dtype)
+
+
+def lm_logits(h: jnp.ndarray, embed: jnp.ndarray) -> jnp.ndarray:
+    """Tied-embedding readout, always vocab-sharded on "model".
+
+    The activations are gathered (MBs) rather than the table (GBs): under
+    sequence parallelism h arrives T-sharded on "model" and XLA all-gathers
+    it here; constraining logits T-sharded instead would force an all-gather
+    (and on CPU an f32 upcast) of the ENTIRE (V, d) embedding — a ~19 GB/chip
+    mistake the kimi-k2 dry-run exposed (EXPERIMENTS.md §Perf, iteration 0).
+    """
+    h = maybe_shard(h, BATCH, None, None)
+    logits = h @ embed.T.astype(h.dtype)
+    return maybe_shard(logits, BATCH, None, "model")

@@ -1,0 +1,127 @@
+"""Mamba (selective SSM) mixer — jamba's dominant block type.
+
+TPU adaptation of the CUDA selective-scan kernel (DESIGN.md §3): the
+recurrence h_t = ā_t ⊙ h_{t-1} + b̄_t is a first-order linear recurrence, so
+train/prefill uses a **chunked associative scan**: ``lax.scan`` over time
+chunks carrying h, with ``lax.associative_scan`` inside each (checkpointed)
+chunk. Live memory is O(B × chunk × d_inner × d_state) instead of O(T × …),
+and the backward pass recomputes per chunk — the same blocking idea as the
+original kernel, re-expressed for XLA/TPU. Decode is the O(1) recurrent step.
+
+Adapter hook: in/out projections are matrix types "mamba_in"/"mamba_out"
+(heterogeneous dims — MetaTT's boundary-core slicing handles them).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models.layers import AdapterCtx, adapted_linear
+from repro.sharding import BATCH, SEQ, maybe_shard
+
+
+def _ssm_coeffs(x, w, cfg: ModelConfig):
+    """x: (B, T, di) post-conv/silu -> (da, db) of the recurrence plus C, D.
+
+    da = exp(dt ⊙ A): (B,T,di,ds);  db = dt ⊙ B ⊙ x: (B,T,di,ds).
+    """
+    dt_rank, ds = cfg.resolved_dt_rank, cfg.mamba_d_state
+    xdbc = x @ w["w_x"].astype(x.dtype)                  # (B,T,dtr+2ds)
+    dt, b, c = jnp.split(xdbc, [dt_rank, dt_rank + ds], axis=-1)
+    dt = jax.nn.softplus(dt @ w["w_dt"].astype(x.dtype)
+                         + w["dt_bias"].astype(x.dtype))  # (B,T,di)
+    a = -jnp.exp(w["a_log"].astype(jnp.float32))          # (di, ds)
+    da = jnp.exp(dt.astype(jnp.float32)[..., None] * a)   # (B,T,di,ds)
+    db = (dt[..., None] * b[:, :, None, :] * x[..., None]).astype(jnp.float32)
+    return da, db, c, w["d"].astype(jnp.float32)
+
+
+def _assoc_combine(l, r):
+    al, bl = l
+    ar, br = r
+    return al * ar, ar * bl + br
+
+
+def _chunk_scan(da, db, h0, chunk: int):
+    """Chunked linear recurrence: returns (h_all (B,T,di,ds), h_last)."""
+    b, t, di, ds = da.shape
+    n = t // chunk
+    da_c = da.reshape(b, n, chunk, di, ds).transpose(1, 0, 2, 3, 4)
+    db_c = db.reshape(b, n, chunk, di, ds).transpose(1, 0, 2, 3, 4)
+
+    @jax.checkpoint
+    def body(h, xs):
+        da_i, db_i = xs                                  # (B, chunk, di, ds)
+        # fold carry into the first step's additive term
+        db_i = db_i.at[:, 0].add(da_i[:, 0] * h)
+        aa, hh = jax.lax.associative_scan(_assoc_combine, (da_i, db_i), axis=1)
+        return hh[:, -1], hh
+
+    h_last, hs = jax.lax.scan(body, h0, (da_c, db_c))
+    return hs.transpose(1, 0, 2, 3, 4).reshape(b, t, di, ds), h_last
+
+
+def _causal_conv(x, w_conv, bias):
+    """Depthwise causal conv1d. x: (B,T,di), w_conv: (K, di)."""
+    k = w_conv.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):                                   # K is 4 — unrolled
+        out = out + pad[:, i:i + x.shape[1]] * w_conv[i].astype(x.dtype)
+    return out + bias.astype(x.dtype)
+
+
+def mamba_mixer(x: jnp.ndarray, w: dict, ctx: AdapterCtx, cfg: ModelConfig, *,
+                cache: Optional[dict] = None,
+                chunk: int = 256):
+    """x: (B, T, d_model) -> (y, new_cache).
+
+    cache (decode): {"h": (B, di, ds), "conv": (B, K-1, di)}.
+    """
+    b, t, _ = x.shape
+    di = cfg.mamba_d_inner
+    xz = adapted_linear(x, w["w_in"], ctx, "mamba_in")   # (B,T,2*di)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = maybe_shard(xi, BATCH, None, "model")
+
+    if cache is None:
+        xi = jax.nn.silu(_causal_conv(xi, w["conv_w"], w["conv_b"]))
+        da, db, c, d_skip = _ssm_coeffs(xi, w, cfg)
+        h0 = jnp.zeros((b, di, cfg.mamba_d_state), jnp.float32)
+        if t % chunk == 0 and t > chunk:
+            hs, h_last = _chunk_scan(da, db, h0, chunk)
+        else:
+            _, hs = jax.lax.associative_scan(_assoc_combine, (da, db), axis=1)
+            h_last = hs[:, -1]
+        y = jnp.einsum("btds,bts->btd", hs, c.astype(jnp.float32))
+        # returned so a prefill can seed subsequent decode steps
+        new_cache = {"h": h_last,
+                     "conv": xi[:, -(w["conv_w"].shape[0] - 1):]}
+    else:
+        # ---- decode: O(1) state update
+        conv_win = jnp.concatenate([cache["conv"], xi], axis=1)  # (B,K,di)
+        k = w["conv_w"].shape[0]
+        xi = jnp.einsum("bkd,kd->bd", conv_win,
+                        w["conv_w"].astype(xi.dtype))[:, None] \
+            + w["conv_b"].astype(xi.dtype)
+        xi = jax.nn.silu(xi)
+        da, db, c, d_skip = _ssm_coeffs(xi, w, cfg)
+        h = da[:, 0] * cache["h"] + db[:, 0]             # (B, di, ds)
+        y = jnp.einsum("bds,bts->btd", h, c.astype(jnp.float32))
+        new_cache = {"h": h, "conv": conv_win[:, 1:]}
+
+    y = y + d_skip * xi.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = adapted_linear(y, w["w_out"], ctx, "mamba_out")
+    return maybe_shard(out, BATCH, SEQ, None), new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    di = cfg.mamba_d_inner
+    return {
+        "h": jnp.zeros((batch, di, cfg.mamba_d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.mamba_conv - 1, di), dtype),
+    }

@@ -1,0 +1,194 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory, sequential) — Beck et al. 2024 (arXiv:2405.04517).
+
+mLSTM train/prefill uses the *parallel form* (gated-attention-like, with the
+stabilized log-gate matrix D̃), query-chunked exactly like
+models/attention.py so live memory is O(chunk × T). Decode uses the O(1)
+recurrent form with matrix memory C ∈ R^{H×hd×hd}. Both linear-time at
+decode — which is why xlstm runs the ``long_500k`` cell the pure-attention
+archs skip.
+
+sLSTM is inherently sequential (recurrent mixing R_· h_{t-1} per head); it
+runs as ``lax.scan`` over time with the exponential-gate stabilizer m_t.
+The per-step x-projections are hoisted out of the scan as batched GEMMs.
+
+Adapter matrix types: "mlstm_q", "mlstm_v", "slstm_z" (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models.layers import AdapterCtx, adapted_linear
+from repro.sharding import BATCH, SEQ, maybe_shard
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+def _mlstm_parallel(q, k, v, i_raw, logf, chunk: int):
+    """Stabilized parallel form. q,k,v: (B,T,H,hd); i_raw/logf: (B,T,H)."""
+    b, t, h, hd = q.shape
+    scale = hd ** -0.5
+    fcum = jnp.cumsum(logf, axis=1)                      # (B,T,H)
+
+    def block(args):
+        qc, fc, off = args                               # (B,c,H,hd) (B,c,H)
+        # D[t,s] = Fcum[t] - Fcum[s] + i[s]  for s <= t
+        dmat = (fc[:, :, None, :] - fcum[:, None, :, :]
+                + i_raw[:, None, :, :])                  # (B,c,T,H)
+        qi = jnp.arange(qc.shape[1])[:, None] + off
+        ki = jnp.arange(t)[None, :]
+        dmat = jnp.where((qi >= ki)[None, :, :, None], dmat, NEG_INF)
+        m = jnp.max(dmat, axis=2, keepdims=True)         # (B,c,1,H)
+        s = jnp.einsum("bthd,bshd->btsh", qc, k,
+                       preferred_element_type=jnp.float32) * scale
+        s = s * jnp.exp(dmat - m)
+        n = jnp.maximum(jnp.abs(s.sum(axis=2)), jnp.exp(-m[:, :, 0]))
+        out = jnp.einsum("btsh,bshd->bthd", s.astype(v.dtype), v)
+        return out / n[..., None].astype(v.dtype)
+
+    if chunk and t % chunk == 0 and t > chunk:
+        n = t // chunk
+        qs = q.reshape(b, n, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+        fs = fcum.reshape(b, n, chunk, h).transpose(1, 0, 2, 3)
+        offs = jnp.arange(n) * chunk
+        out = jax.lax.map(jax.checkpoint(block), (qs, fs, offs))
+        return out.transpose(1, 0, 2, 3, 4).reshape(b, t, h, hd)
+    return block((q, fcum, jnp.int32(0)))
+
+
+def _mlstm_step(cache, q, k, v, i_raw, logf):
+    """Recurrent form, one step. q,k,v: (B,H,hd); i_raw/logf: (B,H)."""
+    c_prev, n_prev, m_prev = cache["c"], cache["n"], cache["m"]
+    m_new = jnp.maximum(logf + m_prev, i_raw)            # (B,H)
+    i_s = jnp.exp(i_raw - m_new)
+    f_s = jnp.exp(logf + m_prev - m_new)
+    c_new = (f_s[..., None, None] * c_prev
+             + i_s[..., None, None] * v[..., :, None] * k[..., None, :])
+    n_new = f_s[..., None] * n_prev + i_s[..., None] * k
+    hd = q.shape[-1]
+    num = jnp.einsum("bhde,bhe->bhd", c_new, q * (hd ** -0.5))
+    # stabilized denominator: the state is implicitly scaled by exp(-m), so
+    # the max-with-1 of the unstabilized form becomes max(|ñᵀq|, exp(-m))
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, q * (hd ** -0.5))),
+        jnp.exp(-m_new))
+    h = num / den[..., None]
+    return h, {"c": c_new, "n": n_new, "m": m_new}
+
+
+def mlstm_mixer(x, w, ctx: AdapterCtx, cfg: ModelConfig, *,
+                cache: Optional[dict] = None, chunk: int = 256):
+    b, t, d = x.shape
+    n_h = cfg.num_heads
+    hd = d // n_h
+    q = adapted_linear(x, w["wq"], ctx, "mlstm_q").reshape(b, t, n_h, hd)
+    k = (x @ w["wk"].astype(x.dtype)).reshape(b, t, n_h, hd)
+    v = adapted_linear(x, w["wv"], ctx, "mlstm_v").reshape(b, t, n_h, hd)
+    i_raw = (x @ w["w_i"].astype(x.dtype)).astype(jnp.float32)  # (B,T,H)
+    logf = jax.nn.log_sigmoid(
+        (x @ w["w_f"].astype(x.dtype)).astype(jnp.float32))
+    o = jax.nn.sigmoid(x @ w["w_og"].astype(x.dtype))
+
+    if cache is None:
+        h = _mlstm_parallel(q.astype(jnp.float32), k.astype(jnp.float32),
+                            v, i_raw, logf, chunk)
+        new_cache = None
+    else:
+        h, new_cache = _mlstm_step(
+            cache, q[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32),
+            v[:, 0].astype(jnp.float32), i_raw[:, 0], logf[:, 0])
+        h = h[:, None]
+    h = (h.reshape(b, t, d)).astype(x.dtype) * o
+    y = adapted_linear(h, w["w_out"], ctx, "mlstm_o")
+    return maybe_shard(y, BATCH, SEQ, None), new_cache
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int) -> dict:
+    n_h = cfg.num_heads
+    hd = cfg.d_model // n_h
+    return {"c": jnp.zeros((batch, n_h, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, n_h, hd), jnp.float32),
+            "m": jnp.full((batch, n_h), NEG_INF, jnp.float32)}
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+def _slstm_recur(h, r, n_heads):
+    """Per-head recurrent mixing: h (B,d) x r (H,hd,hd) -> (B,d)."""
+    b, d = h.shape
+    hd = d // n_heads
+    hh = h.reshape(b, n_heads, hd)
+    return jnp.einsum("bhd,hde->bhe", hh, r.astype(h.dtype)).reshape(b, d)
+
+
+def _slstm_step(carry, xs, r_w, n_heads):
+    h, c, n, m = carry
+    zx, ix, fx, ox = xs                                  # (B,d) each, f32
+    z = jnp.tanh(zx + _slstm_recur(h, r_w["r_z"], n_heads))
+    i_raw = ix + _slstm_recur(h, r_w["r_i"], n_heads)
+    f_raw = fx + _slstm_recur(h, r_w["r_f"], n_heads)
+    o = jax.nn.sigmoid(ox + _slstm_recur(h, r_w["r_o"], n_heads))
+    logf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(logf + m, i_raw)
+    i_s = jnp.exp(i_raw - m_new)
+    f_s = jnp.exp(logf + m - m_new)
+    c_new = f_s * c + i_s * z
+    n_new = f_s * n + i_s
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (h_new, c_new, n_new, m_new), h_new
+
+
+def slstm_mixer(x, w, ctx: AdapterCtx, cfg: ModelConfig, *,
+                cache: Optional[dict] = None):
+    b, t, d = x.shape
+    n_h = cfg.num_heads
+    # hoisted x-projections (batched GEMMs outside the scan)
+    zx = adapted_linear(x, w["w_z"], ctx, "slstm_z").astype(jnp.float32)
+    ix = (x @ w["w_i"].astype(x.dtype)).astype(jnp.float32)
+    fx = (x @ w["w_f"].astype(x.dtype)).astype(jnp.float32)
+    ox = (x @ w["w_o"].astype(x.dtype)).astype(jnp.float32)
+
+    if cache is None:
+        init = tuple(jnp.zeros((b, d), jnp.float32) for _ in range(3)) \
+            + (jnp.full((b, d), NEG_INF, jnp.float32),)
+        xs = tuple(a.transpose(1, 0, 2) for a in (zx, ix, fx, ox))
+        # §Perf iteration X1: a per-timestep scan re-reads the recurrent
+        # matrices R from HBM every step (~170 TB/step for train_4k). With
+        # ``unroll`` timesteps per scan body, XLA keeps R live across the
+        # unrolled steps — HBM weight traffic drops ~unroll x. (The full fix
+        # is a Pallas kernel holding R in VMEM for the whole sequence; this
+        # is the XLA-expressible version.)
+        unroll = 8 if t % 8 == 0 else 1
+        (_, _, _, _), hs = jax.lax.scan(
+            lambda c, s: _slstm_step(c, s, w, n_h), init, xs,
+            unroll=unroll)
+        h = hs.transpose(1, 0, 2)                        # (B,T,d)
+        new_cache = None
+    else:
+        carry = (cache["h"], cache["c"], cache["n"], cache["m"])
+        carry, h1 = _slstm_step(carry, (zx[:, 0], ix[:, 0], fx[:, 0],
+                                        ox[:, 0]), w, n_h)
+        h = h1[:, None]
+        new_cache = {"h": carry[0], "c": carry[1], "n": carry[2],
+                     "m": carry[3]}
+
+    y = adapted_linear(h.astype(x.dtype), w["w_out"], ctx, "slstm_o")
+    return maybe_shard(y, BATCH, SEQ, None), new_cache
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    return {"h": jnp.zeros((batch, d), jnp.float32),
+            "c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.zeros((batch, d), jnp.float32),
+            "m": jnp.full((batch, d), NEG_INF, jnp.float32)}

@@ -1,0 +1,9 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWState,
+    clip_by_global_norm,
+    global_norm,
+    init_state,
+    make_schedule,
+    reinit_state,
+    update,
+)

@@ -1,0 +1,112 @@
+"""AdamW + schedules + clipping, from scratch (no optax in this env).
+
+Matches the paper's training setup: AdamW (LH17) with weight_decay=0.0,
+warmup_ratio=0.06, grad-clip 3.0 (paper App. A.3 / B / D). ``reinit_state``
+implements the paper's §3.3 requirement that Adam moments be re-initialized
+after every DMRG truncation (parameter shapes change).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import OptimizerConfig
+
+
+@dataclasses.dataclass
+class AdamWState:
+    step: jnp.ndarray     # ()
+    mu: Any               # pytree like params
+    nu: Any
+
+    def tree_flatten(self):
+        return (self.step, self.mu, self.nu), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    AdamWState, AdamWState.tree_flatten, AdamWState.tree_unflatten)
+
+
+def init_state(params) -> AdamWState:
+    z = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32),
+                               params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=z,
+                      nu=jax.tree_util.tree_map(jnp.copy, z))
+
+
+def reinit_state(params) -> AdamWState:
+    """Fresh moments after a DMRG rank change (paper §3.3)."""
+    return init_state(params)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    n = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), n
+
+
+def make_schedule(cfg: OptimizerConfig, total_steps: int) -> Callable:
+    warm = max(int(cfg.warmup_ratio * total_steps), 1)
+
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm_lr = cfg.lr * (s + 1) / warm
+        frac = jnp.clip((s - warm) / jnp.maximum(total_steps - warm, 1),
+                        0.0, 1.0)
+        if cfg.schedule == "cosine":
+            decay = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        elif cfg.schedule == "linear":
+            decay = 1.0 - frac
+        else:
+            decay = 1.0
+        return jnp.where(s < warm, warm_lr, cfg.lr * decay)
+
+    return sched
+
+
+def update(grads, state: AdamWState, params, cfg: OptimizerConfig,
+           lr: jnp.ndarray):
+    """One AdamW step. Returns (new_params, new_state, grad_norm)."""
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    b1, b2 = cfg.betas
+    t = state.step + 1
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.mu)
+    flat_v = tdef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=t, mu=new_m, nu=new_v), gnorm

@@ -1,0 +1,12 @@
+"""PEFT adapters: MetaTT (the paper) + the baselines it compares against."""
+from repro.peft.api import (  # noqa: F401
+    NONE,
+    AdapterSpec,
+    adapter_delta,
+    adapter_factors,
+    count_trainable,
+    init_adapter,
+)
+from repro.peft.lora import LoRAConfig  # noqa: F401
+from repro.peft.lotr import LoTRConfig  # noqa: F401
+from repro.peft.vera import VeRAConfig  # noqa: F401

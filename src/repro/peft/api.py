@@ -1,0 +1,116 @@
+"""Unified adapter API.
+
+Every PEFT method in this framework — MetaTT (the paper), and the baselines
+it compares against (LoRA, VeRA, LoTR) — implements the same functional
+contract so models are adapter-agnostic:
+
+  trainable, frozen = init_adapter(spec, key)
+  broadcast, per_layer = adapter_factors(spec, trainable, frozen)
+      # once per step; ``per_layer`` has a leading L axis and is fed to the
+      # layer scan as xs, ``broadcast`` is closed over.
+  dy = adapter_delta(spec, broadcast, layer_slice, x, m, task=...)
+      # inside a layer; returns the low-rank update α·x·ΔW_{l,m} (or 0).
+
+The split into (broadcast, per_layer) is what makes every method O(1) in HLO
+size under ``jax.lax.scan`` over layers, and it is also where MetaTT's
+step-level pre-merge of the middle cores happens (DESIGN.md §3).
+
+Shared-projection note: for MetaTT, q and v deltas at the same layer share
+``P = x·G1``. We deliberately compute it per call — XLA CSE merges the two
+identical GEMMs under jit, keeping this API simple.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import metatt as _metatt
+from repro.peft import lora as _lora
+from repro.peft import lotr as _lotr
+from repro.peft import vera as _vera
+
+AdapterConfig = Union[_metatt.MetaTTConfig, "_lora.LoRAConfig",
+                      "_vera.VeRAConfig", "_lotr.LoTRConfig", None]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdapterSpec:
+    """Static description of the adapter attached to a model.
+
+    kind: "metatt" | "lora" | "vera" | "lotr" | "none"
+    cfg:  the per-kind config (carries dims/rank/alpha/matrix_types).
+    """
+    kind: str
+    cfg: AdapterConfig = None
+
+    @property
+    def matrix_types(self) -> tuple:
+        return () if self.kind == "none" else self.cfg.matrix_types
+
+    def adapts(self, m: str) -> bool:
+        return self.kind != "none" and m in self.cfg.matrix_types
+
+
+NONE = AdapterSpec(kind="none")
+
+
+def init_adapter(spec: AdapterSpec, key) -> tuple:
+    """Returns (trainable, frozen) param pytrees. ``frozen`` holds
+    non-trainable method state (VeRA's shared random A/B); {} otherwise."""
+    if spec.kind == "none":
+        return {}, {}
+    if spec.kind == "metatt":
+        return _metatt.init_params(spec.cfg, key), {}
+    if spec.kind == "lora":
+        return _lora.init_params(spec.cfg, key), {}
+    if spec.kind == "vera":
+        return _vera.init_params(spec.cfg, key)
+    if spec.kind == "lotr":
+        return _lotr.init_params(spec.cfg, key), {}
+    raise ValueError(f"unknown adapter kind {spec.kind!r}")
+
+
+def adapter_factors(spec: AdapterSpec, trainable, frozen) -> tuple:
+    """(broadcast, per_layer) — per-step precompute. per_layer leading dim L."""
+    if spec.kind == "none":
+        return {}, None
+    if spec.kind == "metatt":
+        f = _metatt.step_factors(trainable, spec.cfg)
+        return {"g1": f.g1, "g4": f.g4}, {"c": f.c}
+    if spec.kind == "lora":
+        return {}, trainable          # {"a": (L,M,Din,r), "b": (L,M,r,Dout)}
+    if spec.kind == "vera":
+        return frozen, trainable      # frozen {"a","b"}, trainable {"d","g"}
+    if spec.kind == "lotr":
+        return {"u": trainable["u"], "v": trainable["v"]}, \
+               {"s": trainable["s"]}
+    raise ValueError(spec.kind)
+
+
+def adapter_delta(spec: AdapterSpec, broadcast, layer_slice, x: jnp.ndarray,
+                  m: str, *, task: Optional[Any] = None) -> jnp.ndarray | None:
+    """Low-rank delta for matrix type ``m`` at the current layer, or None if
+    this matrix type is not adapted. ``layer_slice`` is per_layer[l]."""
+    if not spec.adapts(m):
+        return None
+    cfg = spec.cfg
+    mi = cfg.m_index(m) if hasattr(cfg, "m_index") else \
+        cfg.matrix_types.index(m)
+    if spec.kind == "metatt":
+        f = _metatt.StepFactors(g1=broadcast["g1"], c=None, g4=broadcast["g4"])
+        p = _metatt.project_in(f, cfg, x, m)
+        return _metatt.delta_out(f, cfg, p, layer_slice["c"], m, task=task)
+    if spec.kind == "lora":
+        return _lora.delta(cfg, layer_slice, x, mi)
+    if spec.kind == "vera":
+        return _vera.delta(cfg, broadcast, layer_slice, x, mi)
+    if spec.kind == "lotr":
+        return _lotr.delta(cfg, broadcast, layer_slice, x, mi)
+    raise ValueError(spec.kind)
+
+
+def count_trainable(spec: AdapterSpec, trainable) -> int:
+    return int(sum(jnp.size(x) for x in jax.tree_util.tree_leaves(trainable)))

@@ -1,0 +1,74 @@
+"""LoRA baseline (Hu et al. 2021) — the paper's primary comparison point.
+
+Per adapted matrix (layer l, type m):  ΔW_{l,m} = A_{l,m} · B_{l,m},
+A ∈ R^{d_in×r} ~ N(0, 1/r) …actually Kaiming-ish N(0, σ²), B = 0, scaled by
+α/r (the standard LoRA convention).  Parameter count 2·L·M·D·r — the
+product-across-modes scaling MetaTT's sum-across-modes improves on
+(paper §2.4).
+
+Weights are stored scan-stacked: a (L, M, d_in_max, r), b (L, M, r, d_out_max)
+with boundary slicing for heterogeneous shapes, mirroring MetaTT so the two
+are drop-in interchangeable in the model zoo.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LoRAConfig:
+    num_layers: int
+    matrix_types: tuple
+    d_in: tuple
+    d_out: tuple
+    rank: int
+    alpha: float = 8.0
+    dtype: Any = jnp.float32
+
+    @property
+    def num_matrices(self) -> int:
+        return len(self.matrix_types)
+
+    @property
+    def d_in_max(self) -> int:
+        return max(self.d_in)
+
+    @property
+    def d_out_max(self) -> int:
+        return max(self.d_out)
+
+    def m_index(self, name: str) -> int:
+        return self.matrix_types.index(name)
+
+    def num_params(self) -> int:
+        # exact (with boundary slicing the padded entries still count as
+        # allocated-but-unused only when dims differ; report the paper's
+        # effective count which sums true dims):
+        r = self.rank
+        return sum(self.num_layers * (di * r + r * do)
+                   for di, do in zip(self.d_in, self.d_out))
+
+
+def paper_count(D: int, L: int, M: int, r: int) -> int:
+    """2LMDr (paper §2.4)."""
+    return 2 * L * M * D * r
+
+
+def init_params(cfg: LoRAConfig, key) -> dict:
+    l, m, r = cfg.num_layers, cfg.num_matrices, cfg.rank
+    a = (jax.random.normal(key, (l, m, cfg.d_in_max, r), cfg.dtype)
+         / jnp.sqrt(cfg.d_in_max))
+    b = jnp.zeros((l, m, r, cfg.d_out_max), cfg.dtype)
+    return {"a": a, "b": b}
+
+
+def delta(cfg: LoRAConfig, layer_slice: dict, x: jnp.ndarray,
+          mi: int) -> jnp.ndarray:
+    a = layer_slice["a"][mi][: x.shape[-1]]
+    b = layer_slice["b"][mi][:, : cfg.d_out[mi]]
+    scale = cfg.alpha / cfg.rank
+    return scale * ((x @ a.astype(x.dtype)) @ b.astype(x.dtype))

@@ -1,0 +1,76 @@
+"""LoTR baseline (Bershatsky et al. 2024) — low tensor-rank weight adaptation.
+
+ΔW_{l,m} = U · S_{l,m} · Vᵀ with *shared* end factors U ∈ R^{d_in×r},
+V ∈ R^{d_out×r} and a per-(layer, matrix) trainable core S ∈ R^{r×r}.
+Parameter count 2Dr + L·M·r² — matches the paper's Table 1 rows
+(base r=40 → 100k, r=80 → 276k, r=88 → 321k; large r=64 → 328k).
+
+Structurally LoTR is MetaTT-4D with the (L, M) axes *merged into a single
+core* — i.e. it spends L·M·r² on the middle where MetaTT spends (L+M)·r²,
+which is exactly the compression gap the paper exploits (§1.1, Table 1).
+
+Init: U, V random normal; S = 0 → ΔW = 0 at init.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LoTRConfig:
+    num_layers: int
+    matrix_types: tuple
+    d_in: tuple
+    d_out: tuple
+    rank: int
+    alpha: float = 1.0
+    dtype: Any = jnp.float32
+
+    @property
+    def num_matrices(self) -> int:
+        return len(self.matrix_types)
+
+    @property
+    def d_in_max(self) -> int:
+        return max(self.d_in)
+
+    @property
+    def d_out_max(self) -> int:
+        return max(self.d_out)
+
+    def m_index(self, name: str) -> int:
+        return self.matrix_types.index(name)
+
+    def num_params(self) -> int:
+        r = self.rank
+        return (self.d_in_max * r + self.d_out_max * r
+                + self.num_layers * self.num_matrices * r * r)
+
+
+def paper_count(D: int, L: int, M: int, r: int) -> int:
+    """2Dr + LMr²."""
+    return 2 * D * r + L * M * r * r
+
+
+def init_params(cfg: LoTRConfig, key) -> dict:
+    k1, k2 = jax.random.split(key)
+    r = cfg.rank
+    return {
+        "u": (jax.random.normal(k1, (cfg.d_in_max, r), cfg.dtype)
+              / jnp.sqrt(cfg.d_in_max)),
+        "v": (jax.random.normal(k2, (cfg.d_out_max, r), cfg.dtype)
+              / jnp.sqrt(r)),
+        "s": jnp.zeros((cfg.num_layers, cfg.num_matrices, r, r), cfg.dtype),
+    }
+
+
+def delta(cfg: LoTRConfig, broadcast: dict, layer_slice: dict, x: jnp.ndarray,
+          mi: int) -> jnp.ndarray:
+    u = broadcast["u"][: x.shape[-1]].astype(x.dtype)
+    vt = broadcast["v"][: cfg.d_out[mi]].T.astype(x.dtype)
+    s = layer_slice["s"][mi].astype(x.dtype)
+    return cfg.alpha * (((x @ u) @ s) @ vt)

@@ -1,0 +1,86 @@
+"""VeRA baseline (Kopiczko et al., ICLR 2024) — parameter-sharing comparison.
+
+A single pair of *frozen random* matrices A ∈ R^{d_in×r}, B ∈ R^{r×d_out} is
+shared across all layers/matrix types; only per-(l,m) scaling vectors are
+trained:
+
+  Δy = (((x · A) ⊙ d_{l,m}) · B) ⊙ g_{l,m}
+
+with d ∈ R^r (init d_init = 0.1) and g ∈ R^{d_out} (init 0 → ΔW = 0 at init).
+Trainable parameter count L·M·(r + D) — matches the paper's Table 1 rows
+(RoBERTa-base r=1024 → 43k, large r=256 → 61k).
+
+The paper's App. A.3 re-benchmarks VeRA with frozen classifier heads; our
+trainer reproduces that by only ever training adapter params unless
+``train_base=True``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class VeRAConfig:
+    num_layers: int
+    matrix_types: tuple
+    d_in: tuple
+    d_out: tuple
+    rank: int
+    d_init: float = 0.1
+    alpha: float = 1.0
+    seed: int = 0          # frozen A/B are derived from this, checkpoint-free
+    dtype: Any = jnp.float32
+
+    @property
+    def num_matrices(self) -> int:
+        return len(self.matrix_types)
+
+    @property
+    def d_in_max(self) -> int:
+        return max(self.d_in)
+
+    @property
+    def d_out_max(self) -> int:
+        return max(self.d_out)
+
+    def m_index(self, name: str) -> int:
+        return self.matrix_types.index(name)
+
+    def num_params(self) -> int:
+        """Trainable only (frozen shared A/B are excluded, as in the paper)."""
+        return sum(self.num_layers * (self.rank + do) for do in self.d_out)
+
+
+def paper_count(D: int, L: int, M: int, r: int) -> int:
+    """L·M·(r + D)."""
+    return L * M * (r + D)
+
+
+def init_params(cfg: VeRAConfig, key) -> tuple:
+    l, m, r = cfg.num_layers, cfg.num_matrices, cfg.rank
+    trainable = {
+        "d": jnp.full((l, m, r), cfg.d_init, cfg.dtype),
+        "g": jnp.zeros((l, m, cfg.d_out_max), cfg.dtype),
+    }
+    fkey = jax.random.PRNGKey(cfg.seed)
+    k1, k2 = jax.random.split(fkey)
+    frozen = {
+        "a": (jax.random.normal(k1, (cfg.d_in_max, r), cfg.dtype)
+              / jnp.sqrt(cfg.d_in_max)),
+        "b": (jax.random.normal(k2, (r, cfg.d_out_max), cfg.dtype)
+              / jnp.sqrt(r)),
+    }
+    return trainable, frozen
+
+
+def delta(cfg: VeRAConfig, broadcast: dict, layer_slice: dict, x: jnp.ndarray,
+          mi: int) -> jnp.ndarray:
+    a = broadcast["a"][: x.shape[-1]].astype(x.dtype)
+    b = broadcast["b"][:, : cfg.d_out[mi]].astype(x.dtype)
+    d = layer_slice["d"][mi].astype(x.dtype)
+    g = layer_slice["g"][mi][: cfg.d_out[mi]].astype(x.dtype)
+    return cfg.alpha * ((((x @ a) * d) @ b) * g)

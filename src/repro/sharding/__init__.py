@@ -1,0 +1,12 @@
+from repro.sharding.rules import (  # noqa: F401
+    BATCH,
+    SEQ,
+    get_seq_axis,
+    set_seq_axis,
+    batch_axes,
+    current_mesh,
+    maybe_shard,
+    params_pspec,
+    params_sharding,
+    spec_for_param,
+)

@@ -1,0 +1,210 @@
+"""Logical→physical sharding rules.
+
+Parallelism map (DESIGN.md §4):
+  * batch            -> ("pod", "data")     DP across pods, DP/FSDP within
+  * weight d_model / d_ff "other" dim -> "data"   (FSDP storage sharding)
+  * heads / d_ff compute dim          -> "model"  (TP)
+  * MoE expert dim                    -> "model"  (EP, via shard_map)
+  * KV-cache sequence dim             -> "model"  (sequence-sharded decode
+                                         attention — GQA kv-heads are often
+                                         < |model|, so we shard S instead)
+  * long-context activations          -> sequence over "data" when
+                                         global_batch < |data|
+
+``maybe_shard`` degrades gracefully: axes missing from the ambient mesh are
+dropped, and any dim not divisible by its axis-size product falls back to
+replicated — so e.g. paligemma's 8 heads on a 16-way model axis simply stay
+replicated instead of erroring (documented trade-off; the dry-run output
+shows the real placement).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+from jax.interpreters import pxla
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def current_mesh() -> Mesh | None:
+    mesh = pxla.thread_resources.env.physical_mesh
+    if mesh is None or mesh.empty:
+        return None
+    return mesh
+
+
+# Sequence-parallel sentinel: ``SEQ`` in a spec resolves to the configured
+# sequence axis (default: none -> replicated). The dry-run / launcher enables
+# SP for train/prefill shapes via ``set_seq_axis("model")`` — activations'
+# T dim is then sharded on the residual stream and gathered inside
+# attention/FFN (Korthikanti-style SP, expressed purely as constraints).
+SEQ = "__seq__"
+_seq_axis: list = [None]
+
+
+def set_seq_axis(axis: str | None) -> None:
+    _seq_axis[0] = axis
+
+
+def get_seq_axis() -> str | None:
+    return _seq_axis[0]
+
+
+def _resolve(entry):
+    if entry == SEQ:
+        return _seq_axis[0]
+    if isinstance(entry, tuple):
+        resolved = tuple(_seq_axis[0] if e == SEQ else e for e in entry)
+        return tuple(e for e in resolved if e is not None) or None
+    return entry
+
+
+def _filter_spec(mesh: Mesh, spec: P, shape) -> P:
+    """Drop mesh axes that don't exist / don't divide the dim."""
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        entry = _resolve(entry)
+        if entry is None:
+            out.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        names = tuple(n for n in names if n in mesh.axis_names)
+        size = int(np.prod([mesh.shape[n] for n in names])) if names else 1
+        if not names or size == 1 or dim % size != 0:
+            out.append(None)
+        else:
+            out.append(names if len(names) > 1 else names[0])
+    return P(*out)
+
+
+def maybe_shard(x, *spec_entries) -> jax.Array:
+    """with_sharding_constraint that no-ops without an ambient mesh and
+    auto-filters invalid axes. Usable identically in CPU unit tests and in
+    the 512-device dry-run."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = _filter_spec(mesh, P(*spec_entries), x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def batch_axes(mesh: Mesh | None = None) -> tuple:
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+BATCH = ("pod", "data")  # logical batch axes, filtered per-mesh by maybe_shard
+
+
+# --------------------------------------------------------------------------
+# parameter placement: pytree of PartitionSpec mirroring the params pytree.
+# Conventions (leaf shapes, nb = stacked super-block dim first where present):
+#   embed        (V, d)            -> P("model", "data")
+#   in-proj      (nb, d_in, d_out) -> P(None, "data", "model")
+#   out-proj     (nb, d_in, d_out) -> P(None, "model", "data")
+#   experts      (nb, E, d, ff)    -> P(None, "model", None, "data")
+#   vectors      (..., d)          -> replicated
+# --------------------------------------------------------------------------
+
+_IN_PROJ = {"wq", "wk", "wv", "wg", "wu", "w_in", "w_qkv", "w_up",
+            "s_wg", "s_wu"}
+_OUT_PROJ = {"wo", "wd", "w_out", "w_down", "s_wd"}
+_EXPERT_IN = {"e_wg", "e_wu"}
+_EXPERT_OUT = {"e_wd"}
+
+
+def spec_for_param(path: str, shape) -> P:
+    """Sharding spec from the parameter's name + rank (see conventions)."""
+    leaf = path.split("/")[-1]
+    nd = len(shape)
+    if leaf in ("tok", "embed", "lm_head"):
+        return P("model", "data") if nd == 2 else P()
+    if leaf in _EXPERT_IN:
+        return P(None, "model", None, "data") if nd == 4 else P("model", None, "data")
+    if leaf in _EXPERT_OUT:
+        return P(None, "model", "data", None) if nd == 4 else P("model", "data", None)
+    if leaf in _IN_PROJ:
+        return P(*( [None] * (nd - 2) + ["data", "model"] ))
+    if leaf in _OUT_PROJ:
+        return P(*( [None] * (nd - 2) + ["model", "data"] ))
+    # norms, biases, conv kernels, gates, adapter cores: replicated
+    return P()
+
+
+def params_pspec(params) -> dict:
+    """PartitionSpec pytree for a params pytree (path-based rules)."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+
+    def name(kp):
+        parts = []
+        for k in kp:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+        return "/".join(parts)
+
+    specs = {name(kp): spec_for_param(name(kp), leaf.shape)
+             for kp, leaf in flat}
+    # rebuild as pytree
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(params),
+        [spec_for_param(name(kp), leaf.shape) for kp, leaf in flat])
+
+
+def cache_spec_for(path: str, shape) -> P:
+    """Decode-cache placement: KV caches are sequence-sharded over "model"
+    (kv-heads are often < |model|) and batch-sharded over ("pod","data");
+    mamba state shards d_inner over "model"; recurrent xlstm scalars are
+    tiny and replicate (see DESIGN.md §4).
+
+    Cache leaves are stacked over super-blocks: shapes carry a leading nb
+    dim (transformer.init_caches), hence the leading None below.
+    """
+    leaf = path.split("/")[-1]
+    nd = len(shape)
+    if leaf in ("k", "v") and nd == 5:       # (nb, B, S, KV, hd)
+        return P(None, BATCH, "model", None, None)
+    if leaf == "h" and nd == 4:              # (nb, B, di, ds) mamba state
+        return P(None, BATCH, "model", None)
+    if leaf == "conv" and nd == 4:           # (nb, B, K-1, di)
+        return P(None, BATCH, None, "model")
+    if nd >= 2:
+        return P(None, BATCH)
+    return P()
+
+
+def _paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for kp, leaf in flat:
+        parts = []
+        for k in kp:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+            else:
+                parts.append(str(k))
+        out.append(("/".join(parts), leaf))
+    return out
+
+
+def tree_sharding(tree, mesh: Mesh, spec_fn):
+    """NamedSharding pytree from a (path, shape) -> PartitionSpec rule."""
+    leaves = [NamedSharding(mesh, _filter_spec(mesh, spec_fn(p, leaf.shape),
+                                               leaf.shape))
+              for p, leaf in _paths(tree)]
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(tree), leaves)
+
+
+def params_sharding(params, mesh: Mesh):
+    """NamedSharding pytree (filtered for divisibility) for device_put /
+    in_shardings."""
+    def one(path_spec, leaf):
+        return NamedSharding(mesh, _filter_spec(mesh, path_spec, leaf.shape))
+    return jax.tree_util.tree_map(one, params_pspec(params), params)

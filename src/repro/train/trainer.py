@@ -1,0 +1,140 @@
+"""Training loop: checkpoint/restart, DMRG rank-adaptive sweeps, straggler
+watchdog, multi-task cycling.
+
+The loop is deliberately host-driven (the paper's §3.3 uses a custom loop for
+the same reason: DMRG changes the *model shapes* mid-run, which no jitted
+graph can do). Rank changes trigger: sweep → fresh Adam moments (paper
+requirement) → automatic re-jit via new shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.config.base import RunConfig
+from repro.core import dmrg as dmrg_lib
+from repro.distributed import FailureInjector, GradCompressor, Watchdog
+from repro.models import model as model_lib
+from repro.peft import api as peft_api
+from repro.train import train_step as ts
+
+
+@dataclasses.dataclass
+class Trainer:
+    run: RunConfig
+    data: Any                                  # iterator with state()/restore()
+    total_steps: int
+    steps_per_epoch: int = 0                   # 0 -> no epoch semantics
+    rank_schedule: Optional[dmrg_lib.RankSchedule] = None
+    failure_injector: Optional[FailureInjector] = None
+    on_metrics: Optional[Callable[[int, dict], None]] = None
+    eval_fn: Optional[Callable[[Any], dict]] = None
+    task_cycle: tuple = ()                     # MTL: task ids for joint training
+
+    def __post_init__(self):
+        run = self.run
+        self.cfg = run.model
+        self.spec = model_lib.build_adapter_spec(run)
+        key = jax.random.PRNGKey(run.train.seed)
+        params = model_lib.init_params(self.cfg, self.spec, key)
+        self.base, self.frozen = params["base"], params["frozen"]
+        self.compressor = GradCompressor(run.train.grad_compression)
+        self.state = ts.init_train_state(params["adapter"], self.compressor)
+        self.step_fn = ts.make_train_step(
+            self.cfg, self.spec, run.optimizer, run.train, self.total_steps)
+        self.ckpt = (CheckpointManager(run.train.ckpt_dir,
+                                       keep=run.train.ckpt_keep)
+                     if run.train.ckpt_dir else None)
+        self.watchdog = Watchdog()
+        self.straggler_events: list = []
+        self.watchdog.on_straggler = lambda s, dt, ew: \
+            self.straggler_events.append((s, dt, ew))
+        self.history: list = []
+        self._resume()
+
+    # ------------------------------------------------------------------
+    def _resume(self) -> None:
+        if self.ckpt is None:
+            return
+        got = self.ckpt.restore_latest(self.state)
+        if got is None:
+            return
+        step, state, meta = got
+        self.state = state
+        if "data_state" in meta and hasattr(self.data, "restore"):
+            self.data.restore(meta["data_state"])
+        print(f"[trainer] resumed from checkpoint step {step}")
+
+    def _save(self, step: int) -> None:
+        if self.ckpt is None:
+            return
+        meta = {}
+        if hasattr(self.data, "state"):
+            meta["data_state"] = self.data.state()
+        self.ckpt.save(step, self.state, meta)
+
+    # ------------------------------------------------------------------
+    def _maybe_dmrg(self, step: int) -> None:
+        """End-of-epoch DMRG sweep per the rank schedule (paper Fig. 2)."""
+        if (self.rank_schedule is None or not self.steps_per_epoch
+                or self.spec.kind != "metatt"):
+            return
+        if step == 0 or step % self.steps_per_epoch:
+            return
+        epoch = step // self.steps_per_epoch
+        target = self.rank_schedule.rank_after_epoch(epoch)
+        if target is None:
+            return
+        res = dmrg_lib.dmrg_sweep(self.state.adapter, target_rank=target)
+        n_before = peft_api.count_trainable(self.spec, self.state.adapter)
+        n_after = peft_api.count_trainable(self.spec, res.params)
+        self.state = ts.reinit_after_dmrg(self.state, res.params,
+                                          self.compressor)
+        print(f"[trainer] DMRG sweep @step {step}: ranks -> {res.ranks} "
+              f"params {n_before} -> {n_after}")
+
+    # ------------------------------------------------------------------
+    def _next_batch(self, step: int) -> dict:
+        if self.task_cycle:
+            task = self.task_cycle[step % len(self.task_cycle)]
+            raw = self.data.sample(task)
+        else:
+            raw = next(self.data)
+        return {k: jnp.asarray(v) for k, v in raw.items()
+                if k in ("tokens", "mask", "task", "embeds", "enc_embeds")}
+
+    def train(self, steps: Optional[int] = None) -> list:
+        steps = steps or self.total_steps
+        start = int(self.state.step)
+        for step in range(start, steps):
+            if self.failure_injector is not None:
+                self.failure_injector.check(step)
+            batch = self._next_batch(step)
+            t0 = time.perf_counter()
+            self.state, metrics = self.step_fn(self.state, self.base,
+                                               self.frozen, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            self.watchdog.step(step, dt)
+            metrics["step_time_s"] = dt
+            self.history.append((step, metrics))
+            if self.on_metrics is not None:
+                self.on_metrics(step, metrics)
+            if self.run.train.ckpt_every and \
+                    (step + 1) % self.run.train.ckpt_every == 0:
+                self._save(step + 1)
+            self._maybe_dmrg(step + 1)
+        if self.ckpt is not None:
+            self._save(steps)
+            self.ckpt.wait()
+        return self.history
+
+    # ------------------------------------------------------------------
+    def losses(self) -> np.ndarray:
+        return np.array([m["loss"] for _, m in self.history])

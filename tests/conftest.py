@@ -1,0 +1,10 @@
+# NOTE: deliberately NO XLA_FLAGS / device-count override here — smoke tests
+# and benches must see the single real CPU device. Sharded tests spawn
+# subprocesses with their own XLA_FLAGS (tests/test_sharding.py).
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(42)

@@ -1,0 +1,67 @@
+"""Checkpoint manager: atomicity, keep-k GC, async, shape-flexible restore."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+
+
+def _tree(v):
+    return {"a": jnp.full((3, 4), v, jnp.float32),
+            "b": [jnp.full((2,), v + 1, jnp.bfloat16),
+                  jnp.asarray(v, jnp.int32)]}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=2)
+    cm.save(5, _tree(1.0), meta={"data_state": {"step": 5, "seed": 11}})
+    tree, meta = cm.restore(5, _tree(0.0))
+    np.testing.assert_allclose(tree["a"], 1.0)
+    assert tree["b"][0].dtype == jnp.bfloat16
+    assert meta["data_state"]["step"] == 5
+
+
+def test_keep_k_gc(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        cm.save(s, _tree(float(s)))
+    assert cm.all_steps() == [3, 4]
+    assert cm.latest_step() == 4
+
+
+def test_restore_latest(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=3)
+    assert cm.restore_latest(_tree(0.0)) is None
+    cm.save(7, _tree(2.0))
+    step, tree, _ = cm.restore_latest(_tree(0.0))
+    assert step == 7
+    np.testing.assert_allclose(tree["a"], 2.0)
+
+
+def test_async_save(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    cm.save(1, _tree(9.0))
+    cm.wait()
+    assert cm.latest_step() == 1
+
+
+def test_no_partial_files_on_disk(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=3)
+    cm.save(1, _tree(1.0))
+    names = os.listdir(tmp_path)
+    assert all(not n.startswith("ckpt_") or n.endswith((".npz", ".json"))
+               for n in names)
+    assert not any(".tmp." in n for n in names)
+
+
+def test_shape_flexible_restore_for_dmrg(tmp_path):
+    """After a DMRG sweep TT core shapes change; restore must accept a
+    template whose leaf shapes differ from the saved arrays."""
+    cm = CheckpointManager(str(tmp_path), keep=3)
+    saved = {"cores": [jnp.ones((1, 8, 4)), jnp.ones((4, 8, 1))]}
+    cm.save(3, saved)
+    template = {"cores": [jnp.zeros((1, 8, 2)), jnp.zeros((2, 8, 1))]}
+    tree, _ = cm.restore(3, template)
+    assert tree["cores"][0].shape == (1, 8, 4)   # saved shapes win

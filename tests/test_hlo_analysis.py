@@ -1,0 +1,71 @@
+"""Unit tests for the trip-count-aware HLO roofline analyzer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+
+def _compile_text(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_scan_flops_multiplied_by_trip_count():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+    sds = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    r = H.analyze(_compile_text(f, sds, sds))
+    assert r["flops"] == 10 * 2 * 128 ** 3
+
+
+def test_nested_scan_flops():
+    def g(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ w, None
+            c2, _ = jax.lax.scan(inner, c, None, length=5)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+    sds = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    r = H.analyze(_compile_text(g, sds, sds))
+    assert r["flops"] == 15 * 2 * 128 ** 3
+
+
+def test_plain_matmul_flops_and_bytes():
+    def f(x, w):
+        return x @ w
+    x = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    w = jax.ShapeDtypeStruct((32, 16), jnp.float32)
+    r = H.analyze(_compile_text(f, x, w))
+    assert r["flops"] == 2 * 64 * 32 * 16
+    # result + both operands read at least once
+    assert r["bytes"] >= 4 * (64 * 16 + 64 * 32 + 32 * 16)
+
+
+def test_shape_bytes_parsing():
+    assert H._nbytes("bf16[2,3]{1,0}") == 12
+    assert H._nbytes("(f32[4], s32[2])") == 24
+    assert H._nbytes("pred[]") == 1
+    assert H._nbytes("token[]") == 0
+
+
+def test_wire_models():
+    assert H._wire("all-gather", 100, 4) == 75
+    assert H._wire("all-reduce", 100, 4) == 150
+    assert H._wire("reduce-scatter", 100, 4) == 300
+    assert H._wire("collective-permute", 100, 4) == 100
+
+
+def test_instr_parser_handles_tuple_types_with_comments():
+    line = ("  %while.175 = (s32[], bf16[8,2]{1,0}, /*index=5*/f32[2,4]{1,0})"
+            " while(%tuple.244), condition=%c, body=%b, "
+            'backend_config={"known_trip_count":{"n":"28"}}')
+    ins = H._parse_instr(line)
+    assert ins.op == "while"
+    assert H._TRIP_RE.search(ins.attrs).group(1) == "28"
+    assert H._FLOW_CALLS.findall(ins.attrs) == ["%c", "%b"]

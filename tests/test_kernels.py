@@ -1,0 +1,113 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention as flash_raw
+from repro.kernels.tt_linear import tt_linear as tt_raw
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-4
+
+
+@pytest.mark.parametrize("m,k,n,r", [
+    (128, 128, 128, 8),
+    (256, 512, 256, 16),
+    (128, 256, 384, 64),
+    (384, 128, 128, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_tt_linear_shapes_dtypes(m, k, n, r, dtype):
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (m, k), dtype)
+    w = (jax.random.normal(ks[1], (k, n), jnp.float32)
+         / np.sqrt(k)).astype(dtype)
+    a = (jax.random.normal(ks[2], (k, r), jnp.float32)
+         / np.sqrt(k)).astype(dtype)
+    b = (jax.random.normal(ks[3], (r, n), jnp.float32)
+         / np.sqrt(r)).astype(dtype)
+    y = tt_raw(x, w, a, b, alpha=0.7, bm=128, bn=128, bk=128,
+               interpret=True)
+    want = ref.tt_linear_ref(x, w, a, b, alpha=0.7)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_tt_linear_zero_adapter_equals_base_matmul():
+    x = jax.random.normal(KEY, (128, 256), jnp.float32)
+    w = jax.random.normal(KEY, (256, 128), jnp.float32) / 16
+    a = jnp.zeros((256, 16))
+    b = jax.random.normal(KEY, (16, 128), jnp.float32)
+    y = tt_raw(x, w, a, b, alpha=4.0, bm=128, bn=128, bk=128,
+               interpret=True)
+    np.testing.assert_allclose(y, x @ w, atol=1e-4)
+
+
+def test_tt_linear_ops_wrapper_pads_and_batches():
+    x = jax.random.normal(KEY, (3, 5, 256), jnp.float32)  # ragged leading
+    w = jax.random.normal(KEY, (256, 128), jnp.float32) / 16
+    a = jax.random.normal(KEY, (256, 9), jnp.float32) / 16  # odd rank
+    b = jax.random.normal(KEY, (9, 128), jnp.float32) / 3
+    y = ops.tt_linear(x, w, a, b, alpha=1.3, backend="pallas",
+                      interpret=True)
+    want = ref.tt_linear_ref(x, w, a, b, alpha=1.3)
+    np.testing.assert_allclose(y, want, atol=1e-4)
+    assert y.shape == (3, 5, 128)
+
+
+@pytest.mark.parametrize("t,s,d,causal", [
+    (256, 256, 64, True),
+    (256, 256, 64, False),
+    (128, 384, 128, False),
+    (512, 512, 64, True),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes_dtypes(t, s, d, causal, dtype):
+    bh = 4
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (bh, t, d), dtype)
+    k = jax.random.normal(ks[1], (bh, s, d), dtype)
+    v = jax.random.normal(ks[2], (bh, s, d), dtype)
+    y = flash_raw(q, k, v, causal=causal, bq=128, bkv=128, interpret=True)
+    want = ref.flash_attention_ref(
+        q.reshape(1, bh, t, d).astype(jnp.float32),
+        k.reshape(1, bh, s, d).astype(jnp.float32),
+        v.reshape(1, bh, s, d).astype(jnp.float32),
+        causal=causal).reshape(bh, t, d)
+    np.testing.assert_allclose(np.asarray(y, np.float32), want,
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_flash_gqa_wrapper():
+    b, t, h, kv, d = 2, 128, 8, 2, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, t, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, t, kv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, t, kv, d), jnp.float32)
+    y = ops.flash_attention(q, k, v, causal=True, backend="pallas",
+                            interpret=True)
+    want = ops.flash_attention(q, k, v, causal=True, backend="ref")
+    np.testing.assert_allclose(y, want, atol=2e-4, rtol=2e-4)
+    assert y.shape == (b, t, h, d)
+
+
+def test_flash_matches_model_attention_path():
+    """The kernel and the model's chunked XLA path agree (same math)."""
+    from repro.models.attention import _chunked_attend
+    b, t, kvh, g, d = 1, 256, 2, 2, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, t, kvh, g, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, t, kvh, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, t, kvh, d), jnp.float32)
+    xla = _chunked_attend(q, k, v, d ** -0.5, True, 128)
+    q4 = q.reshape(b, t, kvh * g, d)
+    pal = ops.flash_attention(q4, k, v, causal=True, backend="pallas",
+                              interpret=True)
+    np.testing.assert_allclose(
+        xla.reshape(b, t, kvh * g, d), pal, atol=2e-4, rtol=2e-4)

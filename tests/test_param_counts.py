@@ -1,0 +1,100 @@
+"""Pin adapter parameter counts to the paper's published numbers.
+
+Every row below is a "Param ×10³" entry from Table 1 / Table 2 of the paper
+(MetaTT, LoRA, VeRA, LoTR on RoBERTa-base/large with M=2 adapted matrices
+q,v). This is the paper's central claim — the compression ranking — and it
+must hold *exactly*.
+"""
+import pytest
+
+from repro.core import metatt
+from repro.peft import lora, lotr, vera
+
+BASE = dict(D=768, L=12, H=12, M=2)      # RoBERTa-base
+LARGE = dict(D=1024, L=24, H=16, M=2)    # RoBERTa-large
+
+
+@pytest.mark.parametrize("D,L,M,r,expected", [
+    (768, 12, 2, 8, 13184),      # Table 1: MetaTT-4D base r=8  -> 13k
+    (768, 12, 2, 24, 44928),     # Table 1: r=24 -> 45k
+    (768, 12, 2, 64, 155648),    # Table 1: r=64 -> 156k
+    (1024, 24, 2, 16, 39424),    # Table 1: large r=16 -> 39k
+    (1024, 24, 2, 32, 92160),    # Table 1: large r=32 -> 92k
+    (768, 12, 2, 8, 13184),      # Table 2 (MTL): 13.2k row
+])
+def test_metatt_4d_counts(D, L, M, r, expected):
+    assert metatt.paper_count_4d(D, L, M, r) == expected
+    cfg = metatt.MetaTTConfig(num_layers=L, matrix_types=("q", "v"),
+                              d_in=(D, D), d_out=(D, D), rank=r)
+    assert cfg.num_params() == expected
+
+
+@pytest.mark.parametrize("D,H,L,M,r,expected", [
+    (768, 12, 12, 2, 16, 19968),     # Table 1: MetaTT-5D base r=16 -> 20k
+    (768, 12, 12, 2, 64, 159744),    # Table 1: base r=64 -> 160k
+    (1024, 16, 24, 2, 32, 77824),    # Table 1: large r=32 -> 78k
+    (1024, 16, 24, 2, 64, 241664),   # Table 1: large r=64 -> 242k
+])
+def test_metatt_5d_counts(D, H, L, M, r, expected):
+    assert metatt.paper_count_5d(D, H, L, M, r) == expected
+    cfg = metatt.MetaTTConfig(num_layers=L, matrix_types=("q", "v"),
+                              d_in=(D, D), d_out=(D, D), rank=r,
+                              variant="5d", num_heads=H, head_dim=D // H)
+    assert cfg.num_params() == expected
+
+
+@pytest.mark.parametrize("D,L,M,r,expected", [
+    (768, 12, 2, 8, 294912),     # Table 1: LoRA base r=8 -> 295k
+    (1024, 24, 2, 8, 786432),    # Table 1: LoRA large r=8 -> 786k
+])
+def test_lora_counts(D, L, M, r, expected):
+    assert lora.paper_count(D, L, M, r) == expected
+    cfg = lora.LoRAConfig(num_layers=L, matrix_types=("q", "v"),
+                          d_in=(D, D), d_out=(D, D), rank=r)
+    assert cfg.num_params() == expected
+
+
+@pytest.mark.parametrize("D,L,M,r,expected", [
+    (768, 12, 2, 1024, 43008),   # Table 1: VeRA base r=1024 -> 43k
+    (1024, 24, 2, 256, 61440),   # Table 1: VeRA large r=256 -> 61k
+])
+def test_vera_counts(D, L, M, r, expected):
+    assert vera.paper_count(D, L, M, r) == expected
+    cfg = vera.VeRAConfig(num_layers=L, matrix_types=("q", "v"),
+                          d_in=(D, D), d_out=(D, D), rank=r)
+    assert cfg.num_params() == expected
+
+
+@pytest.mark.parametrize("D,L,M,r,expected", [
+    (768, 12, 2, 40, 99840),     # Table 1: LoTR base r=40 -> 100k
+    (768, 12, 2, 80, 276480),    # Table 1: LoTR base r=80 -> 276k
+    (768, 12, 2, 88, 321024),    # Table 1: LoTR base r=88 -> 321k
+    (1024, 24, 2, 64, 327680),   # Table 1: LoTR large r=64 -> 328k
+])
+def test_lotr_counts(D, L, M, r, expected):
+    assert lotr.paper_count(D, L, M, r) == expected
+    cfg = lotr.LoTRConfig(num_layers=L, matrix_types=("q", "v"),
+                          d_in=(D, D), d_out=(D, D), rank=r)
+    assert cfg.num_params() == expected
+
+
+def test_compression_ranking_matches_paper():
+    """§2.4: MetaTT grows with the SUM across modes, LoRA with the PRODUCT.
+    At matched rank, MetaTT-4D < LoTR < LoRA for the paper's configs."""
+    for D, L in ((768, 12), (1024, 24)):
+        for r in (8, 16, 32):
+            m4 = metatt.paper_count_4d(D, L, 2, r)
+            lt = lotr.paper_count(D, L, 2, r)
+            lr = lora.paper_count(D, L, 2, r)
+            assert m4 < lt < lr
+
+
+def test_mtl_task_core_overhead():
+    """Table 2: MetaTT-(4+1)D adds ~200 params over MetaTT-4D at r=8, T=3
+    (one extra r×r core per task = T·r² = 192)."""
+    cfg4 = metatt.MetaTTConfig(num_layers=12, matrix_types=("q", "v"),
+                               d_in=(768, 768), d_out=(768, 768), rank=8)
+    cfg41 = metatt.MetaTTConfig(num_layers=12, matrix_types=("q", "v"),
+                                d_in=(768, 768), d_out=(768, 768), rank=8,
+                                variant="4+1d", num_tasks=3)
+    assert cfg41.num_params() - cfg4.num_params() == 3 * 64  # 192 ≈ "200"

@@ -1,0 +1,133 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dmrg, merge, metatt, tt
+from repro.distributed import compression
+
+jax.config.update("jax_platform_name", "cpu")
+
+_dims = st.integers(min_value=2, max_value=7)
+_rank = st.integers(min_value=1, max_value=5)
+_seed = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=st.lists(_dims, min_size=2, max_size=5), rank=_rank, seed=_seed)
+def test_tt_materialize_consistent_with_slices(shape, rank, seed):
+    """Any slice of the materialized tensor equals the core-product slice."""
+    cores = tt.random_tt(jax.random.PRNGKey(seed), shape, rank)
+    full = tt.materialize(cores)
+    assert full.shape == tuple(shape)
+    idx = tuple(np.random.default_rng(seed).integers(0, s)
+                for s in shape[1:-1])
+    np.testing.assert_allclose(tt.slice_matrix(cores, idx),
+                               full[(slice(None),) + idx], atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(rank=st.integers(min_value=1, max_value=8), seed=_seed)
+def test_svd_truncation_error_is_eckart_young(rank, seed):
+    cores = tt.random_tt(jax.random.PRNGKey(seed), (10, 8), 8)
+    merged = tt.merge_pair(cores[0], cores[1])
+    a, b, _ = tt.split_merged(merged, rank=rank)
+    err = float(jnp.linalg.norm((tt.merge_pair(a, b) - merged).reshape(-1)))
+    bound = float(tt.truncation_error(merged, rank))
+    assert err <= bound + 1e-4
+    assert err >= bound - 1e-4
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=_seed, rank=st.integers(min_value=2, max_value=6))
+def test_dmrg_never_increases_ranks_beyond_target(seed, rank):
+    p = {"cores": tt.random_tt(jax.random.PRNGKey(seed), (12, 5, 4, 12), 8)}
+    res = dmrg.dmrg_sweep(p, target_rank=rank)
+    assert all(r <= rank for r in res.ranks)
+    tt.validate_cores(res.params["cores"])
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=_seed)
+def test_dmrg_idempotent_at_same_rank(seed):
+    """Sweeping twice at the same target changes nothing (projection)."""
+    p = {"cores": tt.random_tt(jax.random.PRNGKey(seed), (12, 5, 12), 6)}
+    once = dmrg.dmrg_sweep(p, target_rank=3).params
+    twice = dmrg.dmrg_sweep(once, target_rank=3).params
+    assert dmrg.reconstruction_error(once, twice) < 1e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=_seed, alpha=st.floats(min_value=0.1, max_value=8.0))
+def test_merge_preserves_adapter_function(seed, alpha):
+    """Serving-form merge (paper §2.4) is exact for every (l, m)."""
+    cfg = metatt.MetaTTConfig(num_layers=3, matrix_types=("q", "v"),
+                              d_in=(12, 12), d_out=(12, 8), rank=3,
+                              alpha=alpha)
+    key = jax.random.PRNGKey(seed)
+    p = {"cores": tt.random_tt(key, cfg.mode_sizes, 3)}
+    lf = merge.to_lora_form(p, cfg)
+    x = jax.random.normal(key, (4, 12))
+    for l in range(3):
+        for m in ("q", "v"):
+            np.testing.assert_allclose(
+                lf.delta(cfg, x, l, m), metatt.apply(p, cfg, x, l, m),
+                atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=_seed)
+def test_zero_init_invariant_all_schemes(seed):
+    """Any init scheme containing >=1 'ze' core yields ΔW == 0 everywhere
+    (the paper's fine-tuning start condition, App. A.1)."""
+    rng = np.random.default_rng(seed)
+    toks = [rng.choice(["id", "no"]) for _ in range(4)]
+    toks[rng.integers(0, 4)] = "ze"
+    cfg = metatt.MetaTTConfig(num_layers=3, matrix_types=("q", "v"),
+                              d_in=(12, 12), d_out=(12, 12), rank=3,
+                              init="-".join(toks))
+    p = metatt.init_params(cfg, jax.random.PRNGKey(seed))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (4, 12))
+    for l in range(3):
+        for m in ("q", "v"):
+            assert float(jnp.abs(metatt.apply(p, cfg, x, l, m)).max()) == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=_seed)
+def test_int8_compression_error_bound(seed):
+    """Per-tensor symmetric int8: |x - deq(q(x))| <= scale/2 elementwise."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * 10
+    q, scale = compression.int8_encode(x)
+    err = jnp.abs(compression.int8_decode(q, scale) - x)
+    assert float(err.max()) <= float(scale) / 2 + 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=_seed)
+def test_topk_error_feedback_conserves_mass(seed):
+    """Error feedback: compressed + residual == accumulated signal."""
+    g = jax.random.normal(jax.random.PRNGKey(seed), (128,))
+    comp = compression.GradCompressor("topk", topk_frac=0.25)
+    grads = {"g": g}
+    res = comp.init_residual(grads)
+    out, new_res = comp(grads, res)
+    np.testing.assert_allclose(out["g"] + new_res["g"], g, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=_seed, r_hi=st.integers(min_value=4, max_value=8))
+def test_dmrg_preserves_function_within_truncation_bound(seed, r_hi):
+    """After a sweep, the adapter's *function* moves by at most the sum of
+    local truncation errors (triangle inequality over bonds)."""
+    cfg = metatt.MetaTTConfig(num_layers=3, matrix_types=("q", "v"),
+                              d_in=(12, 12), d_out=(12, 12), rank=r_hi)
+    p = {"cores": tt.random_tt(jax.random.PRNGKey(seed), cfg.mode_sizes,
+                               r_hi)}
+    swept = dmrg.dmrg_sweep(p, target_rank=r_hi).params  # same rank: exact
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 12))
+    for l in range(3):
+        np.testing.assert_allclose(
+            metatt.apply(p, cfg, x, l, "q"),
+            metatt.apply(swept, cfg, x, l, "q"), atol=1e-3)
