@@ -1,7 +1,19 @@
-"""Paper §2.4 — inference-time merging: decode-step latency with the live TT
-contraction vs the pre-merged (fold-into-dense) weights. The paper's claim:
-after merging, MetaTT serving cost == LoRA == base model."""
+"""Serving benchmarks.
+
+1. Paper §2.4 decode-step latency: live TT contraction vs pre-merged
+   (fold-into-dense) weights vs the bare base model — the paper's claim is
+   merged MetaTT == LoRA == base.
+2. Engine throughput: the jitted-while-loop continuous-batching engine
+   (repro/serving/) serving a MIXED-TASK batch (>= 2 distinct task ids per
+   decode batch, one shared 4+1d TT) vs the seed's one-request-shape
+   per-token Python loop, in tokens/sec.
+
+    PYTHONPATH=src python benchmarks/bench_serving.py [--smoke]
+"""
 from __future__ import annotations
+
+import argparse
+import time
 
 import jax
 import jax.numpy as jnp
@@ -10,13 +22,14 @@ from benchmarks.common import emit, time_call
 from repro import configs as registry
 from repro.config.base import RunConfig, SHAPES
 from repro.core import tt as ttlib
-from repro.core.merge import fold_into_dense
+from repro.core.merge import fold_transformer
 from repro.models import model as M, transformer as T
 from repro.peft import api as peft_api
+from repro.serving import AdapterRuntime, Engine, Request
+from repro.serving import engine as se
 
 
-def run() -> list:
-    rows = []
+def _decode_step_rows(rows) -> None:
     cfg = registry.get_smoke_config("stablelm-1.6b")
     run_cfg = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
                         adapter_kind="metatt", adapter_rank=8)
@@ -37,15 +50,9 @@ def run() -> list:
     us_live = time_call(live, token, caches)
     rows.append(emit("serving/decode_live_tt", us_live, "adapter=metatt-r8"))
 
-    # merged: fold ΔW into q/v, run with NO adapter (paper's pre-compute)
-    folded = dict(params["base"])
-    blk = dict(folded["blocks"][0])
-    mixer = dict(blk["mixer"])
-    merged = fold_into_dense(params["adapter"], spec.cfg,
-                             {"attn_q": mixer["wq"], "attn_v": mixer["wv"]})
-    mixer["wq"], mixer["wv"] = merged["attn_q"], merged["attn_v"]
-    blk["mixer"] = mixer
-    folded["blocks"] = [blk]
+    # merged: fold ΔW into every adapted weight, run with NO adapter
+    folded = fold_transformer(params["adapter"], spec.cfg, params["base"],
+                              cfg)
     merged_fn = jax.jit(lambda tok, c: T.decode_step(
         folded, cfg, peft_api.NONE, {}, None, tok, c, pos)[0])
     us_merged = time_call(merged_fn, token, caches)
@@ -57,8 +64,82 @@ def run() -> list:
     us_base = time_call(base_fn, token, caches)
     rows.append(emit("serving/decode_base_no_adapter", us_base,
                      f"merged_vs_base_ratio={us_merged/us_base:.3f}"))
+
+
+def _engine_rows(rows, *, smoke: bool) -> None:
+    """Mixed-task continuous batching vs the seed per-token Python loop."""
+    n_req, n_new, slots, n_tasks = (4, 8, 2, 2) if smoke else (12, 24, 4, 3)
+    cfg = registry.get_smoke_config("stablelm-1.6b")
+    run_cfg = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                        adapter_kind="metatt", adapter_variant="4+1d",
+                        num_tasks=n_tasks, adapter_rank=8)
+    spec = M.build_adapter_spec(run_cfg)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, spec, key)
+    params["adapter"] = {"cores": ttlib.random_tt(key, spec.cfg.mode_sizes,
+                                                  8, scale=0.5)}
+    keys = jax.random.split(key, n_req)
+    prompts = [jax.random.randint(keys[i], (4 + i % 4,), 0, cfg.vocab_size)
+               for i in range(n_req)]
+    # >= 2 distinct task ids in every decode batch, one shared 4+1d TT
+    reqs = [Request(p, n_new, task=i % n_tasks)
+            for i, p in enumerate(prompts)]
+    cache_len = 8 + n_new
+
+    rt = AdapterRuntime.build("live", params["base"], spec,
+                              params["adapter"], params["frozen"])
+    eng = Engine(cfg, rt, max_batch=slots, cache_len=cache_len,
+                 out_cap=n_new)
+    eng.generate(reqs)                       # compile
+    t0 = time.perf_counter()
+    outs = eng.generate(reqs)
+    dt_eng = time.perf_counter() - t0
+    toks = sum(len(o) for o in outs)
+    tasks_served = len({r.task for r in reqs})
+    rows.append(emit("serving/engine_mixed_task_continuous",
+                     dt_eng / toks * 1e6,
+                     f"tok_per_s={toks/dt_eng:.1f},slots={slots},"
+                     f"tasks={tasks_served}"))
+
+    # seed path: per-token Python loop, one request shape at a time
+    prefill = se.make_prefill(cfg, spec, cache_len)
+    step = se.make_serve_step(cfg, spec)
+
+    def one_shot(prompt, task):
+        lg, caches, _ = prefill(params["base"], params["adapter"],
+                                params["frozen"], prompt[None], None, None,
+                                task)
+        tok = jnp.argmax(lg[:, -1], axis=-1)[:, None]
+        n = 1
+        for i in range(n_new - 1):
+            lg, caches = step(params["base"], params["adapter"],
+                              params["frozen"], tok, caches,
+                              jnp.int32(prompt.shape[0] + i), None, task)
+            tok = jnp.argmax(lg, axis=-1)[:, None]
+            n += 1
+        jax.block_until_ready(tok)
+        return n
+
+    for p in {int(p.shape[0]): p for p in prompts}.values():
+        one_shot(p, jnp.int32(0))            # compile every prompt shape
+    t0 = time.perf_counter()
+    toks_py = sum(one_shot(p, jnp.int32(r.task))
+                  for p, r in zip(prompts, reqs))
+    dt_py = time.perf_counter() - t0
+    rows.append(emit("serving/python_loop_one_shot", dt_py / toks_py * 1e6,
+                     f"tok_per_s={toks_py/dt_py:.1f},"
+                     f"speedup_engine={dt_py/toks_py*toks/dt_eng:.2f}x"))
+
+
+def run(*, smoke: bool = False) -> list:
+    rows = []
+    _decode_step_rows(rows)
+    _engine_rows(rows, smoke=smoke)
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes for CI")
+    run(smoke=ap.parse_args().smoke)

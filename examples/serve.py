@@ -1,85 +1,97 @@
-"""Batched serving with a MetaTT adapter (paper §2.4).
+"""Continuous-batching serving with a MetaTT adapter (paper §2.4 + §3.2).
 
-Demonstrates the two serving modes:
-  * live   — the TT contraction runs per decode step (two small GEMMs),
-  * merged — ΔW folded into the frozen weights once (zero overhead;
-             "matching the speeds of LoRA" per the paper).
+Serves a mixed-task request stream through the slot engine
+(repro/serving/engine.py) under each adapter runtime:
 
-    PYTHONPATH=src python examples/serve.py [--tokens 16]
+  * live   — the TT contraction runs per decode step; a (B,) task-id vector
+             gathers per-slot C[l, t, m] slices from ONE shared 4+1d TT, so
+             a single decode batch mixes tasks.
+  * lora   — middle cores pre-folded into the left boundary (two GEMMs per
+             adapted matrix; "matching the speeds of LoRA" per the paper).
+  * merged — ΔW of one task folded into the frozen weights (zero overhead);
+             single-task streams only.
+
+    PYTHONPATH=src python examples/serve.py [--tokens 16] [--requests 8]
 """
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs as registry
 from repro.config.base import RunConfig, SHAPES
 from repro.core import tt as ttlib
-from repro.core.merge import fold_into_dense
 from repro.models import model as M
-from repro.peft import api as peft_api
-from repro.train import train_step as ts
+from repro.serving import AdapterRuntime, Engine, Request
 
 
-def generate(base, cfg, spec, adapter, prompt, steps, cache_len):
-    """Greedy prefill + decode."""
-    prefill = ts.make_prefill(cfg, spec, cache_len)
-    logits, caches, _ = prefill(base, adapter, {}, prompt)
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-    out = [tok]
-    pos = prompt.shape[1]
-    step = ts.make_serve_step(cfg, spec)
-    for i in range(steps - 1):
-        lg, caches = step(base, adapter, {}, tok, caches,
-                          jnp.int32(pos + i))
-        tok = jnp.argmax(lg, axis=-1)[:, None]
-        out.append(tok)
-    return jnp.concatenate(out, axis=1)
+def serve(cfg, runtime, reqs, *, max_batch, cache_len, out_cap):
+    eng = Engine(cfg, runtime, max_batch=max_batch, cache_len=cache_len,
+                 out_cap=out_cap)
+    eng.generate(reqs)                    # warm-up: compile once
+    t0 = time.perf_counter()
+    outs = eng.generate(reqs)
+    dt = time.perf_counter() - t0
+    toks = sum(len(o) for o in outs)
+    return outs, dt, toks
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--tokens", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4, help="decode slots")
+    ap.add_argument("--tasks", type=int, default=3)
     args = ap.parse_args()
 
     cfg = registry.get_smoke_config("stablelm-1.6b")
     run = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
-                    adapter_kind="metatt", adapter_rank=8)
+                    adapter_kind="metatt", adapter_variant="4+1d",
+                    num_tasks=args.tasks, adapter_rank=8)
     spec = M.build_adapter_spec(run)
     key = jax.random.PRNGKey(0)
     params = M.init_params(cfg, spec, key)
     params["adapter"] = {"cores": ttlib.random_tt(
-        key, spec.cfg.mode_sizes, 8, scale=0.1)}
-    prompt = jax.random.randint(key, (args.batch, 8), 0, cfg.vocab_size)
-    cache_len = prompt.shape[1] + args.tokens
+        key, spec.cfg.mode_sizes, 8, scale=0.5)}
+    base, adapter, frozen = (params["base"], params["adapter"],
+                             params["frozen"])
 
-    t0 = time.perf_counter()
-    live = generate(params["base"], cfg, spec, params["adapter"], prompt,
-                    args.tokens, cache_len)
-    t_live = time.perf_counter() - t0
+    keys = jax.random.split(key, args.requests)
+    reqs = [Request(jax.random.randint(keys[i], (4 + i % 5,), 0,
+                                       cfg.vocab_size),
+                    args.tokens, task=i % args.tasks)
+            for i in range(args.requests)]
+    cache_len = 16 + args.tokens
+    kw = dict(max_batch=args.batch, cache_len=cache_len,
+              out_cap=args.tokens)
 
-    # merge ΔW into q/v once, then serve with NO adapter at all
-    folded = dict(params["base"])
-    blk = dict(folded["blocks"][0])
-    mixer = dict(blk["mixer"])
-    merged = fold_into_dense(params["adapter"], spec.cfg,
-                             {"attn_q": mixer["wq"], "attn_v": mixer["wv"]})
-    mixer["wq"], mixer["wv"] = merged["attn_q"], merged["attn_v"]
-    blk["mixer"] = mixer
-    folded["blocks"] = [blk]
-    t0 = time.perf_counter()
-    merged_out = generate(folded, cfg, peft_api.NONE, {}, prompt,
-                          args.tokens, cache_len)
-    t_merged = time.perf_counter() - t0
+    rt_live = AdapterRuntime.build("live", base, spec, adapter, frozen)
+    live, t_live, toks = serve(cfg, rt_live, reqs, **kw)
 
-    same = bool(jnp.all(live == merged_out))
-    print(f"generated {args.tokens} tokens x batch {args.batch}")
-    print(f"live TT adapter : {t_live:.2f}s (incl. compile)")
-    print(f"merged weights  : {t_merged:.2f}s (incl. compile)")
-    print(f"identical greedy output: {same}")
-    print(f"first sequence: {live[0].tolist()}")
+    rt_lora = AdapterRuntime.build("lora", base, spec, adapter, frozen)
+    lora, t_lora, _ = serve(cfg, rt_lora, reqs, **kw)
+
+    # merged: one task's ΔW folded into the weights -> zero-overhead stream
+    # for that task (mixed-task streams need live/lora)
+    rt_merged = AdapterRuntime.build("merged", base, spec, adapter, frozen,
+                                     model_cfg=cfg, task=0)
+    t0_reqs = [r for r in reqs if r.task == 0]
+    merged, t_merged, _ = serve(cfg, rt_merged, t0_reqs, **kw)
+
+    same_lora = all(a.tolist() == b.tolist() for a, b in zip(live, lora))
+    live_t0 = [o for r, o in zip(reqs, live) if r.task == 0]
+    same_merged = all(a.tolist() == b.tolist()
+                      for a, b in zip(live_t0, merged))
+    print(f"served {args.requests} requests x {args.tokens} tokens through "
+          f"{args.batch} slots, {args.tasks} tasks mixed per batch")
+    print(f"live TT runtime   : {t_live:.2f}s  {toks/t_live:7.1f} tok/s "
+          "(steady state)")
+    print(f"lora-form runtime : {t_lora:.2f}s  {toks/t_lora:7.1f} tok/s "
+          f"(identical output: {same_lora})")
+    print(f"merged (task 0)   : {t_merged:.2f}s "
+          f"(identical output: {same_merged})")
+    for i in range(min(3, len(reqs))):
+        print(f"request {i} (task {reqs[i].task}): {live[i].tolist()}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 test suite + serving benchmark smoke run.
+#
+#   scripts/ci.sh            # full tier-1 + serving smoke bench
+#   scripts/ci.sh -m 'not slow'   # extra pytest args pass through
+set -euo pipefail
+cd "$(dirname "$0")/.."
+# src for the library, repo root for the benchmarks package
+export PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH}
+
+python -m pytest -x -q "$@"
+python benchmarks/bench_serving.py --smoke

@@ -16,6 +16,7 @@ from __future__ import annotations
 import dataclasses
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.metatt import MetaTTConfig, Params, step_factors
 
@@ -28,12 +29,7 @@ class LoRAForm:
 
     def delta(self, cfg: MetaTTConfig, x, layer: int, m: str,
               task: int | None = None):
-        mi = cfg.m_index(m)
-        a = (self.a[layer, task, mi] if task is not None
-             else self.a[layer, mi])
-        a = a[: x.shape[-1]]
-        b = self.b[:, : cfg.d_out[mi]]
-        return (x @ a.astype(x.dtype)) @ b.astype(x.dtype)
+        return lora_form_delta(self.a[layer], self.b, cfg, x, m, task=task)
 
 
 def to_lora_form(params: Params, cfg: MetaTTConfig) -> LoRAForm:
@@ -44,23 +40,148 @@ def to_lora_form(params: Params, cfg: MetaTTConfig) -> LoRAForm:
     return LoRAForm(a=a, b=f.g4)
 
 
+def lora_form_delta(a_l: jnp.ndarray, b: jnp.ndarray, cfg: MetaTTConfig,
+                    x: jnp.ndarray, m: str, *,
+                    task=None) -> jnp.ndarray:
+    """Delta from one layer-slice of ``to_lora_form`` factors (the serving
+    runtime's "lora" mode — two GEMMs per adapted matrix, alpha pre-folded).
+
+    a_l: ``LoRAForm.a[layer]`` — ([T,] M, d_in_max, r); b: (r, d_out_max).
+    task: scalar or per-request (B,) vector (4+1d batched task routing).
+    """
+    mi = cfg.m_index(m)
+    if cfg.variant == "4+1d":
+        if task is None:
+            raise ValueError("variant 4+1d needs a task index")
+        a = a_l[task, mi]
+    elif cfg.variant == "4+ed":
+        a = a_l[0 if task is None else task, mi]
+    else:
+        a = a_l[mi]
+    a = a[..., : x.shape[-1], :].astype(x.dtype)
+    bb = b[:, : cfg.d_out[mi]].astype(x.dtype)
+    if a.ndim == 3:                   # (B, d_in, r): per-request task gather
+        p = jnp.einsum("b...d,bdr->b...r", x, a)
+    else:
+        p = x @ a
+    return p @ bb
+
+
 def fold_into_dense(params: Params, cfg: MetaTTConfig,
-                    weights: dict, *, task: int | None = None) -> dict:
+                    weights: dict, *, task: int | None = None,
+                    layers=None) -> dict:
     """Return a copy of ``weights`` with ΔW added into each adapted matrix.
 
-    ``weights`` maps matrix-type name -> stacked (L, d_in, d_out) array (the
-    scan-stacked layout used by the model zoo). Zero serving overhead after
-    this fold; un-merging is exact (subtract the same delta).
+    ``weights`` maps matrix-type name -> stacked (L', d_in, d_out) array (the
+    scan-stacked layout used by the model zoo). ``layers`` optionally names
+    the global layer ids (length L') each stacked row corresponds to —
+    ``None`` means rows 0..L-1 of the full TT layer axis. Zero serving
+    overhead after this fold; un-merging is exact (subtract the same delta).
     """
     f = step_factors(params, cfg)
+    c_full = f.c if layers is None else jnp.take(
+        f.c, jnp.asarray(layers, jnp.int32), axis=0)
     out = dict(weights)
     for mi, name in enumerate(cfg.matrix_types):
         if name not in weights:
             continue
         w = weights[name]
-        c = f.c[:, task, mi] if task is not None else f.c[:, mi]
+        c = c_full[:, task, mi] if task is not None else c_full[:, mi]
         delta = cfg.alpha * jnp.einsum(
             "dr,lrs,se->lde",
             f.g1[: w.shape[1]], c, f.g4[:, : w.shape[2]])
         out[name] = (w + delta.astype(w.dtype))
+    return out
+
+
+# --------------------------------------------------------------------------
+# whole-model fold (all pattern positions, all super-blocks)
+# --------------------------------------------------------------------------
+
+# adapted matrix type -> (required mixer kind or None, block group, weight).
+# Pattern entry p of blocks holds layers [p, P+p, 2P+p, ...] stacked over nb
+# (transformer._split_layers layout), so its C slice is c[p::P].
+_FOLD_PATHS = {
+    "attn_q": ("attn", "mixer", "wq"), "attn_k": ("attn", "mixer", "wk"),
+    "attn_v": ("attn", "mixer", "wv"), "attn_o": ("attn", "mixer", "wo"),
+    "xattn_q": (None, "xattn", "wq"), "xattn_k": (None, "xattn", "wk"),
+    "xattn_v": (None, "xattn", "wv"), "xattn_o": (None, "xattn", "wo"),
+    "ffn_gate": (None, "ffn", "wg"), "ffn_up": (None, "ffn", "wu"),
+    "ffn_down": (None, "ffn", "wd"),
+    "mamba_in": ("mamba", "mixer", "w_in"),
+    "mamba_out": ("mamba", "mixer", "w_out"),
+    "mlstm_q": ("mlstm", "mixer", "wq"), "mlstm_v": ("mlstm", "mixer", "wv"),
+    "mlstm_o": ("mlstm", "mixer", "w_out"),
+    "slstm_z": ("slstm", "mixer", "w_z"),
+    "slstm_o": ("slstm", "mixer", "w_out"),
+}
+
+
+def _fold_block_list(params, cfg, blocks, pattern, layer_ids, task):
+    """Fold ΔW into one block list (leaves (nb, d_in, d_out), one entry per
+    pattern position). layer_ids: (nb*P,) global TT layer ids in scan order."""
+    p_len = len(pattern)
+    out = []
+    for p, blk in enumerate(blocks):
+        mixer_kind, ffn_kind = pattern[p]
+        nblk = {k: (dict(v) if isinstance(v, dict) else v)
+                for k, v in blk.items()}
+        if (ffn_kind == "moe" and "s_wg" in nblk.get("ffn", {})
+                and any(t.startswith("ffn_") for t in cfg.matrix_types)):
+            # the live path adapts the shared-expert FFN (models/moe.py
+            # dense_ffn on s_wg/s_wu/s_wd); folding it isn't supported, and
+            # skipping it would silently diverge from live serving.
+            raise ValueError(
+                "ffn_* adapters on a MoE block with shared experts cannot "
+                "be folded; use the live or lora runtime")
+        weights = {}
+        dests = {}
+        for name in cfg.matrix_types:
+            req, grp, wn = _FOLD_PATHS[name]
+            if req is not None and req != mixer_kind:
+                continue
+            if grp not in nblk or wn not in nblk[grp]:
+                continue
+            weights[name] = nblk[grp][wn]
+            dests[name] = (grp, wn)
+        if weights:
+            merged = fold_into_dense(params, cfg, weights, task=task,
+                                     layers=layer_ids[p::p_len])
+            for name, (grp, wn) in dests.items():
+                nblk[grp][wn] = merged[name]
+        out.append(nblk)
+    return out
+
+
+def fold_transformer(params: Params, cfg: MetaTTConfig, base: dict,
+                     model_cfg, *, task: int | None = None) -> dict:
+    """Fold ΔW into EVERY adapted weight of a transformer base — all pattern
+    positions and all super-blocks (and the encoder stack for enc-dec
+    models), not just blocks[0]. Returns a new base pytree; ``model_cfg`` is
+    the repro.config.base.ModelConfig the base was built from.
+
+    For the 4+1d/4+ed variants the fold freezes ONE slice of the task/expert
+    axis into the dense weights, so ``task`` must be given; mixed-task
+    serving needs the live or lora runtime instead.
+    """
+    unfoldable = [t for t in cfg.matrix_types if t not in _FOLD_PATHS]
+    if unfoldable:
+        raise ValueError(
+            f"matrix types {unfoldable} cannot be folded into dense weights; "
+            "serve them with the live or lora adapter runtime")
+    if cfg.variant in ("4+1d", "4+ed") and task is None:
+        raise ValueError(
+            f"variant {cfg.variant} folds a single task/expert slice — pass "
+            "task=<id> (mixed-task batches need the live/lora runtime)")
+    out = dict(base)
+    off = model_cfg.encoder_layers if model_cfg.is_encdec else 0
+    dec_ids = np.arange(model_cfg.num_layers) + off
+    out["blocks"] = _fold_block_list(params, cfg, base["blocks"],
+                                     model_cfg.block_pattern, dec_ids, task)
+    if model_cfg.is_encdec and "enc_blocks" in base:
+        # deferred: models.transformer -> peft.api -> core.merge is a cycle
+        from repro.models.transformer import ENC_PATTERN
+        enc_ids = np.arange(model_cfg.encoder_layers)
+        out["enc_blocks"] = _fold_block_list(
+            params, cfg, base["enc_blocks"], ENC_PATTERN, enc_ids, task)
     return out

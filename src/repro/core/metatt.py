@@ -235,28 +235,40 @@ def project_in(f: StepFactors, cfg: MetaTTConfig, x: jnp.ndarray,
 def delta_out(f: StepFactors, cfg: MetaTTConfig, p: jnp.ndarray,
               c_l: jnp.ndarray, m: str, *,
               task: jnp.ndarray | int | None = None) -> jnp.ndarray:
-    """α · (P · C[l, m]) · G4[:, :d_out(m)].
+    """α · (P · C[l, t(b), m]) · G4[:, :d_out(m)].
 
     c_l: this layer's slice of ``StepFactors.c`` — shape (M, r, r) for
     4d/5d, (T|E, M, r, r) for the 5-core variants (supplied by the scan).
-    task: task/expert index (scalar) for 4+1d/4+ed.
+    task: task/expert index for 4+1d/4+ed. Either a scalar (whole batch on
+    one task) or a (B,) vector of per-request task ids — the vector form
+    gathers a per-row C[l, t_b, m] slice from the shared TT so one batch
+    mixes tasks (the serving engine's multi-task routing, paper Eq. (4)/(6)).
     """
     mi = cfg.m_index(m)
+    batched = False
     if cfg.variant == "4+1d":
         if task is None:
             raise ValueError("variant 4+1d needs a task index")
-        c_lm = c_l[task, mi]
+        batched = jnp.ndim(task) >= 1
+        c_lm = c_l[task, mi]          # scalar: (r, r); (B,): (B, r, r)
     elif cfg.variant == "4+ed":
         # non-expert matrix types read the shared slice 0 of the expert axis;
         # expert-indexed application happens inside the MoE sorted path
         # (models/moe.py::_expert_delta).
+        batched = task is not None and jnp.ndim(task) >= 1
         c_lm = c_l[0 if task is None else task, mi]
     else:
         c_lm = c_l[mi]
     d_out = cfg.d_out[mi]
     g4 = f.g4 if d_out == f.g4.shape[1] else f.g4[:, :d_out]
-    y = (p @ c_lm.astype(p.dtype)) @ g4.astype(p.dtype)
-    return cfg.alpha * y
+    c_lm = c_lm.astype(p.dtype)
+    if batched:
+        # per-request routing: row b of p (B, ..., r) hits its own C slice.
+        # (einsum rather than @ so a 2-D p cannot silently outer-broadcast.)
+        q = jnp.einsum("b...r,brs->b...s", p, c_lm)
+    else:
+        q = p @ c_lm
+    return cfg.alpha * (q @ g4.astype(p.dtype))
 
 
 def apply(params: Params, cfg: MetaTTConfig, x: jnp.ndarray, layer: int,

@@ -1,0 +1,12 @@
+"""Version-compat shims for Pallas TPU API drift.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` upstream;
+depending on the installed JAX only one of the two exists. Kernels import
+``CompilerParams`` from here so they compile against either version.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _kernel(x_ref, w_ref, a_ref, b_ref, out_ref, acc_ref, accp_ref, *,
             alpha: float, k_steps: int):
@@ -86,7 +88,7 @@ def tt_linear(x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray,
             pltpu.VMEM((bm, bn), jnp.float32),
             pltpu.VMEM((bm, r), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w, a, b)

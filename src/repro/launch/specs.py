@@ -24,6 +24,7 @@ from repro.distributed import GradCompressor
 from repro.models import model as model_lib
 from repro.models import transformer
 from repro.peft import api as peft_api
+from repro.serving import engine as serving_engine
 from repro.sharding import rules
 from repro.train import train_step as ts
 
@@ -139,7 +140,7 @@ def input_specs(run: RunConfig, mesh: Mesh) -> dict:
                     mesh, _batch_first)["t"]
     pos = _attach({"p": jax.ShapeDtypeStruct((), jnp.int32)},
                   mesh, _repl_spec)["p"]
-    serve = ts.make_serve_step(cfg, spec)
+    serve = serving_engine.make_serve_step(cfg, spec)
     args = [base, adapter, frozen, token, caches, pos]
     if cfg.is_encdec:
         enc = _attach({"e": jax.ShapeDtypeStruct(

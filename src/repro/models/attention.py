@@ -124,17 +124,29 @@ def attention(x: jnp.ndarray, w: dict, ctx: AdapterCtx, cfg: ModelConfig, *,
             k = apply_rope(k, positions, cfg.rope_theta)
 
     if cache is not None and kv_x is None:
-        # ---- self-attention decode: one new token into a full-length cache
+        # ---- self-attention decode: one new token into a full-length cache.
+        # cache_pos is a scalar (whole batch at one position) or a (B,)
+        # vector of per-row positions (the serving engine's decode slots —
+        # each slot advances independently under continuous batching).
         assert t == 1, "decode path expects a single query token"
-        ck = jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
-        cv = jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
+        if jnp.ndim(cache_pos) == 0:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
+        else:
+            rows = jnp.arange(b)
+            ck = cache["k"].at[rows, cache_pos].set(
+                k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[rows, cache_pos].set(
+                v[:, 0].astype(cache["v"].dtype))
         ck = maybe_shard(ck, BATCH, "model", None, None)
         cv = maybe_shard(cv, BATCH, "model", None, None)
         s_len = ck.shape[1]
         qh = q.reshape(b, 1, n_kv, g, hd)
-        mask = (jnp.arange(s_len) <= cache_pos)[None, None, None, None, :]
+        cp = jnp.broadcast_to(jnp.asarray(cache_pos), (b,))
+        mask = (jnp.arange(s_len)[None, :] <= cp[:, None]
+                )[:, None, None, None, :]
         out = _softmax_attend(qh, ck, cv, mask, scale)
         new_cache = {"k": ck, "v": cv}
     else:

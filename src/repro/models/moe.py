@@ -37,6 +37,7 @@ from jax.sharding import PartitionSpec as P
 from repro.config.base import ModelConfig
 from repro.models.layers import AdapterCtx, adapted_linear, dense_ffn
 from repro.sharding import batch_axes, current_mesh
+from repro.sharding.compat import shard_map
 
 
 def _router(x, w_router, n_k):
@@ -78,6 +79,13 @@ def _expert_delta(ctx: AdapterCtx, h: jnp.ndarray, lo, n_local: int,
         c_loc = c_loc[:, mi].astype(h.dtype)            # (E_local, r, r)
         p = h @ g1                                      # (E_local, C, r)
         return cfg.alpha * (jnp.einsum("ecr,ers->ecs", p, c_loc) @ g4)
+    if ctx.task is not None and jnp.ndim(ctx.task) >= 1:
+        # h is expert-sorted (E_local, C, ff): its leading axis is experts,
+        # so a per-request (B,) task vector cannot be gathered against it
+        # (and would silently mis-route whenever E_local == B).
+        raise NotImplementedError(
+            "per-request task vectors cannot index the expert-sorted "
+            "moe_down delta; use a scalar task")
     from repro.peft import api as peft_api
     return peft_api.adapter_delta(spec, ctx.broadcast, ctx.layer, h,
                                   "moe_down", task=ctx.task)
@@ -202,7 +210,7 @@ def moe_ffn(x: jnp.ndarray, w: dict, ctx: AdapterCtx, cfg: ModelConfig):
                              wg_l, wu_l, wd_l, ctx_l, cfg)
             return jax.lax.psum(y_l, "model")
 
-        y = jax.shard_map(
+        y = shard_map(
             shard_fn, mesh=mesh,
             in_specs=(P(bspec, None), P(bspec, None), P(bspec, None),
                       wg_spec, wg_spec, wd_spec, adapter_specs),

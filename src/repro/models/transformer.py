@@ -299,12 +299,17 @@ class ModelOutputs:
     enc_out: Any = None
 
 
+# the (fixed) encoder super-block pattern — shared with core/merge.py's
+# whole-model fold so the two can't drift
+ENC_PATTERN = (("attn", "dense"),)
+
+
 def encode(base, cfg: ModelConfig, enc_embeds, spec, broadcast, per_layer):
     """Whisper-style encoder over precomputed (stub) frame embeddings."""
     h = maybe_shard(enc_embeds.astype(cfg.compute_dtype), BATCH, SEQ, None)
     pos = jnp.arange(h.shape[1])
     h, _, aux = run_blocks(
-        h, base["enc_blocks"], (("attn", "dense"),), spec, broadcast,
+        h, base["enc_blocks"], ENC_PATTERN, spec, broadcast,
         per_layer, cfg, causal=False, positions=pos, layer_offset=0,
         nb=cfg.encoder_layers)
     h = norm(h, jax.tree_util.tree_map(lambda a: a[0],
@@ -376,12 +381,30 @@ def init_caches(cfg: ModelConfig, batch: int, length: int, dtype) -> list:
     return out
 
 
+def insert_cache_slot(caches, req_caches, slot):
+    """Write a batch-1 cache pytree into batch row ``slot`` of a decode
+    cache (leaves stacked (nb, B, ...)): the serving engine's prefill-into-
+    slot step. ``slot`` may be a traced scalar."""
+    def one(c, c1):
+        return jax.lax.dynamic_update_slice(
+            c, c1.astype(c.dtype), (0, slot) + (0,) * (c.ndim - 2))
+    return jax.tree_util.tree_map(one, caches, req_caches)
+
+
 def decode_step(base, cfg: ModelConfig, spec, broadcast, per_layer, token,
                 caches, cache_pos, *, enc_out=None, task=None):
-    """One decode step: token (B, 1) -> (logits (B, V), new caches)."""
+    """One decode step: token (B, 1) -> (logits (B, V), new caches).
+
+    cache_pos: scalar, or a (B,) vector of per-row positions (continuous-
+    batching slots — see repro/serving/engine.py)."""
     h = embed_tokens(token, base["embed"]["tok"], cfg.compute_dtype)
     h = maybe_shard(h, BATCH, None, None)
-    positions = cache_pos[None] if jnp.ndim(cache_pos) == 0 else cache_pos
+    if jnp.ndim(cache_pos) == 0:
+        positions = cache_pos[None]
+    elif jnp.ndim(cache_pos) == 1:
+        positions = cache_pos[:, None]      # (B, 1): per-slot RoPE phase
+    else:
+        positions = cache_pos
     layer_offset = cfg.encoder_layers if cfg.is_encdec else 0
     h, new_caches, _ = run_blocks(
         h, base["blocks"], cfg.block_pattern, spec, broadcast, per_layer,

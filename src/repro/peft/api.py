@@ -27,6 +27,7 @@ from typing import Any, Optional, Union
 import jax
 import jax.numpy as jnp
 
+from repro.core import merge as _merge
 from repro.core import metatt as _metatt
 from repro.peft import lora as _lora
 from repro.peft import lotr as _lotr
@@ -100,9 +101,22 @@ def adapter_delta(spec: AdapterSpec, broadcast, layer_slice, x: jnp.ndarray,
     mi = cfg.m_index(m) if hasattr(cfg, "m_index") else \
         cfg.matrix_types.index(m)
     if spec.kind == "metatt":
-        f = _metatt.StepFactors(g1=broadcast["g1"], c=None, g4=broadcast["g4"])
-        p = _metatt.project_in(f, cfg, x, m)
-        return _metatt.delta_out(f, cfg, p, layer_slice["c"], m, task=task)
+        # two factor layouts exist for metatt: {"c": ...} is the canonical
+        # per-step form from adapter_factors; {"a": ...} is the pre-merged
+        # to_lora_form produced only by serving AdapterRuntime("lora") —
+        # middle cores folded into A, so the delta is two GEMMs (paper §2.4).
+        if "c" in layer_slice:
+            f = _metatt.StepFactors(g1=broadcast["g1"], c=None,
+                                    g4=broadcast["g4"])
+            p = _metatt.project_in(f, cfg, x, m)
+            return _metatt.delta_out(f, cfg, p, layer_slice["c"], m,
+                                     task=task)
+        if "a" in layer_slice:
+            return _merge.lora_form_delta(layer_slice["a"], broadcast["g4"],
+                                          cfg, x, m, task=task)
+        raise ValueError(
+            f"metatt per-layer factors must contain 'c' or 'a'; got "
+            f"{sorted(layer_slice)}")
     if spec.kind == "lora":
         return _lora.delta(cfg, layer_slice, x, mi)
     if spec.kind == "vera":

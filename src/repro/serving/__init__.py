@@ -1,0 +1,11 @@
+"""Serving subsystem: continuous-batching engine, adapter runtimes,
+in-graph sampling (README §Serving).
+
+  Engine          — slot-based continuous batching, jitted while_loop decode
+  AdapterRuntime  — live TT | to_lora_form | fold_into_dense | none
+  SamplingConfig  — greedy / temperature / top-k, applied in-graph
+"""
+from repro.serving.adapter_runtime import AdapterRuntime  # noqa: F401
+from repro.serving.engine import (DecodeState, Engine,  # noqa: F401
+                                  Request, make_prefill, make_serve_step)
+from repro.serving.sampling import SamplingConfig, sample  # noqa: F401

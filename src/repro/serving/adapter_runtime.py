@@ -1,0 +1,111 @@
+"""Unified adapter runtime for serving (paper §2.4 + Eq. (4)/(6)).
+
+One MetaTT checkpoint can be served three ways; the runtime picks the mode
+and hands the engine a uniform (spec, base, broadcast, per_layer) bundle:
+
+  live   — the TT contraction runs per decode step (G1 / C[l,t,m] / G4:
+           two rank-r GEMMs + one r×D GEMM per adapted matrix). Supports
+           per-request task routing on the 4+1d task axis.
+  lora   — ``core/merge.to_lora_form`` pre-folds the middle cores into the
+           left boundary once (A = α·G1·C), so serving runs exactly two
+           GEMMs per adapted matrix — "matching the speeds of LoRA" per the
+           paper. Also supports per-request task routing (the task axis
+           survives the fold as a leading axis of A).
+  merged — ``core/merge.fold_transformer`` adds ΔW into the frozen weights
+           (zero serving overhead). The 4+1d task axis is frozen to ONE
+           task id at fold time, so mixed-task batches must use live/lora.
+  none   — base model only.
+
+Task routing: runtimes whose mode keeps the task axis (live/lora on a 4+1d
+adapter) report ``tasked=True``; the engine then threads a per-slot (B,)
+task-id vector into every adapter delta, which gathers per-row C[l, t_b, m]
+slices from the SHARED tensor train — one decode batch mixes tasks with no
+per-task adapter stacks (contrast LoRETTA / TT-LoRA deployments).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+from repro.core import merge
+from repro.peft import api as peft_api
+
+MODES = ("live", "lora", "merged", "none")
+
+
+@dataclasses.dataclass
+class AdapterRuntime:
+    """Everything the serving engine needs to run one adapter mode."""
+    mode: str
+    spec: peft_api.AdapterSpec     # effective spec (NONE for merged/none)
+    base: Any                      # effective base weights (folded for merged)
+    broadcast: Any
+    per_layer: Any
+    tasked: bool = False           # per-request task ids route the adapter
+    folded_task: Optional[int] = None
+
+    @classmethod
+    def build(cls, mode: str, base, spec: peft_api.AdapterSpec, adapter,
+              frozen=None, *, model_cfg=None,
+              task: Optional[int] = None) -> "AdapterRuntime":
+        """base: frozen model weights; (spec, adapter, frozen): the trained
+        adapter; model_cfg: repro ModelConfig (required for mode="merged");
+        task: the task id frozen into the weights for mode="merged" on a
+        4+1d adapter (defaults to 0 for the 4d variants)."""
+        if mode not in MODES:
+            raise ValueError(f"unknown runtime mode {mode!r}; want {MODES}")
+        frozen = frozen or {}
+        if mode == "none" or spec.kind == "none":
+            return cls(mode="none", spec=peft_api.NONE, base=base,
+                       broadcast={}, per_layer=None)
+        # any 4+1d adapter routes by task (delta_out requires an index even
+        # when num_tasks == 1); 4+ed's extra axis is expert-, not request-,
+        # indexed, so it is not request-routed here.
+        has_tasks = spec.kind == "metatt" and spec.cfg.variant == "4+1d"
+        if mode == "live":
+            bc, pl = peft_api.adapter_factors(spec, adapter, frozen)
+            return cls(mode="live", spec=spec, base=base, broadcast=bc,
+                       per_layer=pl, tasked=has_tasks)
+        if spec.kind != "metatt":
+            raise ValueError(
+                f"runtime mode {mode!r} pre-merges TT cores and only applies "
+                f"to metatt adapters (got {spec.kind!r}); use mode='live'")
+        if mode == "lora":
+            if spec.cfg.variant == "4+ed":
+                raise ValueError(
+                    "4+ed expert routing (models/moe.py) contracts g1/C "
+                    "directly; serve MoE-expert adapters with mode='live'")
+            form = merge.to_lora_form(adapter, spec.cfg)
+            return cls(mode="lora", spec=spec, base=base,
+                       broadcast={"g4": form.b}, per_layer={"a": form.a},
+                       tasked=has_tasks)
+        # merged: fold ΔW into every adapted weight, serve with NO adapter
+        if model_cfg is None:
+            raise ValueError("mode='merged' needs model_cfg to locate every "
+                             "adapted weight in the base pytree")
+        fold_task = task
+        if spec.cfg.variant in ("4+1d", "4+ed") and fold_task is None:
+            fold_task = 0
+        folded = merge.fold_transformer(adapter, spec.cfg, base, model_cfg,
+                                        task=fold_task)
+        return cls(mode="merged", spec=peft_api.NONE, base=folded,
+                   broadcast={}, per_layer=None, folded_task=fold_task)
+
+    def check_task(self, task: int) -> None:
+        """Reject requests whose task id this runtime cannot honor."""
+        if self.tasked:
+            if not 0 <= task < self.spec.cfg.num_tasks:
+                raise ValueError(
+                    f"task id {task} out of range for num_tasks="
+                    f"{self.spec.cfg.num_tasks}")
+            return
+        # untasked runtime: only the one task it serves (the folded slice,
+        # or task 0 for task-axis-free adapters) may be requested — serving
+        # anything else would silently ignore the routing the client asked
+        # for.
+        served = self.folded_task if self.folded_task is not None else 0
+        if task != served:
+            raise ValueError(
+                f"runtime (mode={self.mode}) has no task routing and serves "
+                f"task {served} only; request for task {task} needs a "
+                "live/lora runtime on a 4+1d adapter")

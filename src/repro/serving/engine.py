@@ -1,0 +1,316 @@
+"""Slot-based continuous-batching serving engine with a jitted decode loop.
+
+Architecture (README §Serving):
+
+  * The engine owns ``max_batch`` decode SLOTS. Per-slot device state — KV
+    cache rows, current token, cache position, remaining-token budget,
+    active flag, output write index, task id — lives in one ``DecodeState``
+    pytree; request metadata stays on the host.
+  * PREFILL runs per request at batch 1 (prompts right-padded to a bucket
+    so a handful of shapes cover all lengths; padded cache cells are never
+    attended because the decode mask stops at the slot's position and
+    generated tokens overwrite cells before the mask reaches them). The
+    resulting cache is written into a free slot's batch row with
+    ``dynamic_update_slice`` (transformer.insert_cache_slot).
+  * The DECODE loop is a single jitted ``jax.lax.while_loop`` stepping every
+    active slot at once; sampling (serving/sampling.py) happens in-graph so
+    the loop never leaves the device. It returns control to the host exactly
+    when some slot finishes — the host then EVICTS it (harvests the output
+    row) and ADMITS the next pending request into the freed slot. In-flight
+    slots keep their cache rows and positions across the evict/admit cycle.
+  * TASK ROUTING: each slot carries a task id. With a 4+1d adapter under the
+    live/lora runtime the (B,) slot task vector gathers per-row C[l, t_b, m]
+    slices from the one shared tensor train, so a single decode batch mixes
+    tasks (paper Eq. (4)/(6)) — no per-task adapter stacks.
+
+The engine requires attention-pattern models (stateful mixers — mamba/xlstm
+— integrate right-padding junk into their prefill state and have no
+position-indexed cache to insert at slot granularity).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+from typing import Any, Callable, List, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ModelConfig
+from repro.models import transformer
+from repro.peft import api as peft_api
+from repro.serving import sampling as sampling_lib
+from repro.serving.adapter_runtime import AdapterRuntime
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. prompt: 1-D int token ids (list/np/jnp)."""
+    prompt: Any
+    max_new_tokens: int
+    task: int = 0
+
+
+def _pad_caches(caches, cfg: ModelConfig, batch: int, cache_len: int):
+    """Place length-T prefill caches into a fixed cache_len-wide template."""
+    template = transformer.init_caches(cfg, batch, cache_len,
+                                       cfg.compute_dtype)
+    if caches is None:
+        return template
+
+    def pad(c, z):
+        return jax.lax.dynamic_update_slice(z, c.astype(z.dtype),
+                                            (0,) * c.ndim)
+
+    return [jax.tree_util.tree_map(pad, c, t)
+            for c, t in zip(caches, template)]
+
+
+class DecodeState(NamedTuple):
+    """Loop-carried per-slot device state (leaves fixed-shape pytrees)."""
+    tok: jnp.ndarray        # (B, 1)  last sampled token per slot
+    pos: jnp.ndarray        # (B,)    cache position tok will be written at
+    remaining: jnp.ndarray  # (B,)    tokens still to sample
+    active: jnp.ndarray     # (B,)    slot is mid-generation
+    widx: jnp.ndarray       # (B,)    next column of the output buffer
+    out: jnp.ndarray        # (B, out_cap) generated tokens
+    task: jnp.ndarray       # (B,)    per-slot task id (4+1d routing)
+    key: jnp.ndarray        # PRNG key (in-graph sampling)
+    caches: Any             # transformer KV caches, batch axis = slots
+
+
+class Engine:
+    """Continuous-batching engine over an AdapterRuntime.
+
+    cache_len bounds prompt_len + max_new_tokens per request; out_cap bounds
+    max_new_tokens. ``generate`` serves any number of requests through the
+    fixed slots, admitting/evicting as they finish.
+    """
+
+    def __init__(self, model_cfg: ModelConfig, runtime: AdapterRuntime, *,
+                 max_batch: int = 4, cache_len: int = 64, out_cap: int = 32,
+                 prompt_buckets: Sequence[int] = (),
+                 sampling: sampling_lib.SamplingConfig =
+                 sampling_lib.SamplingConfig(),
+                 seed: int = 0):
+        for mixer, _ in model_cfg.block_pattern:
+            if mixer != "attn":
+                raise NotImplementedError(
+                    f"slot engine needs attention KV caches; mixer {mixer!r} "
+                    "carries stateful caches that cannot be slot-inserted "
+                    "from a padded prefill")
+        if model_cfg.is_encdec:
+            raise NotImplementedError("enc-dec serving is not slotted yet")
+        if runtime.tasked and runtime.spec.adapts("moe_down"):
+            # moe_down deltas apply over expert-sorted (E, C, ff) blocks
+            # (models/moe.py), whose leading axis is experts — a per-request
+            # (B,) task vector cannot index them.
+            raise NotImplementedError(
+                "per-request task routing does not reach the expert-sorted "
+                "moe_down path; serve this adapter with a scalar task "
+                "(per-task engines) or drop moe_down from matrix_types")
+        self.cfg = model_cfg
+        self.rt = runtime
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        self.out_cap = out_cap
+        self.prompt_buckets = tuple(sorted(prompt_buckets))
+        self.sampling = sampling.validate()
+        self._key = jax.random.PRNGKey(seed)
+        self._weights = (runtime.base, runtime.broadcast, runtime.per_layer)
+        self._prefill = jax.jit(self._prefill_impl)
+        self._admit = jax.jit(self._admit_impl, donate_argnums=(0,))
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(3,))
+
+    # ------------------------------------------------------------------
+    # jitted pieces (weights passed as args so they are never baked into
+    # the executable as constants)
+    # ------------------------------------------------------------------
+
+    def _prefill_impl(self, base, bc, pl, tokens, last_idx, task):
+        """tokens (1, Pb) right-padded -> (last-position logits (V,),
+        caches padded to cache_len)."""
+        out = transformer.forward(base, self.cfg, self.rt.spec, bc, pl,
+                                  tokens, task=task)
+        caches = _pad_caches(out.caches, self.cfg, 1, self.cache_len)
+        last = jnp.take(out.logits[0], last_idx, axis=0)
+        return last, caches
+
+    def _admit_impl(self, state: DecodeState, slot, caches1,
+                    last_logits, plen, n_new, task_id) -> DecodeState:
+        """Insert a prefilled request into slot ``slot`` and sample its
+        first token from the prefill logits (counted toward the output)."""
+        key, sub = jax.random.split(state.key)
+        t0 = sampling_lib.sample(last_logits[None], sub, self.sampling)[0]
+        caches = transformer.insert_cache_slot(state.caches, caches1, slot)
+        return state._replace(
+            tok=jax.lax.dynamic_update_slice(state.tok, t0[None, None],
+                                             (slot, 0)),
+            pos=state.pos.at[slot].set(plen),
+            remaining=state.remaining.at[slot].set(n_new - 1),
+            active=state.active.at[slot].set(n_new > 1),
+            widx=state.widx.at[slot].set(1),
+            out=state.out.at[slot].set(0).at[slot, 0].set(t0),
+            task=state.task.at[slot].set(task_id),
+            key=key, caches=caches)
+
+    def _decode_impl(self, base, bc, pl, state: DecodeState) -> DecodeState:
+        """Jitted continuous decode: step all active slots until one
+        finishes (or none remain) — the host only sees slot boundaries."""
+        active0 = state.active
+        rows = jnp.arange(self.max_batch)
+
+        def cond(s):
+            return jnp.any(s.active) & jnp.all(s.active == active0)
+
+        def body(s):
+            task = s.task if self.rt.tasked else None
+            logits, caches = transformer.decode_step(
+                base, self.cfg, self.rt.spec, bc, pl, s.tok, s.caches,
+                s.pos, task=task)
+            key, sub = jax.random.split(s.key)
+            nxt = sampling_lib.sample(logits, sub, self.sampling)
+            # inactive slots write to column out_cap -> dropped
+            col = jnp.where(s.active, s.widx, self.out_cap)
+            out = s.out.at[rows, col].set(nxt, mode="drop")
+            adv = s.active.astype(jnp.int32)
+            tok = jnp.where(s.active[:, None], nxt[:, None], s.tok)
+            return DecodeState(
+                tok=tok, pos=s.pos + adv, remaining=s.remaining - adv,
+                active=s.active & (s.remaining > 1), widx=s.widx + adv,
+                out=out, task=s.task, key=key, caches=caches)
+
+        return jax.lax.while_loop(cond, body, state)
+
+    # ------------------------------------------------------------------
+    # host-side orchestration
+    # ------------------------------------------------------------------
+
+    def init_state(self, key) -> DecodeState:
+        b, cap = self.max_batch, self.out_cap
+        z = functools.partial(jnp.zeros, dtype=jnp.int32)
+        return DecodeState(
+            tok=z((b, 1)), pos=z((b,)), remaining=z((b,)),
+            active=jnp.zeros((b,), bool), widx=z((b,)), out=z((b, cap)),
+            task=z((b,)), key=key,
+            caches=transformer.init_caches(self.cfg, b, self.cache_len,
+                                           self.cfg.compute_dtype))
+
+    def _bucket(self, plen: int) -> int:
+        for bkt in self.prompt_buckets:
+            if bkt >= plen:
+                return min(bkt, self.cache_len)
+        # no bucket fits: next power of two keeps recompiles logarithmic
+        n = 8
+        while n < plen:
+            n *= 2
+        return min(n, self.cache_len)   # prefill cache is cache_len wide
+
+    def _validate_request(self, req: Request):
+        prompt = jnp.asarray(req.prompt, jnp.int32).reshape(-1)
+        plen = int(prompt.shape[0])
+        if plen < 1:
+            raise ValueError("empty prompt")
+        if not 1 <= req.max_new_tokens <= self.out_cap:
+            raise ValueError(
+                f"max_new_tokens={req.max_new_tokens} not in [1, out_cap="
+                f"{self.out_cap}]")
+        if plen + req.max_new_tokens > self.cache_len:
+            raise ValueError(
+                f"prompt ({plen}) + max_new_tokens ({req.max_new_tokens}) "
+                f"exceeds cache_len={self.cache_len}")
+        self.rt.check_task(req.task)
+        return prompt, plen
+
+    def _admit_request(self, state: DecodeState, slot: int,
+                       req: Request) -> DecodeState:
+        prompt, plen = self._validate_request(req)
+        pb = self._bucket(plen)
+        padded = jnp.zeros((1, pb), jnp.int32).at[0, :plen].set(prompt)
+        task = jnp.int32(req.task) if self.rt.tasked else None
+        last, caches1 = self._prefill(*self._weights, padded,
+                                      jnp.int32(plen - 1), task)
+        return self._admit(state, jnp.int32(slot), caches1, last,
+                           jnp.int32(plen), jnp.int32(req.max_new_tokens),
+                           jnp.int32(req.task))
+
+    def generate(self, requests: Sequence[Request], *,
+                 key=None) -> List[np.ndarray]:
+        """Serve ``requests`` through the slots; returns, per request, the
+        generated token ids (np.ndarray of length max_new_tokens).
+
+        Without an explicit ``key`` the engine advances its own PRNG stream,
+        so successive calls draw fresh samples under temperature/top-k
+        (greedy is key-independent either way)."""
+        for req in requests:
+            self._validate_request(req)  # fail fast, before any decode work
+        if key is None:
+            self._key, key = jax.random.split(self._key)
+        state = self.init_state(key)
+        pending = collections.deque(enumerate(requests))
+        results: List[Optional[np.ndarray]] = [None] * len(requests)
+        meta: List[Optional[int]] = [None] * self.max_batch
+
+        while pending or any(m is not None for m in meta):
+            # admit pending requests into free slots
+            for slot in range(self.max_batch):
+                if meta[slot] is None and pending:
+                    idx, req = pending.popleft()
+                    state = self._admit_request(state, slot, req)
+                    meta[slot] = idx
+            # decode every active slot until one finishes
+            if bool(np.any(np.asarray(state.active))):
+                state = self._decode(*self._weights, state)
+            # evict finished slots (also catches max_new_tokens == 1)
+            active = np.asarray(state.active)
+            out = np.asarray(state.out)
+            widx = np.asarray(state.widx)
+            for slot in range(self.max_batch):
+                if meta[slot] is not None and not active[slot]:
+                    results[meta[slot]] = out[slot, : int(widx[slot])].copy()
+                    meta[slot] = None
+        return results  # type: ignore[return-value]
+
+
+# ---------------------------------------------------------------------------
+# single-shot helpers (moved here from train/train_step.py; train_step keeps
+# deprecation re-exports). These are the seed's one-request-shape-at-a-time
+# path — the Engine above supersedes them for real serving.
+# ---------------------------------------------------------------------------
+
+
+def make_serve_step(cfg: ModelConfig, spec: peft_api.AdapterSpec,
+                    *, with_enc: bool = False) -> Callable:
+    """Single-token decode step (the decode_* dry-run entry point).
+
+    fn(base, adapter, frozen, token (B,1), caches, pos[, enc_out][, task])
+    -> (logits, caches). ``pos`` may be a scalar or a (B,) per-row vector;
+    ``task`` a scalar or (B,) task-id vector (4+1d routing).
+    """
+    def step_fn(base, adapter, frozen, token, caches, pos, enc_out=None,
+                task=None):
+        bc, pl = peft_api.adapter_factors(spec, adapter, frozen)
+        return transformer.decode_step(base, cfg, spec, bc, pl, token,
+                                       caches, pos, enc_out=enc_out,
+                                       task=task)
+
+    return jax.jit(step_fn, donate_argnums=(4,))
+
+
+def make_prefill(cfg: ModelConfig, spec: peft_api.AdapterSpec,
+                 cache_len: int) -> Callable:
+    """Prefill: run the full prompt, return (logits, caches padded to
+    cache_len). Attention caches come back length-T from the forward pass
+    and are placed into the fixed-size decode cache."""
+    def prefill_fn(base, adapter, frozen, tokens, enc_embeds=None,
+                   embeds=None, task=None):
+        bc, pl = peft_api.adapter_factors(spec, adapter, frozen)
+        out = transformer.forward(base, cfg, spec, bc, pl, tokens,
+                                  embeds=embeds, enc_embeds=enc_embeds,
+                                  task=task)
+        caches = _pad_caches(out.caches, cfg, tokens.shape[0], cache_len)
+        return out.logits, caches, out.enc_out
+
+    return jax.jit(prefill_fn)

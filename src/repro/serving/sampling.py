@@ -1,0 +1,47 @@
+"""In-graph token sampling for the serving decode loop.
+
+Every sampler is a pure jnp function of (logits, key) so it lives INSIDE the
+jitted ``lax.while_loop`` decode body (repro/serving/engine.py) — the loop
+never leaves the device to pick a token. The method/temperature/top_k knobs
+are static (baked into the trace); the PRNG key is loop-carried state.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import NEG_INF
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingConfig:
+    """method: "greedy" | "temperature" | "top_k".
+
+    greedy ignores temperature/top_k; top_k masks to the k highest logits
+    before the temperature-scaled categorical draw.
+    """
+    method: str = "greedy"
+    temperature: float = 1.0
+    top_k: int = 0
+
+    def validate(self) -> "SamplingConfig":
+        if self.method not in ("greedy", "temperature", "top_k"):
+            raise ValueError(f"unknown sampling method {self.method!r}")
+        if self.method == "top_k" and self.top_k <= 0:
+            raise ValueError("top_k sampling needs top_k >= 1")
+        if self.method != "greedy" and self.temperature <= 0:
+            raise ValueError("temperature must be > 0")
+        return self
+
+
+def sample(logits: jnp.ndarray, key, cfg: SamplingConfig) -> jnp.ndarray:
+    """logits (B, V) -> sampled token ids (B,) int32."""
+    if cfg.method == "greedy":
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lg = logits.astype(jnp.float32) / cfg.temperature
+    if cfg.method == "top_k":
+        kth = jax.lax.top_k(lg, cfg.top_k)[0][..., -1:]
+        lg = jnp.where(lg < kth, NEG_INF, lg)
+    return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)

@@ -1,0 +1,20 @@
+"""Version-compat shim for the shard_map API drift.
+
+Newer JAX exposes ``jax.shard_map(..., check_vma=)``; the installed version
+only has ``jax.experimental.shard_map.shard_map(..., check_rep=)`` (same
+knob, renamed). Callers import ``shard_map`` from here.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)

@@ -6,8 +6,9 @@ no optimizer state, no master copy — the memory model that makes 1T-param
 fine-tuning fit, DESIGN.md §4). Supports microbatch gradient accumulation
 (lax.scan), remat-per-super-block, and optional gradient compression.
 
-serve_step: single-token decode against a KV/state-cache pytree — this is
-what the decode_* dry-run cells lower.
+The serving helpers (make_prefill / make_serve_step) moved to
+repro.serving.engine, next to the continuous-batching Engine; thin
+deprecation re-exports remain at the bottom of this module.
 """
 from __future__ import annotations
 
@@ -21,7 +22,6 @@ import jax.numpy as jnp
 from repro.config.base import ModelConfig, OptimizerConfig, TrainConfig
 from repro.distributed.compression import GradCompressor
 from repro.models import model as model_lib
-from repro.models import transformer
 from repro.optim import adamw
 from repro.peft import api as peft_api
 
@@ -130,44 +130,26 @@ def make_full_ft_step(cfg: ModelConfig, opt_cfg: OptimizerConfig,
 
 
 # ---------------------------------------------------------------------------
-# serving
+# serving — MOVED to repro.serving.engine (the slot-based continuous-batching
+# engine lives there too). Thin deprecation re-exports only.
 # ---------------------------------------------------------------------------
 
 
-def make_serve_step(cfg: ModelConfig, spec: peft_api.AdapterSpec,
-                    *, with_enc: bool = False) -> Callable:
-    """Single-token decode step (the decode_* dry-run entry point).
+def make_serve_step(*args, **kwargs) -> Callable:
+    """Deprecated: use repro.serving.engine.make_serve_step (or the Engine)."""
+    import warnings
 
-    fn(base, adapter, frozen, token (B,1), caches, pos) -> (logits, caches).
-    """
-    def step_fn(base, adapter, frozen, token, caches, pos, enc_out=None):
-        bc, pl = peft_api.adapter_factors(spec, adapter, frozen)
-        return transformer.decode_step(base, cfg, spec, bc, pl, token,
-                                       caches, pos, enc_out=enc_out)
-
-    return jax.jit(step_fn, donate_argnums=(4,))
+    from repro.serving import engine as _engine
+    warnings.warn("repro.train.train_step.make_serve_step moved to "
+                  "repro.serving.engine", DeprecationWarning, stacklevel=2)
+    return _engine.make_serve_step(*args, **kwargs)
 
 
-def make_prefill(cfg: ModelConfig, spec: peft_api.AdapterSpec,
-                 cache_len: int) -> Callable:
-    """Prefill: run the full prompt, return (logits, caches padded to
-    cache_len). Attention caches come back length-T from the forward pass
-    and are placed into the fixed-size decode cache."""
-    def pad(c, t):
-        def one(a, z):
-            return jax.lax.dynamic_update_slice(
-                z, a.astype(z.dtype), (0,) * a.ndim)
-        return jax.tree_util.tree_map(one, c, t)
+def make_prefill(*args, **kwargs) -> Callable:
+    """Deprecated: use repro.serving.engine.make_prefill (or the Engine)."""
+    import warnings
 
-    def prefill_fn(base, adapter, frozen, tokens, enc_embeds=None,
-                   embeds=None):
-        bc, pl = peft_api.adapter_factors(spec, adapter, frozen)
-        out = transformer.forward(base, cfg, spec, bc, pl, tokens,
-                                  embeds=embeds, enc_embeds=enc_embeds)
-        template = transformer.init_caches(cfg, tokens.shape[0], cache_len,
-                                           cfg.compute_dtype)
-        caches = [pad(c, t) for c, t in zip(out.caches, template)] \
-            if out.caches is not None else template
-        return out.logits, caches, out.enc_out
-
-    return jax.jit(prefill_fn)
+    from repro.serving import engine as _engine
+    warnings.warn("repro.train.train_step.make_prefill moved to "
+                  "repro.serving.engine", DeprecationWarning, stacklevel=2)
+    return _engine.make_prefill(*args, **kwargs)

@@ -1,7 +1,5 @@
 """Serving path: decode==forward consistency, prefill+decode generation,
 inference-time adapter merging (paper §2.4)."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,10 +8,10 @@ import pytest
 from repro import configs as registry
 from repro.config.base import RunConfig, SHAPES
 from repro.core import tt as ttlib
-from repro.core.merge import fold_into_dense
+from repro.core.merge import fold_transformer
 from repro.models import model as M, transformer as T
 from repro.peft import api as peft_api
-from repro.train import train_step as ts
+from repro.serving import engine as se
 
 KEY = jax.random.PRNGKey(0)
 
@@ -64,7 +62,7 @@ def test_prefill_then_decode_greedy_generation():
     B, P, G = 2, 6, 4
     cache_len = P + G
     prompt = jax.random.randint(KEY, (B, P), 0, cfg.vocab_size)
-    prefill = ts.make_prefill(cfg, spec, cache_len)
+    prefill = se.make_prefill(cfg, spec, cache_len)
     logits, caches, _ = prefill(params["base"], params["adapter"],
                                 params["frozen"], prompt)
     # reference: full forward over the eventually-generated sequence
@@ -91,16 +89,9 @@ def test_fold_into_dense_serving_is_zero_overhead_and_exact():
                                       params["frozen"])
     tokens = jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size)
     out_adapted = T.forward(params["base"], cfg, spec, bc, pl, tokens)
-    # fold ΔW into the attention weights, then run with NO adapter
-    folded = jax.tree_util.tree_map(lambda x: x, params["base"])
-    blk = dict(folded["blocks"][0])
-    mixer = dict(blk["mixer"])
-    acf = spec.cfg
-    w = {"attn_q": mixer["wq"], "attn_v": mixer["wv"]}
-    merged = fold_into_dense(params["adapter"], acf, w)
-    mixer["wq"], mixer["wv"] = merged["attn_q"], merged["attn_v"]
-    blk["mixer"] = mixer
-    folded["blocks"] = [blk]
+    # fold ΔW into ALL adapted weights (every layer), run with NO adapter
+    folded = fold_transformer(params["adapter"], spec.cfg, params["base"],
+                              cfg)
     out_folded = T.forward(folded, cfg, peft_api.NONE, {}, None, tokens)
     rel = (float(jnp.max(jnp.abs(out_folded.logits - out_adapted.logits)))
            / float(jnp.max(jnp.abs(out_adapted.logits))))

@@ -7,6 +7,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow
+
 _ENV = dict(os.environ,
             XLA_FLAGS="--xla_force_host_platform_device_count=8",
             PYTHONPATH="src")
@@ -123,6 +125,7 @@ def test_compressed_psum_shard_map():
         from jax.sharding import PartitionSpec as P
         from repro.launch.mesh import make_host_mesh
         from repro.distributed import compressed_psum
+        from repro.sharding.compat import shard_map
         mesh = make_host_mesh(8, 1)
         x = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
         def f(xs):
@@ -130,7 +133,7 @@ def test_compressed_psum_shard_map():
             approx = compressed_psum(xs, 'data', kind='int8')
             return exact, approx
         with mesh:
-            ex, ap = jax.jit(jax.shard_map(
+            ex, ap = jax.jit(shard_map(
                 f, mesh=mesh, in_specs=P('data', None),
                 out_specs=(P(None, None), P(None, None)),
                 check_vma=False))(x)

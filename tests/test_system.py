@@ -11,6 +11,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import configs as registry
 from repro.config.base import OptimizerConfig, RunConfig, SHAPES, TrainConfig
@@ -18,6 +19,8 @@ from repro.data import ClassificationTasks, LMStream
 from repro.models import model as M
 from repro.peft import api as peft_api
 from repro.train.trainer import Trainer
+
+pytestmark = pytest.mark.slow
 
 CFG = registry.get_smoke_config("roberta-base")
 
