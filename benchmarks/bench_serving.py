@@ -20,9 +20,10 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, time_call
 from repro import configs as registry
-from repro.config.base import RunConfig, SHAPES
+from repro.config.base import KernelConfig, RunConfig, SHAPES
 from repro.core import tt as ttlib
 from repro.core.merge import fold_transformer
+from repro.kernels import dispatch
 from repro.models import model as M, transformer as T
 from repro.peft import api as peft_api
 from repro.serving import AdapterRuntime, Engine, Request
@@ -49,6 +50,15 @@ def _decode_step_rows(rows) -> None:
         params["base"], cfg, spec, bc, pl, tok, c, pos)[0])
     us_live = time_call(live, token, caches)
     rows.append(emit("serving/decode_live_tt", us_live, "adapter=metatt-r8"))
+
+    # same decode step through the fused dispatch seam (interpret mode on
+    # CPU is a correctness emulator, not a speed number; TPU is the target)
+    fused = jax.jit(lambda tok, c: T.decode_step(
+        params["base"], cfg, spec, bc, pl, tok, c, pos,
+        policy=dispatch.PALLAS_INTERPRET)[0])
+    us_fused = time_call(fused, token, caches, iters=3, warmup=1)
+    rows.append(emit("serving/decode_live_fused_interpret", us_fused,
+                     "adapter=metatt-r8,interpret=1"))
 
     # merged: fold ΔW into every adapted weight, run with NO adapter
     folded = fold_transformer(params["adapter"], spec.cfg, params["base"],
@@ -131,10 +141,57 @@ def _engine_rows(rows, *, smoke: bool) -> None:
                      f"speedup_engine={dt_py/toks_py*toks/dt_eng:.2f}x"))
 
 
+def _fused_engine_rows(rows, *, smoke: bool) -> None:
+    """Engine fused-vs-unfused from the SAME dispatch seam: identical
+    requests, identical runtime, only ``kernels=`` differs. The fused
+    engine's decode loop runs ``tt_linear_batched_a`` (slot-gathered A)
+    and the decode-shaped flash kernel; on CPU the Pallas leg runs under
+    interpret (correctness emulator), so the derived column also asserts
+    token parity — the number that matters off-TPU."""
+    n_req, n_new, slots, n_tasks = (3, 5, 2, 2) if smoke else (6, 8, 3, 3)
+    cfg = registry.get_smoke_config("stablelm-1.6b")
+    run_cfg = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                        adapter_kind="metatt", adapter_variant="4+1d",
+                        num_tasks=n_tasks, adapter_rank=8)
+    spec = M.build_adapter_spec(run_cfg)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, spec, key)
+    params["adapter"] = {"cores": ttlib.random_tt(key, spec.cfg.mode_sizes,
+                                                  8, scale=0.5)}
+    keys = jax.random.split(key, n_req)
+    reqs = [Request(jax.random.randint(keys[i], (4 + i % 3,), 0,
+                                       cfg.vocab_size), n_new,
+                    task=i % n_tasks) for i in range(n_req)]
+    rt = AdapterRuntime.build("lora", params["base"], spec,
+                              params["adapter"], params["frozen"])
+    outs = {}
+    for name, kcfg in (("unfused", None),
+                       ("fused_interpret", KernelConfig(backend="pallas",
+                                                        interpret=True))):
+        eng = Engine(cfg, rt, max_batch=slots, cache_len=8 + n_new,
+                     out_cap=n_new, kernels=kcfg)
+        eng.generate(reqs)               # compile
+        t0 = time.perf_counter()
+        outs[name] = eng.generate(reqs)
+        dt = time.perf_counter() - t0
+        toks = sum(len(o) for o in outs[name])
+        rows.append(emit(f"serving/engine_{name}", dt / toks * 1e6,
+                         f"tok_per_s={toks/dt:.1f},slots={slots},"
+                         f"tasks={n_tasks},runtime=lora"))
+    parity = all(a.tolist() == b.tolist() for a, b in
+                 zip(outs["unfused"], outs["fused_interpret"]))
+    rows.append(emit("serving/engine_fused_token_parity", 0.0,
+                     f"identical_tokens={parity}"))
+    if not parity:
+        raise AssertionError(
+            "fused engine decode diverged from the unfused path")
+
+
 def run(*, smoke: bool = False) -> list:
     rows = []
     _decode_step_rows(rows)
     _engine_rows(rows, smoke=smoke)
+    _fused_engine_rows(rows, smoke=smoke)
     return rows
 
 

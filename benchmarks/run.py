@@ -3,18 +3,27 @@
 Prints ``name,us_per_call,derived`` CSV rows. Roofline terms come from the
 dry-run artifacts (benchmarks/roofline.py); run
 ``python -m repro.launch.dryrun --all`` first to refresh them.
+
+``--smoke`` runs the CI subset: the kernel-dispatch benches and the serving
+smoke benches (both of which assert fused-vs-unfused parity from the same
+dispatch seam the model uses) — cheap enough to gate every CI run against
+kernel regressions and benchmark bit-rot.
 """
 from __future__ import annotations
 
-import json
+import argparse
 import os
 
 
-def main() -> None:
+def main(*, smoke: bool = False) -> None:
     print("name,us_per_call,derived")
     from benchmarks import (bench_fig2_dmrg, bench_init_ablation,
                             bench_kernels, bench_serving, bench_table1,
                             bench_table2, roofline)
+    if smoke:
+        bench_kernels.run(smoke=True)
+        bench_serving.run(smoke=True)
+        return
     bench_table1.run()
     bench_table2.run()
     bench_fig2_dmrg.run()
@@ -39,4 +48,7 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI subset: kernel-dispatch + serving smoke benches")
+    main(smoke=ap.parse_args().smoke)

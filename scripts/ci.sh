@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 test suite + serving benchmark smoke run.
+# CI entry point: tier-1 test suite + kernel-parity job + benchmark smoke.
 #
-#   scripts/ci.sh            # full tier-1 + serving smoke bench
+#   scripts/ci.sh            # full tier-1 + parity + smoke benches
 #   scripts/ci.sh -m 'not slow'   # extra pytest args pass through
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -9,4 +9,12 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH}
 
 python -m pytest -x -q "$@"
-python benchmarks/bench_serving.py --smoke
+
+# interpret-mode kernel-parity job: the fused Pallas path must match the
+# reference XLA path through the SAME dispatch seam the model uses
+# (guaranteed to run even when "$@" filters the main suite)
+python -m pytest -x -q tests/test_kernels.py tests/test_dispatch.py
+
+# benchmark smoke: kernel-dispatch + serving benches (assert fused-vs-unfused
+# token parity), so kernel regressions and benchmark bit-rot fail CI
+python benchmarks/run.py --smoke

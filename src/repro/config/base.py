@@ -147,6 +147,55 @@ SHAPES = {
 
 
 @dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """Kernel-dispatch policy (DESIGN.md §5) — resolved once into a
+    ``repro.kernels.dispatch.KernelPolicy`` and threaded through
+    ``AdapterCtx`` into every hot-path call site.
+
+    backend: "auto" (Pallas on TPU, reference XLA elsewhere), "pallas"
+        (force the fused kernels — with ``interpret=True`` this is the
+        CPU correctness path), or "ref" (force the reference XLA path).
+    interpret: None -> interpret off-TPU only; explicit bool overrides
+        (the parity tests run ``backend="pallas", interpret=True``).
+    fuse_linear: route ``adapted_linear`` through the fused base-matmul +
+        rank-r epilogue kernel (one HBM round-trip of the output instead
+        of three) whenever the adapter folds to lora-form (A, B).
+    flash: route attention through the Pallas flash kernels (blockwise
+        online softmax for train/prefill, the decode-shaped variant for
+        single-token cached decode).
+    bm/bn/bk: tt_linear tile overrides (0 -> per-shape heuristic).
+    bq/bkv:   flash-attention tile overrides (0 -> per-shape heuristic).
+    """
+    backend: str = "auto"          # auto | pallas | ref
+    interpret: Optional[bool] = None
+    fuse_linear: bool = True
+    flash: bool = True
+    bm: int = 0
+    bn: int = 0
+    bk: int = 0
+    bq: int = 0
+    bkv: int = 0
+
+    def validate(self) -> "KernelConfig":
+        if self.backend not in ("auto", "pallas", "ref"):
+            raise ValueError(f"unknown kernel backend {self.backend!r}; "
+                             "want auto | pallas | ref")
+        # bm tiles the sublane (row) axis — 8-multiples are legal (f32
+        # sublane); tt_linear_batched_a's slot axis defaults to bm=8
+        if self.bm and self.bm % 8 != 0:
+            raise ValueError(
+                f"tile override bm={self.bm} must be a multiple of the "
+                "8-row f32 sublane")
+        for name in ("bn", "bk", "bq", "bkv"):
+            v = getattr(self, name)
+            if v and v % 128 != 0:
+                raise ValueError(
+                    f"tile override {name}={v} must be a multiple of the "
+                    "128-lane MXU native size")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
 class OptimizerConfig:
     name: str = "adamw"
     lr: float = 1e-3               # paper's MetaTT grid: {1e-3, 5e-4}
@@ -191,3 +240,4 @@ class RunConfig:
     num_tasks: int = 0
     optimizer: OptimizerConfig = OptimizerConfig()
     train: TrainConfig = TrainConfig()
+    kernels: KernelConfig = KernelConfig()

@@ -140,8 +140,14 @@ def two_site_sweep(params: Params, loss_fn, target_rank: int, *,
     d = len(cores)
 
     def local_loss(merged, i, rest):
-        a, b, _ = tt.split_merged(merged, rank=merged.shape[0] *
-                                  merged.shape[1])  # exact resplit
+        # exact (lossless) resplit: the merged matricization is
+        # (r_prev·n_a) × (n_b·r_next), so its rank is at most the SMALLER
+        # of the two dims (split_merged clamps to the singular-value count
+        # anyway, but asking for the true bound keeps the factor shapes
+        # minimal instead of allocating r_prev·n_a columns at right bonds).
+        exact = min(merged.shape[0] * merged.shape[1],
+                    merged.shape[2] * merged.shape[3])
+        a, b, _ = tt.split_merged(merged, rank=exact)
         cs = list(rest)
         cs[i], cs[i + 1] = a, b
         return loss_fn({"cores": cs})
@@ -150,10 +156,11 @@ def two_site_sweep(params: Params, loss_fn, target_rank: int, *,
     for direction in (range(d - 1), range(d - 2, -1, -1)):
         for i in direction:
             merged = tt.merge_pair(cores[i], cores[i + 1])
-            g = jax.grad(local_loss)(merged, i, cores)
+            # exactly inner_steps gradients: grad-then-step (the old
+            # step-then-regrad form computed one unused gradient per bond)
             for _ in range(inner_steps):
-                merged = merged - lr * g
                 g = jax.grad(local_loss)(merged, i, cores)
+                merged = merged - lr * g
             left = isinstance(direction, range) and direction.step != -1
             a, b, s = tt.split_merged(merged, target_rank,
                                       left_orthogonal=left)

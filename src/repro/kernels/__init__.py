@@ -1,9 +1,18 @@
 """Pallas TPU kernels for the perf-critical compute paths.
 
-tt_linear        — fused base-matmul + rank-r TT epilogue (paper Eq. (5))
-flash_attention  — blockwise online-softmax attention (train/prefill path)
+tt_linear           — fused base-matmul + rank-r TT epilogue (paper Eq. (5))
+tt_linear_batched_a — same fusion with a per-slot A operand (the serving
+                      engine's (4+1)d task-routed decode batches)
+flash_attention     — blockwise online-softmax attention (train/prefill)
+decode_attention    — decode-shaped variant (one query token per row
+                      against a position-masked KV cache)
 
-Each has a pure-jnp oracle in ref.py and a shape/dtype-sweeping allclose
-test in tests/test_kernels.py (interpret=True on CPU; TPU is the target).
+Model code reaches these through ``repro.kernels.dispatch`` (KernelPolicy —
+DESIGN.md §5); ``ops`` holds the padding/broadcast wrappers. Each kernel
+has a pure-jnp oracle in ref.py and a shape/dtype-sweeping allclose test in
+tests/test_kernels.py (interpret=True on CPU; TPU is the target).
 """
-from repro.kernels.ops import flash_attention, tt_linear  # noqa: F401
+from repro.kernels import dispatch  # noqa: F401
+from repro.kernels.dispatch import KernelPolicy, resolve  # noqa: F401
+from repro.kernels.ops import (decode_attention, flash_attention,  # noqa: F401
+                               tt_linear, tt_linear_batched_a)

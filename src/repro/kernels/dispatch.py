@@ -1,0 +1,217 @@
+"""Kernel-dispatch layer: the single seam between model code and kernels.
+
+Every hot-path call site (``models/layers.py::adapted_linear``, the
+attention paths in ``models/attention.py``, the serving engine's decode
+loop) routes through this module instead of picking a backend ad hoc
+(DESIGN.md §5). The flow is:
+
+  KernelConfig (config/base.py, user-facing knobs on RunConfig / Engine)
+      -> resolve() -> KernelPolicy (hashable, fully resolved: backend
+         chosen, interpret decided, tile overrides pinned)
+      -> AdapterCtx.policy -> layers / attention / engine call the
+         dispatch functions below.
+
+With ``use_pallas`` the fused Pallas kernels run (on TPU natively; on CPU
+only under ``interpret=True`` — the correctness path the parity tests and
+CI exercise). Otherwise the pure-XLA reference math runs from the SAME
+entry points, so fused-vs-ref comparisons (tests, benchmarks) exercise
+exactly the code the model executes — no benchmark-only kernel calls.
+
+The fused linear is differentiable: a custom VJP whose dx GEMM is itself
+the fused kernel with transposed operands (dx = g·Wᵀ + α·(g·Bᵀ)·Aᵀ has the
+same base-matmul + rank-r-epilogue shape as the forward), so the *training*
+hot path stays on the kernel in both directions. Flash attention recomputes
+attention via the REFERENCE path in its backward — correct, but that leg
+materializes the (T, S) score matrix, so the flash memory win currently
+holds for forward/inference only; a blockwise flash backward kernel is the
+known follow-up at this seam. Future backends (GPU Triton, new TPU
+generations) plug in here: add a branch to resolve() and the whole stack
+follows.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import KernelConfig
+from repro.kernels import ops
+from repro.kernels import ref as _ref
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPolicy:
+    """Resolved dispatch decision. Hashable and static: it is closed over
+    by jitted functions and passed through ``jax.custom_vjp`` nondiff args,
+    so it must never carry tracers."""
+    use_pallas: bool = False
+    interpret: bool = True
+    fuse_linear: bool = True
+    flash: bool = True
+    bm: int = 0
+    bn: int = 0
+    bk: int = 0
+    bq: int = 0
+    bkv: int = 0
+
+    @property
+    def fused_linear(self) -> bool:
+        """adapted_linear routes through the fused TT-linear kernel."""
+        return self.use_pallas and self.fuse_linear
+
+    @property
+    def flash_attn(self) -> bool:
+        """attention routes through the Pallas flash/decode kernels."""
+        return self.use_pallas and self.flash
+
+
+#: Force-reference policy (dispatch entry points, XLA math) — the "ref" leg
+#: of every fused-vs-ref parity comparison.
+REF = KernelPolicy(use_pallas=False)
+
+#: Interpret-mode Pallas policy — the CPU correctness path.
+PALLAS_INTERPRET = KernelPolicy(use_pallas=True, interpret=True)
+
+
+def resolve(cfg: Union[KernelConfig, KernelPolicy, None]
+            ) -> Optional[KernelPolicy]:
+    """KernelConfig -> KernelPolicy (None passes through: "no policy" keeps
+    the legacy unfused path, bit-identical to the pre-dispatch stack)."""
+    if cfg is None or isinstance(cfg, KernelPolicy):
+        return cfg
+    cfg = cfg.validate()
+    if cfg.backend == "pallas":
+        use = True
+    elif cfg.backend == "ref":
+        use = False
+    else:                                   # auto: Pallas iff on TPU
+        use = jax.default_backend() == "tpu"
+    interp = ((jax.default_backend() != "tpu") if cfg.interpret is None
+              else cfg.interpret)
+    return KernelPolicy(use_pallas=use, interpret=interp,
+                        fuse_linear=cfg.fuse_linear, flash=cfg.flash,
+                        bm=cfg.bm, bn=cfg.bn, bk=cfg.bk, bq=cfg.bq,
+                        bkv=cfg.bkv)
+
+
+# ---------------------------------------------------------------------------
+# fused adapted linear (differentiable)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _fused_tt_linear(pol: KernelPolicy, alpha: float, x, w, a, b):
+    return ops.tt_linear(x, w, a, b, alpha=alpha, backend="pallas",
+                         interpret=pol.interpret, bm=pol.bm, bn=pol.bn,
+                         bk=pol.bk)
+
+
+def _fused_tt_linear_fwd(pol, alpha, x, w, a, b):
+    return _fused_tt_linear(pol, alpha, x, w, a, b), (x, w, a, b)
+
+
+def _fused_tt_linear_bwd(pol, alpha, res, g):
+    x, w, a, b = res
+    # dx = g·Wᵀ + α·(g·Bᵀ)·Aᵀ — the SAME fused base-matmul + rank-r
+    # epilogue, so the backward's big GEMM stays on the kernel. The N/K
+    # roles swap under the transpose, so the tile overrides swap with them.
+    dx = ops.tt_linear(g, w.T, b.T, a.T, alpha=alpha, backend="pallas",
+                       interpret=pol.interpret, bm=pol.bm, bn=pol.bk,
+                       bk=pol.bn)
+    xf = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    gf = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
+    # dW = Xᵀ·G is dead code under PEFT (W frozen, cotangent dropped) and
+    # XLA eliminates it; computed for custom_vjp completeness.
+    dw = xf.T @ gf
+    gb = gf @ b.astype(jnp.float32).T
+    da = alpha * (xf.T @ gb)
+    db = alpha * ((xf @ a.astype(jnp.float32)).T @ gf)
+    return (dx.astype(x.dtype), dw.astype(w.dtype), da.astype(a.dtype),
+            db.astype(b.dtype))
+
+
+_fused_tt_linear.defvjp(_fused_tt_linear_fwd, _fused_tt_linear_bwd)
+
+
+def tt_linear(x, w, a, b, *, alpha: float = 1.0,
+              policy: Optional[KernelPolicy] = None):
+    """y = x·W + α·(x·A)·B. x: (..., K); w: (K, N); a: (K, r); b: (r, N)."""
+    if policy is not None and policy.fused_linear:
+        return _fused_tt_linear(policy, float(alpha), x, w, a, b)
+    return _ref.tt_linear_ref(x, w, a, b, float(alpha))
+
+
+def tt_linear_batched_a(x, w, a, b, *, alpha: float = 1.0,
+                        policy: Optional[KernelPolicy] = None):
+    """Per-row-A adapted linear (the (4+1)d slot-task routing form).
+
+    x: (S, [1,] K); w: (K, N); a: (S, K, r); b: (r, N). The Pallas kernel
+    handles the decode shape (one token per slot row); other shapes (e.g. a
+    per-example task vector during training) run the batched-einsum
+    reference from the same seam.
+    """
+    decode_shaped = x.ndim == 2 or (x.ndim == 3 and x.shape[1] == 1)
+    if decode_shaped:
+        fused = policy is not None and policy.fused_linear
+        kw = dict(interpret=policy.interpret, bm=policy.bm, bn=policy.bn,
+                  bk=policy.bk) if fused else {}
+        return ops.tt_linear_batched_a(
+            x, w, a, b, alpha=float(alpha),
+            backend="pallas" if fused else "ref", **kw)
+    # (B, T>1, K) generalization (per-example task vectors during
+    # training) — no kernel for this shape yet; batched-einsum reference
+    p = jnp.einsum("b...k,bkr->b...r", x, a.astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    y = y + float(alpha) * jnp.dot(p, b.astype(p.dtype),
+                                   preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (flash forward, reference-recompute backward)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _fused_flash(pol: KernelPolicy, causal: bool, q, k, v):
+    return ops.flash_attention(q, k, v, causal=causal, backend="pallas",
+                               interpret=pol.interpret, bq=pol.bq,
+                               bkv=pol.bkv)
+
+
+def _fused_flash_fwd(pol, causal, q, k, v):
+    return _fused_flash(pol, causal, q, k, v), (q, k, v)
+
+
+def _fused_flash_bwd(pol, causal, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ops.flash_attention(q_, k_, v_, causal=causal,
+                                               backend="ref"), q, k, v)
+    return vjp(g)
+
+
+_fused_flash.defvjp(_fused_flash_fwd, _fused_flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    policy: Optional[KernelPolicy] = None):
+    """GQA attention. q: (B, T, H, d); k, v: (B, S, KV, d) -> (B, T, H, d)."""
+    if policy is not None and policy.flash_attn:
+        return _fused_flash(policy, causal, q, k, v)
+    return ops.flash_attention(q, k, v, causal=causal, backend="ref")
+
+
+def decode_attention(q, k, v, pos, *,
+                     policy: Optional[KernelPolicy] = None):
+    """Cached single-token decode. q: (B, 1, H, d); k, v: (B, S, KV, d);
+    pos: scalar or (B,) per-slot positions -> (B, 1, H, d)."""
+    if policy is not None and policy.flash_attn:
+        return ops.decode_attention(q, k, v, pos, backend="pallas",
+                                    interpret=policy.interpret,
+                                    bkv=policy.bkv)
+    return ops.decode_attention(q, k, v, pos, backend="ref")

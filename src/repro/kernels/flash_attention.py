@@ -29,7 +29,8 @@ NEG = -1e30
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-            scale: float, causal: bool, bq: int, bkv: int, kv_steps: int):
+            scale: float, causal: bool, bq: int, bkv: int, kv_steps: int,
+            kv_len: int):
     i, j = pl.program_id(1), pl.program_id(2)
 
     @pl.when(j == 0)
@@ -47,16 +48,16 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale  # (bq, bkv)
+        ki = j * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        valid = ki < kv_len                            # kv tile padding
         if causal:
             qi = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
-            ki = j * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
-            valid = qi >= ki
-            s = jnp.where(valid, s, NEG)
+            valid &= qi >= ki
+        s = jnp.where(valid, s, NEG)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
         p = jnp.exp(s - m_new[:, None])
-        if causal:
-            p = jnp.where(valid, p, 0.0)
+        p = jnp.where(valid, p, 0.0)
         corr = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
         acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
@@ -71,18 +72,24 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bkv",
-                                             "interpret"))
+                                             "interpret", "kv_len"))
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     causal: bool = True, bq: int = 256, bkv: int = 256,
-                    interpret: bool = True) -> jnp.ndarray:
-    """q: (BH, T, d); k, v: (BH, S, d) -> (BH, T, d)."""
+                    interpret: bool = True, kv_len: int = 0) -> jnp.ndarray:
+    """q: (BH, T, d); k, v: (BH, S, d) -> (BH, T, d).
+
+    kv_len: number of *real* key/value rows (0 -> S). Callers that pad S up
+    to a bkv multiple pass the unpadded length so the tail keys are masked
+    out of the softmax (zero-padded keys would otherwise contribute
+    exp(0) mass under non-causal attention).
+    """
     bh, t, d = q.shape
     s_len = k.shape[1]
     assert t % bq == 0 and s_len % bkv == 0, (t, s_len, bq, bkv)
     grid = (bh, t // bq, s_len // bkv)
     kernel = functools.partial(
         _kernel, scale=d ** -0.5, causal=causal, bq=bq, bkv=bkv,
-        kv_steps=grid[2])
+        kv_steps=grid[2], kv_len=kv_len or s_len)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -102,3 +109,95 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# decode-shaped variant: one query token per (batch·head) row against a
+# fixed-width KV cache, masked by a per-row position (the serving engine's
+# continuous-batching slots each sit at their own cache position).
+# ---------------------------------------------------------------------------
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, scale: float, bkv: int, kv_steps: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[0]                                   # this slot's position
+    run = j * bkv <= pos                               # skip future kv tiles
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0]                                   # (1, d)
+        k = k_ref[0, :, 0]                             # (bkv, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (1, bkv)
+        ki = j * bkv + jax.lax.broadcasted_iota(jnp.int32, (1, bkv), 1)
+        valid = ki <= pos                              # cache cells written
+        s = jnp.where(valid, s, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.where(valid, jnp.exp(s - m_new[:, None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+            p.astype(v_ref.dtype), v_ref[0, :, 0],
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == kv_steps - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bkv", "interpret"))
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     pos: jnp.ndarray, *, bkv: int = 256,
+                     interpret: bool = True) -> jnp.ndarray:
+    """q: (B, H, d); k, v: (B, S, KV, d) NATIVE cache layout; pos: (B,)
+    int32 -> (B, H, d).
+
+    Row b attends key/value cells [0, pos[b]] of its cache (pos is the cell
+    the current token was just written to); KV tiles strictly beyond a
+    slot's position are skipped entirely. The cache is read in its stored
+    (B, S, KV, d) layout — the GQA broadcast happens in the index map
+    (query head h reads kv head h // G), so the decode loop never
+    materializes a transposed or head-repeated copy of the cache.
+    """
+    b, h, d = q.shape
+    s_len, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    assert s_len % bkv == 0, (s_len, bkv)
+    grid = (b, h, s_len // bkv)
+    kernel = functools.partial(_decode_kernel, scale=d ** -0.5, bkv=bkv,
+                               kv_steps=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, j: (bi,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, d), lambda bi, hi, j: (bi, hi, 0)),
+            pl.BlockSpec((1, bkv, 1, d),
+                         lambda bi, hi, j: (bi, j, hi // g, 0)),
+            pl.BlockSpec((1, bkv, 1, d),
+                         lambda bi, hi, j: (bi, j, hi // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda bi, hi, j: (bi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(pos.astype(jnp.int32), q, k, v)

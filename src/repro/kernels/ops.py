@@ -1,25 +1,50 @@
 """Public jit'd wrappers for the Pallas kernels.
 
 These handle the gap between model-land and kernel-land: leading batch dims,
-tile padding, GQA head broadcast, dtype policy, and backend dispatch —
-``backend="auto"`` uses the Pallas kernel on TPU and the pure-jnp oracle
-elsewhere (the CPU container runs kernels only under interpret=True, which
-is for correctness tests, not speed).
+tile padding on EVERY dim (M, N, K, r for the linear kernels; T, S for the
+attention kernels — GeGLU d_ff, odd vocab slices and non-128-multiple
+sequence lengths all pad up and slice back down), GQA head broadcast, dtype
+policy, and backend dispatch — ``backend="auto"`` uses the Pallas kernel on
+TPU and the pure-jnp oracle elsewhere (the CPU container runs kernels only
+under interpret=True, which is for correctness tests, not speed).
+
+Model code should not call this module directly: ``kernels/dispatch.py``
+wraps these entry points behind a ``KernelPolicy`` (DESIGN.md §5) and is the
+single seam the model/serving stack routes through.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import decode_attention as _decode_attn
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.tt_linear import tt_linear as _tt_linear
+from repro.kernels.tt_linear import tt_linear_batched_a as _tt_linear_ba
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _use_ref(backend: str) -> bool:
+    return backend == "ref" or (backend == "auto" and not _on_tpu())
+
+
+def _interp(interpret: bool | None) -> bool:
+    return (not _on_tpu()) if interpret is None else interpret
+
+
+def _pick_tile(size: int, override: int, prefer: tuple) -> int:
+    """Largest preferred tile that divides ``size``; otherwise the smallest
+    preferred tile (the caller pads up to a multiple of it)."""
+    if override:
+        return override
+    for t in prefer:
+        if size % t == 0:
+            return t
+    return prefer[-1]
 
 
 def _pad_to(x, axis: int, mult: int):
@@ -33,37 +58,90 @@ def _pad_to(x, axis: int, mult: int):
 
 
 def tt_linear(x, w, a, b, *, alpha: float = 1.0, backend: str = "auto",
-              interpret: bool | None = None):
+              interpret: bool | None = None, bm: int = 0, bn: int = 0,
+              bk: int = 0):
     """Adapted linear layer y = x·W + α·(x·A)·B with arbitrary leading dims.
 
-    x: (..., K); w: (K, N); a: (K, r); b: (r, N).
+    x: (..., K); w: (K, N); a: (K, r); b: (r, N). No dim needs to be a tile
+    multiple: M/N/K pad with zeros (exact — zero rows/cols contribute
+    nothing) and the output slices back to (..., N).
     """
-    if backend == "ref" or (backend == "auto" and not _on_tpu()):
+    if _use_ref(backend):
         return _ref.tt_linear_ref(x, w, a, b, alpha)
-    interp = (not _on_tpu()) if interpret is None else interpret
     lead = x.shape[:-1]
     k_dim = x.shape[-1]
+    n_dim = w.shape[1]
     xf = x.reshape(-1, k_dim)
-    bm = 256 if xf.shape[0] % 256 == 0 else 128
+    bm = _pick_tile(xf.shape[0], bm, (256, 128))
+    bn = _pick_tile(n_dim, bn, (256, 128))
+    bk = _pick_tile(k_dim, bk, (512, 256, 128))
     xf, m0 = _pad_to(xf, 0, bm)
-    rpad = (-a.shape[1]) % 128
-    if rpad:
-        a = jnp.pad(a, ((0, 0), (0, rpad)))
-        b = jnp.pad(b, ((0, rpad), (0, 0)))
-    y = _tt_linear(xf, w, a, b, alpha=alpha, bm=bm,
-                   bn=min(256, w.shape[1]), bk=min(512, k_dim),
-                   interpret=interp)
-    return y[:m0].reshape(*lead, w.shape[1])
+    xf, _ = _pad_to(xf, 1, bk)
+    w, _ = _pad_to(w, 0, bk)
+    w, n0 = _pad_to(w, 1, bn)
+    a, _ = _pad_to(a, 0, bk)
+    a, _ = _pad_to(a, 1, 128)            # r is kept whole per tile
+    b, _ = _pad_to(b, 0, 128)
+    b, _ = _pad_to(b, 1, bn)
+    y = _tt_linear(xf, w, a, b, alpha=alpha, bm=bm, bn=bn, bk=bk,
+                   interpret=_interp(interpret))
+    return y[:m0, :n0].reshape(*lead, n0)
+
+
+def tt_linear_batched_a(x, w, a, b, *, alpha: float = 1.0,
+                        backend: str = "auto",
+                        interpret: bool | None = None, bm: int = 0,
+                        bn: int = 0, bk: int = 0):
+    """Per-row-A adapted linear: y[s] = x[s]·W + α·(x[s]·A[s])·B.
+
+    x: (S, K) or (S, 1, K); w: (K, N); a: (S, K, r); b: (r, N). The leading
+    S axis is the serving engine's slot axis — A[s] was gathered from the
+    (4+1)d task axis by slot s's task id, so a mixed-task decode batch runs
+    as ONE fused kernel call.
+    """
+    squeeze = x.ndim == 3
+    if squeeze:
+        assert x.shape[1] == 1, ("batched-A fusion is decode-shaped "
+                                 "(one token per slot)", x.shape)
+        x = x[:, 0]
+    if _use_ref(backend):
+        p = jnp.einsum("sk,skr->sr", x, a.astype(x.dtype),
+                       preferred_element_type=jnp.float32)
+        y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+        y = (y + alpha * jnp.dot(p, b.astype(p.dtype),
+                                 preferred_element_type=jnp.float32)
+             ).astype(x.dtype)
+        return y[:, None] if squeeze else y
+    k_dim, n_dim = w.shape
+    bm = _pick_tile(x.shape[0], bm, (8,))
+    bn = _pick_tile(n_dim, bn, (256, 128))
+    bk = _pick_tile(k_dim, bk, (512, 256, 128))
+    x, m0 = _pad_to(x, 0, bm)
+    x, _ = _pad_to(x, 1, bk)
+    w, _ = _pad_to(w, 0, bk)
+    w, n0 = _pad_to(w, 1, bn)
+    a, _ = _pad_to(a, 0, bm)
+    a, _ = _pad_to(a, 1, bk)
+    a, _ = _pad_to(a, 2, 128)
+    b, _ = _pad_to(b, 0, 128)
+    b, _ = _pad_to(b, 1, bn)
+    y = _tt_linear_ba(x, w, a, b, alpha=alpha, bm=bm, bn=bn, bk=bk,
+                      interpret=_interp(interpret))
+    y = y[:m0, :n0]
+    return y[:, None] if squeeze else y
 
 
 def flash_attention(q, k, v, *, causal: bool = True, backend: str = "auto",
-                    interpret: bool | None = None):
+                    interpret: bool | None = None, bq: int = 0,
+                    bkv: int = 0):
     """GQA flash attention. q: (B, T, H, d); k, v: (B, S, KV, d).
 
     KV heads are broadcast to the query-head count before the per-head
-    kernel call (zero-copy under XLA when G == 1).
+    kernel call (zero-copy under XLA when G == 1). T and S need not be tile
+    multiples: both pad up and the padded keys are masked inside the kernel
+    (``kv_len``), padded query rows are sliced off.
     """
-    if backend == "ref" or (backend == "auto" and not _on_tpu()):
+    if _use_ref(backend):
         g = q.shape[2] // k.shape[2]
         kk = jnp.repeat(k, g, axis=2) if g > 1 else k
         vv = jnp.repeat(v, g, axis=2) if g > 1 else v
@@ -71,15 +149,50 @@ def flash_attention(q, k, v, *, causal: bool = True, backend: str = "auto",
             q.transpose(0, 2, 1, 3), kk.transpose(0, 2, 1, 3),
             vv.transpose(0, 2, 1, 3), causal=causal)
         return out.transpose(0, 2, 1, 3)
-    interp = (not _on_tpu()) if interpret is None else interpret
     b, t, h, d = q.shape
     s, kv = k.shape[1], k.shape[2]
     g = h // kv
     qh = q.transpose(0, 2, 1, 3).reshape(b * h, t, d)
     kh = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, s, d)
     vh = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, s, d)
-    bq = 256 if t % 256 == 0 else 128
-    bkv = 256 if s % 256 == 0 else 128
+    bq = _pick_tile(t, bq, (256, 128))
+    bkv = _pick_tile(s, bkv, (256, 128))
+    qh, t0 = _pad_to(qh, 1, bq)
+    kh, s0 = _pad_to(kh, 1, bkv)
+    vh, _ = _pad_to(vh, 1, bkv)
     out = _flash(qh, kh, vh, causal=causal, bq=bq, bkv=bkv,
-                 interpret=interp)
-    return out.reshape(b, h, t, d).transpose(0, 2, 1, 3)
+                 interpret=_interp(interpret), kv_len=s0)
+    return out[:, :t0].reshape(b, h, t0, d).transpose(0, 2, 1, 3)
+
+
+def decode_attention(q, k, v, pos, *, backend: str = "auto",
+                     interpret: bool | None = None, bkv: int = 0):
+    """Cached single-token decode attention with per-row positions.
+
+    q: (B, 1, H, d); k, v: (B, S, KV, d) full-width caches; pos: (B,) — row
+    b attends cache cells [0, pos[b]]. Returns (B, 1, H, d).
+    """
+    b, t, h, d = q.shape
+    assert t == 1, "decode attention expects a single query token"
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    if _use_ref(backend):
+        qh = q[:, 0].reshape(b * h, d)
+        kh = (jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1)
+              .reshape(b * h, s, d))
+        vh = (jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1)
+              .reshape(b * h, s, d))
+        out = _ref.decode_attention_ref(qh, kh, vh,
+                                        jnp.repeat(pos, h))
+        return out.reshape(b, 1, h, d)
+    bkv = _pick_tile(s, bkv, (256, 128))
+    # the kernel reads the cache in its native (B, S, KV, d) layout (GQA
+    # broadcast happens in its index map), so the decode hot loop never
+    # materializes a transposed / head-repeated cache copy; padded tail
+    # cells sit beyond every row's position -> masked by pos
+    kp, _ = _pad_to(k, 1, bkv)
+    vp, _ = _pad_to(v, 1, bkv)
+    out = _decode_attn(q[:, 0], kp, vp, pos, bkv=bkv,
+                       interpret=_interp(interpret))
+    return out[:, None]

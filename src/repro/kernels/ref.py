@@ -28,3 +28,16 @@ def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         s = jnp.where(mask[None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         pos: jnp.ndarray) -> jnp.ndarray:
+    """Single-token cached decode. q: (BH, d); k, v: (BH, S, d);
+    pos: (BH,) — each row attends cache cells [0, pos[row]]."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bd,bsd->bs", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    mask = jnp.arange(k.shape[1])[None, :] <= pos[:, None]
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bs,bsd->bd", p.astype(v.dtype), v)

@@ -54,6 +54,77 @@ def _kernel(x_ref, w_ref, a_ref, b_ref, out_ref, acc_ref, accp_ref, *,
         out_ref[...] = (acc_ref[...] + alpha * delta).astype(out_ref.dtype)
 
 
+def _batched_a_kernel(x_ref, w_ref, a_ref, b_ref, out_ref, acc_ref,
+                      accp_ref, *, alpha: float, k_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        accp_ref[...] = jnp.zeros_like(accp_ref)
+
+    x = x_ref[...]
+    acc_ref[...] += jax.lax.dot(
+        x, w_ref[...], preferred_element_type=jnp.float32)
+    # per-row A: row m of the tile contracts against its own (bk, r) slice
+    # (batched dot_general — the slot-gathered 4+1d task routing)
+    accp_ref[...] += jax.lax.dot_general(
+        x, a_ref[...], (((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        delta = jax.lax.dot(accp_ref[...].astype(b_ref.dtype), b_ref[...],
+                            preferred_element_type=jnp.float32)
+        out_ref[...] = (acc_ref[...] + alpha * delta).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "bm", "bn", "bk",
+                                             "interpret"))
+def tt_linear_batched_a(x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray,
+                        b: jnp.ndarray, *, alpha: float = 1.0, bm: int = 8,
+                        bn: int = 256, bk: int = 512,
+                        interpret: bool = True) -> jnp.ndarray:
+    """x: (M, K); w: (K, N); a: (M, K, r); b: (r, N) -> (M, N).
+
+    Same fusion as ``tt_linear`` but the A operand carries a leading slot
+    axis — one low-rank factor per output row. This is the serving engine's
+    decode shape: M is the continuous-batching slot axis and A[m] was
+    gathered from the (4+1)d task axis by the slot's task id, so per-request
+    task routing stays inside the one fused kernel. bm defaults to the f32
+    sublane (8): decode Ms are slot counts, not token counts.
+    """
+    m, k_dim = x.shape
+    _, n = w.shape
+    r = a.shape[2]
+    assert a.shape[:2] == (m, k_dim), (a.shape, x.shape)
+    assert m % bm == 0 and n % bn == 0 and k_dim % bk == 0, \
+        (m, n, k_dim, bm, bn, bk)
+    grid = (m // bm, n // bn, k_dim // bk)
+
+    kernel = functools.partial(_batched_a_kernel, alpha=alpha,
+                               k_steps=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bm, bk, r), lambda i, j, k: (i, k, 0)),
+            pl.BlockSpec((r, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, r), jnp.float32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w, a, b)
+
+
 @functools.partial(jax.jit, static_argnames=("alpha", "bm", "bn", "bk",
                                              "interpret"))
 def tt_linear(x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray,

@@ -24,10 +24,22 @@ import jax
 import jax.numpy as jnp
 
 from repro.config.base import ModelConfig
+from repro.kernels import dispatch
 from repro.models.layers import AdapterCtx, adapted_linear, apply_rope
-from repro.sharding import BATCH, SEQ, maybe_shard
+from repro.sharding import BATCH, SEQ, current_mesh, maybe_shard
 
 NEG_INF = -1e30
+
+
+def _flash_ok(ctx: AdapterCtx) -> bool:
+    """Pallas attention applies on a single device only — under a >1-chip
+    mesh the sharded XLA paths (context-parallel scores, sequence-sharded
+    caches) own the layout decisions."""
+    pol = ctx.policy
+    if pol is None or not pol.flash_attn:
+        return False
+    mesh = current_mesh()
+    return mesh is None or mesh.size == 1
 
 
 def _split_heads(x, n_heads, head_dim):
@@ -143,15 +155,21 @@ def attention(x: jnp.ndarray, w: dict, ctx: AdapterCtx, cfg: ModelConfig, *,
         ck = maybe_shard(ck, BATCH, "model", None, None)
         cv = maybe_shard(cv, BATCH, "model", None, None)
         s_len = ck.shape[1]
-        qh = q.reshape(b, 1, n_kv, g, hd)
         cp = jnp.broadcast_to(jnp.asarray(cache_pos), (b,))
-        mask = (jnp.arange(s_len)[None, :] <= cp[:, None]
-                )[:, None, None, None, :]
-        out = _softmax_attend(qh, ck, cv, mask, scale)
+        if _flash_ok(ctx):
+            # decode-shaped Pallas kernel: per-slot position masking and
+            # the GQA broadcast happen inside the dispatch seam
+            out = dispatch.decode_attention(q, ck, cv, cp,
+                                            policy=ctx.policy)
+            out = out.reshape(b, 1, n_kv, g, hd)
+        else:
+            qh = q.reshape(b, 1, n_kv, g, hd)
+            mask = (jnp.arange(s_len)[None, :] <= cp[:, None]
+                    )[:, None, None, None, :]
+            out = _softmax_attend(qh, ck, cv, mask, scale)
         new_cache = {"k": ck, "v": cv}
     else:
         # ---- train / prefill / cross
-        from repro.sharding import current_mesh
         mesh = current_mesh()
         n_model = (mesh.shape["model"] if mesh is not None
                    and "model" in mesh.axis_names else 1)
@@ -162,7 +180,16 @@ def attention(x: jnp.ndarray, w: dict, ctx: AdapterCtx, cfg: ModelConfig, *,
         k = maybe_shard(k, BATCH, None, "model", None)
         v = maybe_shard(v, BATCH, None, "model", None)
         qh = q.reshape(b, t, n_kv, g, hd)
-        if (not heads_shardable and t % n_model == 0
+        eff_causal = causal and kv_x is None
+        if _flash_ok(ctx) and (not eff_causal or t == k.shape[1]):
+            # train/prefill flash route: blockwise online softmax — the
+            # (T, S) score matrix stays out of HBM in the forward (the
+            # backward currently recomputes via the reference path, see
+            # kernels/dispatch.py)
+            out = dispatch.flash_attention(q, k, v, causal=eff_causal,
+                                           policy=ctx.policy)
+            out = out.reshape(b, t, n_kv, g, hd)
+        elif (not heads_shardable and t % n_model == 0
                 and t // n_model <= max(chunk, 512)):
             # §Perf iteration W1 (whisper: 20 heads vs 16-way model axis):
             # context-parallel scores — shard the query-T axis of the score

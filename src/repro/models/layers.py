@@ -7,6 +7,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.peft import api as peft_api
 from repro.sharding import BATCH, SEQ, maybe_shard
 
@@ -17,15 +18,19 @@ class AdapterCtx:
 
     spec is static; broadcast is closed over the scan; layer is this layer's
     slice of the per-layer factors (sliced by the scan / by position);
-    task is the MTL task index (4+1d) — None otherwise.
+    task is the MTL task index (4+1d) — None otherwise; policy is the
+    resolved kernel-dispatch policy (kernels/dispatch.py) — None keeps the
+    unfused reference path.
     """
     spec: peft_api.AdapterSpec
     broadcast: Any
     layer: Any
     task: Optional[Any] = None
+    policy: Optional[dispatch.KernelPolicy] = None
 
     def at(self, layer_slice) -> "AdapterCtx":
-        return AdapterCtx(self.spec, self.broadcast, layer_slice, self.task)
+        return AdapterCtx(self.spec, self.broadcast, layer_slice, self.task,
+                          self.policy)
 
 
 NO_ADAPTER = AdapterCtx(peft_api.NONE, {}, None)
@@ -36,8 +41,29 @@ def adapted_linear(x: jnp.ndarray, w: jnp.ndarray, ctx: AdapterCtx, m: str,
     """y = x·W (+ bias) + adapter delta for matrix type ``m``.
 
     This is the paper's Eq. (5): the frozen pre-trained map plus the TT
-    (or baseline-adapter) low-rank update.
+    (or baseline-adapter) low-rank update. When the dispatch policy routes
+    to Pallas, the adapter is folded into lora-form (A, B) and base matmul
+    + rank-r epilogue run as ONE fused kernel — the delta is applied while
+    the output tile is still in VMEM instead of three HBM round-trips of
+    the (M, N) output (kernels/tt_linear.py).
     """
+    pol = ctx.policy
+    if pol is not None and pol.fused_linear and ctx.spec.adapts(m):
+        form = peft_api.lora_form_factors(ctx.spec, ctx.broadcast, ctx.layer,
+                                          m, task=ctx.task)
+        if form is not None:
+            fa, fb, alpha = form
+            fa, fb = fa.astype(x.dtype), fb.astype(x.dtype)
+            wc = w.astype(x.dtype)
+            if fa.ndim == 3:      # (B,) task vector: per-slot A operand
+                y = dispatch.tt_linear_batched_a(x, wc, fa, fb, alpha=alpha,
+                                                 policy=pol)
+            else:
+                y = dispatch.tt_linear(x, wc, fa, fb, alpha=alpha,
+                                       policy=pol)
+            if b is not None:
+                y = y + b.astype(y.dtype)
+            return y
     y = x @ w.astype(x.dtype)
     if b is not None:
         y = y + b.astype(x.dtype)

@@ -170,16 +170,19 @@ def next_token_loss(logits: jnp.ndarray, tokens: jnp.ndarray,
 
 def loss_fn(adapter, base, frozen, batch: dict, cfg: ModelConfig,
             spec: peft_api.AdapterSpec, *, remat: bool = False,
-            chunk: int = 0, aux_weight: float | None = None) -> tuple:
+            chunk: int = 0, aux_weight: float | None = None,
+            policy=None) -> tuple:
     """PEFT objective: CE + MoE aux losses. ``adapter`` first so
     jax.value_and_grad(loss_fn) differentiates only the adapter (the frozen
     base never gets a gradient — the memory story that lets 1T-param models
-    fine-tune, DESIGN.md §4)."""
+    fine-tune, DESIGN.md §4). ``policy`` is the resolved kernel-dispatch
+    policy — the train hot path runs the fused Pallas kernels (forward AND
+    backward, via their custom VJPs) when it routes to Pallas."""
     bc, per_layer = peft_api.adapter_factors(spec, adapter, frozen)
     out = transformer.forward(
         base, cfg, spec, bc, per_layer, batch.get("tokens"),
         embeds=batch.get("embeds"), enc_embeds=batch.get("enc_embeds"),
-        task=batch.get("task"), remat=remat, chunk=chunk)
+        task=batch.get("task"), remat=remat, chunk=chunk, policy=policy)
     prefix = 0 if batch.get("embeds") is None else batch["embeds"].shape[1]
     loss = next_token_loss(out.logits, batch["tokens"], batch.get("mask"),
                            prefix, vocab_size=cfg.vocab_size)

@@ -255,9 +255,11 @@ def _sublayer(h, blk, mixer, ffn, ctx: AdapterCtx, cfg: ModelConfig, *,
 def run_blocks(h, blocks, pattern, spec: peft_api.AdapterSpec, broadcast,
                per_layer, cfg: ModelConfig, *, causal=True, positions=None,
                caches=None, cache_pos=None, enc_out=None, layer_offset=0,
-               task=None, remat=False, chunk=0, nb=None):
+               task=None, remat=False, chunk=0, nb=None, policy=None):
     """Scan over super-blocks. blocks: list of per-position dicts (leaves
-    stacked over nb). Returns (h, new_caches, aux)."""
+    stacked over nb). Returns (h, new_caches, aux). ``policy`` is the
+    resolved kernel-dispatch policy (kernels/dispatch.py), carried into
+    every layer by AdapterCtx."""
     p = len(pattern)
     nb = nb if nb is not None else (
         jax.tree_util.tree_leaves(blocks)[0].shape[0])
@@ -271,7 +273,7 @@ def run_blocks(h, blocks, pattern, spec: peft_api.AdapterSpec, broadcast,
         for i, (mixer, ffn) in enumerate(pattern):
             ly = (None if pl_b is None
                   else jax.tree_util.tree_map(lambda a: a[i], pl_b))
-            ctx = AdapterCtx(spec, broadcast, ly, task)
+            ctx = AdapterCtx(spec, broadcast, ly, task, policy)
             h, nc, aux = _sublayer(
                 h, blks[i], mixer, ffn, ctx, cfg, causal=causal,
                 positions=positions,
@@ -304,14 +306,15 @@ class ModelOutputs:
 ENC_PATTERN = (("attn", "dense"),)
 
 
-def encode(base, cfg: ModelConfig, enc_embeds, spec, broadcast, per_layer):
+def encode(base, cfg: ModelConfig, enc_embeds, spec, broadcast, per_layer,
+           policy=None):
     """Whisper-style encoder over precomputed (stub) frame embeddings."""
     h = maybe_shard(enc_embeds.astype(cfg.compute_dtype), BATCH, SEQ, None)
     pos = jnp.arange(h.shape[1])
     h, _, aux = run_blocks(
         h, base["enc_blocks"], ENC_PATTERN, spec, broadcast,
         per_layer, cfg, causal=False, positions=pos, layer_offset=0,
-        nb=cfg.encoder_layers)
+        nb=cfg.encoder_layers, policy=policy)
     h = norm(h, jax.tree_util.tree_map(lambda a: a[0],
                                        base["enc_final_norm"]), cfg.norm_eps)
     return h, aux
@@ -319,19 +322,20 @@ def encode(base, cfg: ModelConfig, enc_embeds, spec, broadcast, per_layer):
 
 def forward(base, cfg: ModelConfig, spec, broadcast, per_layer, tokens=None,
             *, embeds=None, enc_embeds=None, task=None, remat=False,
-            chunk=0, return_caches=False, cache_len=0):
+            chunk=0, return_caches=False, cache_len=0, policy=None):
     """Train / prefill forward. Returns ModelOutputs with (B, T, V) logits.
 
     tokens: (B, T) int32; embeds: optional precomputed prefix embeddings
     (B, Tp, d) prepended to the token embeddings (VLM patch stub);
-    enc_embeds: encoder-side stub input for enc-dec models.
+    enc_embeds: encoder-side stub input for enc-dec models; policy: the
+    resolved kernel-dispatch policy (None -> reference XLA paths).
     """
     aux = {}
     enc_out = None
     layer_offset = 0
     if cfg.is_encdec:
         enc_out, aux = encode(base, cfg, enc_embeds, spec, broadcast,
-                              per_layer)
+                              per_layer, policy=policy)
         layer_offset = cfg.encoder_layers
 
     h = embed_tokens(tokens, base["embed"]["tok"], cfg.compute_dtype)
@@ -345,7 +349,7 @@ def forward(base, cfg: ModelConfig, spec, broadcast, per_layer, tokens=None,
         h, base["blocks"], cfg.block_pattern, spec, broadcast, per_layer,
         cfg, causal=True, positions=positions, enc_out=enc_out,
         layer_offset=layer_offset, task=task, remat=remat, chunk=chunk,
-        caches=None)
+        caches=None, policy=policy)
     aux.update(aux2)
     h = norm(h, jax.tree_util.tree_map(lambda a: a[0], base["final_norm"]),
              cfg.norm_eps)
@@ -392,11 +396,12 @@ def insert_cache_slot(caches, req_caches, slot):
 
 
 def decode_step(base, cfg: ModelConfig, spec, broadcast, per_layer, token,
-                caches, cache_pos, *, enc_out=None, task=None):
+                caches, cache_pos, *, enc_out=None, task=None, policy=None):
     """One decode step: token (B, 1) -> (logits (B, V), new caches).
 
     cache_pos: scalar, or a (B,) vector of per-row positions (continuous-
-    batching slots — see repro/serving/engine.py)."""
+    batching slots — see repro/serving/engine.py). ``policy`` routes the
+    adapted matmuls / attention through the fused Pallas kernels."""
     h = embed_tokens(token, base["embed"]["tok"], cfg.compute_dtype)
     h = maybe_shard(h, BATCH, None, None)
     if jnp.ndim(cache_pos) == 0:
@@ -410,7 +415,7 @@ def decode_step(base, cfg: ModelConfig, spec, broadcast, per_layer, token,
         h, base["blocks"], cfg.block_pattern, spec, broadcast, per_layer,
         cfg, causal=True, positions=positions, caches=caches,
         cache_pos=cache_pos, enc_out=enc_out, layer_offset=layer_offset,
-        task=task)
+        task=task, policy=policy)
     h = norm(h, jax.tree_util.tree_map(lambda a: a[0], base["final_norm"]),
              cfg.norm_eps)
     logits = lm_logits(h[:, 0], base["embed"]["tok"])

@@ -126,5 +126,66 @@ def adapter_delta(spec: AdapterSpec, broadcast, layer_slice, x: jnp.ndarray,
     raise ValueError(spec.kind)
 
 
+def lora_form_factors(spec: AdapterSpec, broadcast, layer_slice, m: str, *,
+                      task: Optional[Any] = None):
+    """Fold the current layer's adapter for matrix type ``m`` into lora-form
+    ``(A, B, alpha)`` with Δy = α·(x·A)·B — the shape the fused Pallas
+    kernel consumes (kernels/dispatch.py, DESIGN.md §5).
+
+    Every kind folds: MetaTT pre-merges A = G1·C[l(,t),m] (two tiny r×r
+    GEMMs, activation-independent — cf. the paper's §2.4 serving merge and
+    the TT-LoRA / LoRETTA two-GEMM deployments); LoRA is already (A, B);
+    VeRA scales its frozen pair by the trained d/g vectors; LoTR folds the
+    core into U. Returns None when ``m`` is not adapted. With a (B,) task
+    vector (4+1d per-request routing) A gains a leading slot axis — the
+    ``tt_linear_batched_a`` kernel's operand.
+
+    Factors are returned in parameter dtype; callers cast to the activation
+    dtype (mirroring the unfused delta paths).
+    """
+    if not spec.adapts(m):
+        return None
+    cfg = spec.cfg
+    mi = cfg.m_index(m) if hasattr(cfg, "m_index") else \
+        cfg.matrix_types.index(m)
+    d_in, d_out = cfg.d_in[mi], cfg.d_out[mi]
+    if spec.kind == "metatt":
+        if "a" in layer_slice:           # serving "lora" runtime: pre-folded
+            a_l = layer_slice["a"]
+            if cfg.variant == "4+1d":
+                if task is None:
+                    raise ValueError("variant 4+1d needs a task index")
+                a = a_l[task, mi]
+            elif cfg.variant == "4+ed":
+                a = a_l[0 if task is None else task, mi]
+            else:
+                a = a_l[mi]
+            return a[..., :d_in, :], broadcast["g4"][:, :d_out], 1.0
+        c_l = layer_slice["c"]
+        if cfg.variant == "4+1d":
+            if task is None:
+                raise ValueError("variant 4+1d needs a task index")
+            c_lm = c_l[task, mi]         # scalar: (r, r); (B,): (B, r, r)
+        elif cfg.variant == "4+ed":
+            c_lm = c_l[0 if task is None else task, mi]
+        else:
+            c_lm = c_l[mi]
+        g1 = broadcast["g1"][:d_in]
+        a = jnp.einsum("dr,...rs->...ds", g1, c_lm)
+        return a, broadcast["g4"][:, :d_out], cfg.alpha
+    if spec.kind == "lora":
+        return (layer_slice["a"][mi][:d_in],
+                layer_slice["b"][mi][:, :d_out], cfg.alpha / cfg.rank)
+    if spec.kind == "vera":
+        # (((x·A)⊙d)·B)⊙g == x·(A·diag(d))·(B·diag(g))
+        a = broadcast["a"][:d_in] * layer_slice["d"][mi][None, :]
+        b = broadcast["b"][:, :d_out] * layer_slice["g"][mi][None, :d_out]
+        return a, b, cfg.alpha
+    if spec.kind == "lotr":
+        a = broadcast["u"][:d_in] @ layer_slice["s"][mi]
+        return a, broadcast["v"][:d_out].T, cfg.alpha
+    raise ValueError(spec.kind)
+
+
 def count_trainable(spec: AdapterSpec, trainable) -> int:
     return int(sum(jnp.size(x) for x in jax.tree_util.tree_leaves(trainable)))

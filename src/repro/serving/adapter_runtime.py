@@ -21,6 +21,11 @@ adapter) report ``tasked=True``; the engine then threads a per-slot (B,)
 task-id vector into every adapter delta, which gathers per-row C[l, t_b, m]
 slices from the SHARED tensor train — one decode batch mixes tasks with no
 per-task adapter stacks (contrast LoRETTA / TT-LoRA deployments).
+
+Kernel fusion: under ``Engine(..., kernels=KernelConfig(...))`` both the
+live and lora runtimes serve through the fused Pallas seam — the per-slot
+task gather lands in the ``tt_linear_batched_a`` kernel's leading A axis,
+so decode stays one fused kernel per adapted matrix (DESIGN.md §5).
 """
 from __future__ import annotations
 

@@ -38,7 +38,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config.base import ModelConfig
+from repro.config.base import KernelConfig, ModelConfig
+from repro.kernels import dispatch as kernel_dispatch
 from repro.models import transformer
 from repro.peft import api as peft_api
 from repro.serving import sampling as sampling_lib
@@ -94,7 +95,8 @@ class Engine:
                  prompt_buckets: Sequence[int] = (),
                  sampling: sampling_lib.SamplingConfig =
                  sampling_lib.SamplingConfig(),
-                 seed: int = 0):
+                 seed: int = 0,
+                 kernels: Optional[KernelConfig] = None):
         for mixer, _ in model_cfg.block_pattern:
             if mixer != "attn":
                 raise NotImplementedError(
@@ -118,6 +120,11 @@ class Engine:
         self.out_cap = out_cap
         self.prompt_buckets = tuple(sorted(prompt_buckets))
         self.sampling = sampling.validate()
+        # resolved once; static inside the jitted prefill/decode graphs.
+        # With a (4+1)d adapter the fused decode route is the batched-A
+        # kernel: each slot's A factor is gathered from the task axis by
+        # the slot's task id (kernels/tt_linear.py::tt_linear_batched_a).
+        self.policy = kernel_dispatch.resolve(kernels)
         self._key = jax.random.PRNGKey(seed)
         self._weights = (runtime.base, runtime.broadcast, runtime.per_layer)
         self._prefill = jax.jit(self._prefill_impl)
@@ -133,7 +140,7 @@ class Engine:
         """tokens (1, Pb) right-padded -> (last-position logits (V,),
         caches padded to cache_len)."""
         out = transformer.forward(base, self.cfg, self.rt.spec, bc, pl,
-                                  tokens, task=task)
+                                  tokens, task=task, policy=self.policy)
         caches = _pad_caches(out.caches, self.cfg, 1, self.cache_len)
         last = jnp.take(out.logits[0], last_idx, axis=0)
         return last, caches
@@ -169,7 +176,7 @@ class Engine:
             task = s.task if self.rt.tasked else None
             logits, caches = transformer.decode_step(
                 base, self.cfg, self.rt.spec, bc, pl, s.tok, s.caches,
-                s.pos, task=task)
+                s.pos, task=task, policy=self.policy)
             key, sub = jax.random.split(s.key)
             nxt = sampling_lib.sample(logits, sub, self.sampling)
             # inactive slots write to column out_cap -> dropped
@@ -282,34 +289,39 @@ class Engine:
 
 
 def make_serve_step(cfg: ModelConfig, spec: peft_api.AdapterSpec,
-                    *, with_enc: bool = False) -> Callable:
+                    *, with_enc: bool = False, kernels=None) -> Callable:
     """Single-token decode step (the decode_* dry-run entry point).
 
     fn(base, adapter, frozen, token (B,1), caches, pos[, enc_out][, task])
     -> (logits, caches). ``pos`` may be a scalar or a (B,) per-row vector;
-    ``task`` a scalar or (B,) task-id vector (4+1d routing).
+    ``task`` a scalar or (B,) task-id vector (4+1d routing); ``kernels`` a
+    KernelConfig routing the step through the fused Pallas kernels.
     """
+    policy = kernel_dispatch.resolve(kernels)
+
     def step_fn(base, adapter, frozen, token, caches, pos, enc_out=None,
                 task=None):
         bc, pl = peft_api.adapter_factors(spec, adapter, frozen)
         return transformer.decode_step(base, cfg, spec, bc, pl, token,
                                        caches, pos, enc_out=enc_out,
-                                       task=task)
+                                       task=task, policy=policy)
 
     return jax.jit(step_fn, donate_argnums=(4,))
 
 
 def make_prefill(cfg: ModelConfig, spec: peft_api.AdapterSpec,
-                 cache_len: int) -> Callable:
+                 cache_len: int, *, kernels=None) -> Callable:
     """Prefill: run the full prompt, return (logits, caches padded to
     cache_len). Attention caches come back length-T from the forward pass
     and are placed into the fixed-size decode cache."""
+    policy = kernel_dispatch.resolve(kernels)
+
     def prefill_fn(base, adapter, frozen, tokens, enc_embeds=None,
                    embeds=None, task=None):
         bc, pl = peft_api.adapter_factors(spec, adapter, frozen)
         out = transformer.forward(base, cfg, spec, bc, pl, tokens,
                                   embeds=embeds, enc_embeds=enc_embeds,
-                                  task=task)
+                                  task=task, policy=policy)
         caches = _pad_caches(out.caches, cfg, tokens.shape[0], cache_len)
         return out.logits, caches, out.enc_out
 

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.config.base import ModelConfig, OptimizerConfig, TrainConfig
 from repro.distributed.compression import GradCompressor
+from repro.kernels import dispatch as kernel_dispatch
 from repro.models import model as model_lib
 from repro.optim import adamw
 from repro.peft import api as peft_api
@@ -60,15 +61,19 @@ def reinit_after_dmrg(state: TrainState, new_adapter,
 def make_train_step(cfg: ModelConfig, spec: peft_api.AdapterSpec,
                     opt_cfg: OptimizerConfig, train_cfg: TrainConfig,
                     total_steps: int, *, chunk: int = 0,
-                    donate: bool = True) -> Callable:
-    """Returns jitted fn(state, base, frozen, batch) -> (state, metrics)."""
+                    donate: bool = True, kernels=None) -> Callable:
+    """Returns jitted fn(state, base, frozen, batch) -> (state, metrics).
+
+    kernels: KernelConfig (or resolved KernelPolicy) — routes the Eq. (5)
+    hot path through the fused Pallas kernels (kernels/dispatch.py)."""
     schedule = adamw.make_schedule(opt_cfg, total_steps)
     compressor = GradCompressor(train_cfg.grad_compression)
     remat = train_cfg.remat != "none"
+    policy = kernel_dispatch.resolve(kernels)
 
     def loss(adapter, base, frozen, batch):
         return model_lib.loss_fn(adapter, base, frozen, batch, cfg, spec,
-                                 remat=remat, chunk=chunk)
+                                 remat=remat, chunk=chunk, policy=policy)
 
     grad_fn = jax.value_and_grad(loss, has_aux=True)
 

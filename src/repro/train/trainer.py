@@ -47,7 +47,8 @@ class Trainer:
         self.compressor = GradCompressor(run.train.grad_compression)
         self.state = ts.init_train_state(params["adapter"], self.compressor)
         self.step_fn = ts.make_train_step(
-            self.cfg, self.spec, run.optimizer, run.train, self.total_steps)
+            self.cfg, self.spec, run.optimizer, run.train, self.total_steps,
+            kernels=run.kernels)
         self.ckpt = (CheckpointManager(run.train.ckpt_dir,
                                        keep=run.train.ckpt_keep)
                      if run.train.ckpt_dir else None)
