@@ -7,6 +7,10 @@
    (repro/serving/) serving a MIXED-TASK batch (>= 2 distinct task ids per
    decode batch, one shared 4+1d TT) vs the seed's one-request-shape
    per-token Python loop, in tokens/sec.
+3. Paged vs dense KV cache on a shared-prefix workload: token parity is
+   asserted and throughput / peak KV memory / prefix-cache hit rate come
+   from the engine's OWN stats object (engine.last_stats — the numbers a
+   deployment would scrape), not benchmark-side re-derivation.
 
     PYTHONPATH=src python benchmarks/bench_serving.py [--smoke]
 """
@@ -17,10 +21,12 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit, time_call
 from repro import configs as registry
-from repro.config.base import KernelConfig, RunConfig, SHAPES
+from repro.config.base import (KernelConfig, RunConfig, SHAPES,
+                               ServeConfig)
 from repro.core import tt as ttlib
 from repro.core.merge import fold_transformer
 from repro.kernels import dispatch
@@ -168,8 +174,12 @@ def _fused_engine_rows(rows, *, smoke: bool) -> None:
     for name, kcfg in (("unfused", None),
                        ("fused_interpret", KernelConfig(backend="pallas",
                                                         interpret=True))):
-        eng = Engine(cfg, rt, max_batch=slots, cache_len=8 + n_new,
-                     out_cap=n_new, kernels=kcfg)
+        # dense mode: the single-token decode path is what the batched-A
+        # and decode-flash kernels fuse (the paged path is benchmarked in
+        # _paged_rows)
+        eng = Engine(cfg, rt, serve=ServeConfig(
+            max_batch=slots, cache_len=8 + n_new, out_cap=n_new,
+            cache_mode="dense"), kernels=kcfg)
         eng.generate(reqs)               # compile
         t0 = time.perf_counter()
         outs[name] = eng.generate(reqs)
@@ -187,11 +197,90 @@ def _fused_engine_rows(rows, *, smoke: bool) -> None:
             "fused engine decode diverged from the unfused path")
 
 
+def _paged_rows(rows, *, smoke: bool) -> None:
+    """Paged vs dense KV cache on a shared-prefix mixed-task workload.
+
+    Half the requests share a common prompt prefix (the multi-task
+    deployment shape: one system prompt, many tasks — sharable across
+    tasks precisely because ONE MetaTT tensor train serves them all).
+    The dense engine reserves max_batch × cache_len up front; the paged
+    engine allocates per request and reuses prefix blocks, so its peak
+    KV memory (engine.last_stats.kv_bytes_peak) must come in lower and
+    its prefix hit rate nonzero. Token parity dense-vs-paged is asserted.
+    """
+    n_req, n_new, slots = (6, 6, 3) if smoke else (16, 16, 4)
+    cfg = registry.get_smoke_config("stablelm-1.6b")
+    run_cfg = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                        adapter_kind="metatt", adapter_variant="4+1d",
+                        num_tasks=2, adapter_rank=8)
+    spec = M.build_adapter_spec(run_cfg)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, spec, key)
+    params["adapter"] = {"cores": ttlib.random_tt(key, spec.cfg.mode_sizes,
+                                                  8, scale=0.5)}
+    rt = AdapterRuntime.build("lora", params["base"], spec,
+                              params["adapter"], params["frozen"])
+    cache_len = 32 + n_new
+    sys_prompt = np.asarray(jax.random.randint(key, (18,), 0,
+                                               cfg.vocab_size))
+    keys = jax.random.split(key, n_req)
+    reqs = []
+    for i in range(n_req):
+        tail = np.asarray(jax.random.randint(keys[i], (2 + i % 4,), 0,
+                                             cfg.vocab_size))
+        prompt = (np.concatenate([sys_prompt, tail])
+                  if i % 2 == 0 else tail)      # half share the prefix
+        reqs.append(Request(prompt, n_new, task=i % 2))
+
+    outs = {}
+    for mode in ("dense", "paged"):
+        eng = Engine(cfg, rt, serve=ServeConfig(
+            max_batch=slots, cache_len=cache_len, out_cap=n_new,
+            cache_mode=mode, page_size=8, prefill_chunk=8))
+        eng.generate(reqs)                      # compile + warm the cache
+        t0 = time.perf_counter()
+        outs[mode] = eng.generate(reqs)
+        dt = time.perf_counter() - t0
+        st = eng.last_stats                     # the engine's own numbers
+        rows.append(emit(
+            f"serving/engine_{mode}_shared_prefix", dt / max(
+                st.tokens_generated, 1) * 1e6,
+            f"tok_per_s={st.tokens_per_s:.1f},"
+            f"kv_bytes_peak={st.kv_bytes_peak},"
+            f"kv_blocks_peak={st.kv_blocks_peak}/{st.num_blocks},"
+            f"prefix_hit_rate={st.prefix_hit_rate:.2f},"
+            f"cow={st.cow_copies},waits={st.backpressure_waits},"
+            f"decode_traces={st.decode_traces},"
+            f"prefill_traces={st.prefill_traces}"))
+        print(f"# engine stats [{mode}]: {st.summary()}")
+        if mode == "dense":
+            dense_bytes = st.kv_bytes_peak   # the engine's own number
+        if mode == "paged":
+            parity = all(a.tolist() == b.tolist() for a, b in
+                         zip(outs["dense"], outs["paged"]))
+            rows.append(emit(
+                "serving/paged_vs_dense", 0.0,
+                f"identical_tokens={parity},"
+                f"kv_bytes_paged={st.kv_bytes_peak},"
+                f"kv_bytes_dense={dense_bytes},"
+                f"prefix_hit_rate={st.prefix_hit_rate:.2f}"))
+            if not parity:
+                raise AssertionError("paged engine diverged from dense")
+            if not st.prefix_hit_rate > 0:
+                raise AssertionError("shared-prefix workload missed the "
+                                     "prefix cache")
+            if not st.kv_bytes_peak < dense_bytes:
+                raise AssertionError(
+                    f"paged peak KV {st.kv_bytes_peak} not below dense "
+                    f"reservation {dense_bytes}")
+
+
 def run(*, smoke: bool = False) -> list:
     rows = []
     _decode_step_rows(rows)
     _engine_rows(rows, smoke=smoke)
     _fused_engine_rows(rows, smoke=smoke)
+    _paged_rows(rows, smoke=smoke)
     return rows
 
 

@@ -5,9 +5,11 @@ dry-run artifacts (benchmarks/roofline.py); run
 ``python -m repro.launch.dryrun --all`` first to refresh them.
 
 ``--smoke`` runs the CI subset: the kernel-dispatch benches and the serving
-smoke benches (both of which assert fused-vs-unfused parity from the same
-dispatch seam the model uses) — cheap enough to gate every CI run against
-kernel regressions and benchmark bit-rot.
+smoke benches — fused-vs-unfused parity from the same dispatch seam the
+model uses, plus the paged-vs-dense engine comparison (token parity,
+prefix-cache hit rate and peak-KV-memory assertions from the engine's own
+stats) — cheap enough to gate every CI run against kernel regressions and
+benchmark bit-rot.
 """
 from __future__ import annotations
 
@@ -50,5 +52,6 @@ def main(*, smoke: bool = False) -> None:
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="CI subset: kernel-dispatch + serving smoke benches")
+                    help="CI subset: kernel-dispatch + serving smoke "
+                         "benches (incl. paged-vs-dense engine parity)")
     main(smoke=ap.parse_args().smoke)

@@ -28,11 +28,14 @@ from repro.serving import AdapterRuntime, Engine, Request
 def serve(cfg, runtime, reqs, *, max_batch, cache_len, out_cap):
     eng = Engine(cfg, runtime, max_batch=max_batch, cache_len=cache_len,
                  out_cap=out_cap)
-    eng.generate(reqs)                    # warm-up: compile once
+    eng.generate(reqs)   # warm-up: compile once + populate the prefix cache
     t0 = time.perf_counter()
     outs = eng.generate(reqs)
     dt = time.perf_counter() - t0
     toks = sum(len(o) for o in outs)
+    # per-generate observability: KV blocks in use, prefix-cache hit rate,
+    # admit/evict/COW counts (serving/stats.py)
+    print(f"  stats: {eng.last_stats.summary()}")
     return outs, dt, toks
 
 

@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 test suite + kernel-parity job + benchmark smoke.
+# CI entry point: tier-1 test suite + kernel-parity job + paged-serving
+# parity job + benchmark smoke.
 #
 #   scripts/ci.sh            # full tier-1 + parity + smoke benches
 #   scripts/ci.sh -m 'not slow'   # extra pytest args pass through
@@ -15,6 +16,12 @@ python -m pytest -x -q "$@"
 # (guaranteed to run even when "$@" filters the main suite)
 python -m pytest -x -q tests/test_kernels.py tests/test_dispatch.py
 
+# paged-serving parity job: paged engine (block manager, prefix cache,
+# in-loop chunked prefill) must be token-identical to the dense engine,
+# with the paged-attention kernel in interpret mode
+python -m pytest -x -q tests/test_block_manager.py tests/test_paged_engine.py
+
 # benchmark smoke: kernel-dispatch + serving benches (assert fused-vs-unfused
-# token parity), so kernel regressions and benchmark bit-rot fail CI
+# AND paged-vs-dense token parity, nonzero prefix hit rate, paged KV peak
+# below the dense reservation), so regressions and benchmark bit-rot fail CI
 python benchmarks/run.py --smoke

@@ -196,6 +196,74 @@ class KernelConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Serving-engine knobs (repro/serving/engine.py).
+
+    cache_mode: "paged" (default) — block/paged KV cache with a host-side
+        BlockManager (free list, refcounts, copy-on-write), hash-keyed
+        prefix sharing and chunked prefill folded into the one jitted
+        decode loop; "dense" — the PR-1 layout (max_batch × cache_len
+        reserved per slot, per-bucket prefill graphs), kept as the parity
+        baseline.
+    max_batch:  decode slots stepped together by the jitted loop.
+    cache_len:  per-request bound on prompt_len + max_new_tokens (both
+        modes; in paged mode it also sizes the block-table width).
+    out_cap:    per-request bound on max_new_tokens.
+    page_size:  tokens per KV block (paged mode). 8-multiples keep the
+        Pallas paged-attention tile on the f32 sublane grid.
+    num_blocks: total KV cache budget in blocks (paged mode); this — not
+        the slot count — is what admission is gated on. 0 derives the
+        dense-equivalent budget max_batch * ceil(cache_len / page_size).
+    prefill_chunk: prompt tokens processed per decode-loop step while a
+        slot is prefilling (chunked prefill co-batches with decode in the
+        same fixed-shape graph, so there is no per-bucket prefill ladder).
+    prefix_cache: share KV blocks between requests with a common prompt
+        prefix (hash-chained at page granularity, partial last page
+        included; divergence after a shared partial page copies-on-write).
+    prompt_buckets: dense mode only — prefill pad buckets.
+    """
+    max_batch: int = 4
+    cache_len: int = 64
+    out_cap: int = 32
+    cache_mode: str = "paged"      # paged | dense
+    page_size: int = 16
+    num_blocks: int = 0
+    prefill_chunk: int = 8
+    prefix_cache: bool = True
+    prompt_buckets: tuple = ()
+
+    @property
+    def pages_per_request(self) -> int:
+        """Block-table width: worst-case pages one request can touch."""
+        return -(-self.cache_len // self.page_size)
+
+    @property
+    def resolved_num_blocks(self) -> int:
+        return self.num_blocks or self.max_batch * self.pages_per_request
+
+    def validate(self) -> "ServeConfig":
+        if self.cache_mode not in ("paged", "dense"):
+            raise ValueError(f"unknown cache_mode {self.cache_mode!r}; "
+                             "want paged | dense")
+        for name in ("max_batch", "cache_len", "out_cap", "page_size",
+                     "prefill_chunk"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"ServeConfig.{name} must be >= 1")
+        if self.cache_mode == "paged" and self.page_size % 8 != 0:
+            raise ValueError(
+                f"page_size={self.page_size} must be a multiple of the "
+                "8-row f32 sublane (the paged-attention kernel tiles "
+                "(page, head_dim) blocks)")
+        if self.cache_mode == "paged" \
+                and self.resolved_num_blocks < self.pages_per_request:
+            raise ValueError(
+                f"num_blocks={self.resolved_num_blocks} cannot hold even "
+                f"one worst-case request ({self.pages_per_request} pages "
+                f"of {self.page_size} for cache_len={self.cache_len})")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
 class OptimizerConfig:
     name: str = "adamw"
     lr: float = 1e-3               # paper's MetaTT grid: {1e-3, 5e-4}

@@ -18,11 +18,11 @@ the jit-friendly stateless transform used inside the train step when
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def int8_encode(x: jnp.ndarray) -> tuple:
@@ -44,7 +44,6 @@ def topk_encode(x: jnp.ndarray, frac: float) -> tuple:
 
 
 def topk_decode(kept, idx, shape) -> jnp.ndarray:
-    import numpy as np
     out = jnp.zeros(int(np.prod(shape)), kept.dtype)
     return out.at[idx].set(kept).reshape(shape)
 

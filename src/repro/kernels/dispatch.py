@@ -215,3 +215,16 @@ def decode_attention(q, k, v, pos, *,
                                     interpret=policy.interpret,
                                     bkv=policy.bkv)
     return ops.decode_attention(q, k, v, pos, backend="ref")
+
+
+def paged_decode_attention(q, k_cache, v_cache, tables, pos, *,
+                           policy: Optional[KernelPolicy] = None):
+    """Paged-cache attention (decode and in-loop chunked prefill).
+    q: (B, C, H, d); k_cache, v_cache: (N, page, KV, d); tables: (B, P)
+    int32 block table; pos: (B,) base positions -> (B, C, H, d)."""
+    if policy is not None and policy.flash_attn:
+        return ops.paged_decode_attention(q, k_cache, v_cache, tables, pos,
+                                          backend="pallas",
+                                          interpret=policy.interpret)
+    return ops.paged_decode_attention(q, k_cache, v_cache, tables, pos,
+                                      backend="ref")

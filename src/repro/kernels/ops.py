@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import decode_attention as _decode_attn
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.paged_attention import (
+    paged_decode_attention as _paged_attn)
 from repro.kernels.tt_linear import tt_linear as _tt_linear
 from repro.kernels.tt_linear import tt_linear_batched_a as _tt_linear_ba
 
@@ -196,3 +198,26 @@ def decode_attention(q, k, v, pos, *, backend: str = "auto",
     out = _decode_attn(q[:, 0], kp, vp, pos, bkv=bkv,
                        interpret=_interp(interpret))
     return out[:, None]
+
+
+def paged_decode_attention(q, k_cache, v_cache, tables, pos, *,
+                           backend: str = "auto",
+                           interpret: bool | None = None):
+    """Block-table attention over a paged KV cache (serving engine decode
+    + in-loop chunked prefill).
+
+    q: (B, C, H, d) — C query tokens per slot, query c of slot b at
+    absolute position pos[b] + c; k_cache, v_cache: (N, page, KV, d) flat
+    block pools; tables: (B, P) int32 logical-page -> physical-block map
+    (sentinel >= N marks unallocated pages); pos: (B,). Returns
+    (B, C, H, d): query c attends cache cells [0, pos[b] + c]. The Pallas
+    kernel gathers blocks in its index map (scalar-prefetched table) so
+    the gathered cache never materializes; the reference path gathers
+    explicitly — same valid set, same logical order.
+    """
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (q.shape[0],))
+    if _use_ref(backend):
+        return _ref.paged_decode_attention_ref(q, k_cache, v_cache,
+                                               tables, pos)
+    return _paged_attn(q, k_cache, v_cache, tables, pos,
+                       interpret=_interp(interpret))

@@ -1,0 +1,132 @@
+"""Paged decode/chunked-prefill attention as a Pallas TPU kernel.
+
+vLLM-style paged attention for the serving engine's block/paged KV cache:
+k/v live in one flat pool of ``(page, kv_heads, d)`` blocks and each slot
+owns a **block table** mapping its logical pages to physical blocks. The
+kernel never materializes the gathered cache — the table is a
+scalar-prefetch operand and the *index map* does the gather, DMA-ing each
+physical block straight into VMEM (``pltpu.PrefetchScalarGridSpec``; see
+the guide's scalar-prefetch section). The GQA broadcast also happens in
+the index map (query head h reads kv head h // G), like the dense decode
+kernel.
+
+Queries are a (C,)-token chunk per slot — C = 1 is plain decode; C > 1 is
+the engine's in-loop chunked prefill, where prefill chunks and decode
+tokens co-batch in one fixed-shape graph. Query c of slot b sits at
+absolute position ``pos[b] + c`` and attends cache cells ``[0, pos[b]+c]``
+(per-slot, per-query masking); pages strictly beyond a slot's window are
+skipped entirely, and sentinel table entries (>= num_blocks: unallocated
+logical pages) are clamped by the index map and hidden by the same mask.
+
+Layout: blocks of (1, C, 1, d) queries per (slot, head) against
+(1, page, 1, d) cache tiles; online-softmax scratch (m, l, acc) carried
+across the sequential page grid axis, exactly like flash_attention.py.
+Validated in interpret mode against kernels/ref.py::
+paged_decode_attention_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
+
+NEG = -1e30
+
+
+def _kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, scale: float, page: int, chunk: int,
+            kv_steps: int):
+    b, j = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[b]                       # slot base position (first query)
+    # pages beyond the last query's position hold nothing attendable —
+    # skip them (their table entries may be sentinels)
+    run = j * page <= pos + chunk - 1
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0, :, 0]                                 # (C, d)
+        k = k_ref[0, :, 0]                                 # (page, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale    # (C, page)
+        ki = j * page + jax.lax.broadcasted_iota(jnp.int32, (chunk, page), 1)
+        qi = pos + jax.lax.broadcasted_iota(jnp.int32, (chunk, page), 0)
+        valid = ki <= qi                  # query c attends cells <= pos + c
+        s = jnp.where(valid, s, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.where(valid, jnp.exp(s - m_new[:, None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+            p.astype(v_ref.dtype), v_ref[0, :, 0],
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == kv_steps - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                           v_cache: jnp.ndarray, tables: jnp.ndarray,
+                           pos: jnp.ndarray, *,
+                           interpret: bool = True) -> jnp.ndarray:
+    """q: (B, C, H, d); k_cache, v_cache: (N, page, KV, d) flat block
+    pools; tables: (B, P) int32 block table (sentinel >= N for
+    unallocated pages); pos: (B,) base positions -> (B, C, H, d).
+
+    Grid (B, H, P): the page axis is sequential (online softmax); the
+    block table is scalar-prefetched so each page's physical block is
+    chosen in the index map — the gathered cache never exists in HBM.
+    """
+    b, c, h, d = q.shape
+    n, page, kv, _ = k_cache.shape
+    g = h // kv
+    p_tab = tables.shape[1]
+    grid = (b, h, p_tab)
+    kernel = functools.partial(_kernel, scale=d ** -0.5, page=page,
+                               chunk=c, kv_steps=p_tab)
+
+    def kv_map(bi, hi, j, tbl, _pos):
+        return (jnp.minimum(tbl[bi, j], n - 1), 0, hi // g, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, c, 1, d),
+                         lambda bi, hi, j, tbl, _pos: (bi, 0, hi, 0)),
+            pl.BlockSpec((1, page, 1, d), kv_map),
+            pl.BlockSpec((1, page, 1, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, c, 1, d),
+                               lambda bi, hi, j, tbl, _pos: (bi, 0, hi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((c,), jnp.float32),
+            pltpu.VMEM((c,), jnp.float32),
+            pltpu.VMEM((c, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, c, h, d), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), pos.astype(jnp.int32), q, k_cache, v_cache)

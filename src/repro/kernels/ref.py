@@ -41,3 +41,38 @@ def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     s = jnp.where(mask, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bs,bsd->bd", p.astype(v.dtype), v)
+
+
+def paged_decode_attention_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
+                               v_cache: jnp.ndarray, tables: jnp.ndarray,
+                               pos: jnp.ndarray) -> jnp.ndarray:
+    """Block-table attention over a paged KV cache (the Pallas twin's
+    allclose target).
+
+    q: (B, C, H, d) — C co-batched query tokens per slot, slot b's query c
+    at absolute position pos[b] + c; k_cache, v_cache: (N, page, KV, d)
+    flat block pools; tables: (B, P) int32 logical-page -> physical-block
+    map (entries may be an out-of-range sentinel: the gather clamps and
+    the position mask hides whatever it reads); pos: (B,) base positions.
+    Returns (B, C, H, d): query c attends cache cells [0, pos[b] + c].
+    """
+    b, c, h, d = q.shape
+    n, page, kv, _ = k_cache.shape
+    g = h // kv
+    tbl = jnp.clip(tables, 0, n - 1)
+    # (B, P, page, KV, d) -> (B, S, KV, d) with S = P * page cells in
+    # logical-position order — same valid set, same order as a dense cache
+    kg = k_cache[tbl].reshape(b, -1, kv, d)
+    vg = v_cache[tbl].reshape(b, -1, kv, d)
+    if g > 1:
+        kg = jnp.repeat(kg, g, axis=2)
+        vg = jnp.repeat(vg, g, axis=2)
+    scale = d ** -0.5
+    s = jnp.einsum("bchd,bshd->bhcs", q, kg,
+                   preferred_element_type=jnp.float32) * scale
+    ki = jnp.arange(kg.shape[1])
+    qpos = pos[:, None] + jnp.arange(c)[None, :]            # (B, C)
+    mask = ki[None, None, :] <= qpos[:, :, None]            # (B, C, S)
+    s = jnp.where(mask[:, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhcs,bshd->bchd", p.astype(vg.dtype), vg)

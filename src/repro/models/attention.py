@@ -99,12 +99,16 @@ def attention(x: jnp.ndarray, w: dict, ctx: AdapterCtx, cfg: ModelConfig, *,
               chunk: int = 0,
               kv_x: Optional[jnp.ndarray] = None,
               cache: Optional[dict] = None,
-              cache_pos: Optional[jnp.ndarray] = None):
+              cache_pos: Optional[jnp.ndarray] = None,
+              block_tables: Optional[jnp.ndarray] = None):
     """Returns (y, new_cache).
 
     Self-attention when kv_x is None; cross-attention otherwise (kv_x is the
     encoder output; cache then holds precomputed k/v and is not updated).
     Decode mode when ``cache is not None and x.shape[1] == 1`` for self-attn.
+    Paged mode when ``block_tables`` is given: ``cache`` holds flat
+    (N, page, KV, hd) block pools and x is a (B, C) chunk of co-batched
+    decode/prefill tokens (see _paged_attend).
     """
     hd = cfg.resolved_head_dim
     n_h, n_kv = cfg.num_heads, cfg.num_kv_heads
@@ -134,6 +138,12 @@ def attention(x: jnp.ndarray, w: dict, ctx: AdapterCtx, cfg: ModelConfig, *,
         q = apply_rope(q, positions, cfg.rope_theta)
         if new_cache is None or "k" not in (cache or {}):
             k = apply_rope(k, positions, cfg.rope_theta)
+
+    if block_tables is not None and kv_x is None:
+        assert cache is not None and positions.ndim == 2, \
+            "paged attention needs a paged cache and (B, C) positions"
+        return _paged_attend(x, q, k, v, w, ctx, cache, block_tables,
+                             positions, n_h, hd)
 
     if cache is not None and kv_x is None:
         # ---- self-attention decode: one new token into a full-length cache.
@@ -221,7 +231,55 @@ def attention(x: jnp.ndarray, w: dict, ctx: AdapterCtx, cfg: ModelConfig, *,
     return maybe_shard(y, BATCH, SEQ, None), new_cache
 
 
+def _paged_attend(x, q, k, v, w, ctx: AdapterCtx, cache: dict,
+                  block_tables, positions, n_h: int, hd: int):
+    """Paged-cache step: scatter the chunk's k/v into the flat block pools
+    by block table, then attend with per-slot per-query position masks.
+
+    x: (B, C, d_model) — C co-batched tokens per slot (decode: 1 real
+    token; chunked prefill: up to C prompt tokens), token c of slot b at
+    absolute position positions[b, c]; q/k/v: projected+RoPE'd heads;
+    cache: {"k","v"} (N, page, KV, hd) pools shared by every slot;
+    block_tables: (B, P) int32, sentinel >= N for unallocated pages.
+
+    Write-then-attend: a token's own k/v lands in its cell before the
+    masked attention reads it, so cells holding stale data (pad columns of
+    earlier steps) are always overwritten by the step that owns their
+    position before any query's mask reaches them. Writes through
+    sentinel or out-of-table pages drop (``mode="drop"``) — that is what
+    keeps an evicted slot's garbage out of blocks reassigned to new
+    requests.
+    """
+    b, t, _ = x.shape
+    n_blocks, page = cache["k"].shape[0], cache["k"].shape[1]
+    p_tab = block_tables.shape[1]
+    pidx = positions // page                                 # (B, C)
+    blk = jnp.take_along_axis(block_tables,
+                              jnp.clip(pidx, 0, p_tab - 1), axis=1)
+    blk = jnp.where(pidx < p_tab, blk, n_blocks)             # drop, not clamp
+    off = positions % page
+    ck = cache["k"].at[blk, off].set(k.astype(cache["k"].dtype),
+                                     mode="drop")
+    cv = cache["v"].at[blk, off].set(v.astype(cache["v"].dtype),
+                                     mode="drop")
+    pol = ctx.policy if _flash_ok(ctx) else None
+    out = dispatch.paged_decode_attention(q, ck, cv, block_tables,
+                                          positions[:, 0], policy=pol)
+    out = out.reshape(b, t, n_h * hd)
+    y = adapted_linear(out, w["wo"], ctx, "attn_o")
+    return maybe_shard(y, BATCH, SEQ, None), {"k": ck, "v": cv}
+
+
 def init_cache(cfg: ModelConfig, batch: int, length: int, dtype) -> dict:
     hd = cfg.resolved_head_dim
     shape = (batch, length, cfg.num_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, page_size: int,
+                     dtype) -> dict:
+    """Flat per-layer KV block pool: (num_blocks, page, KV, hd). Which
+    request owns which block lives host-side (serving/block_manager.py)."""
+    hd = cfg.resolved_head_dim
+    shape = (num_blocks, page_size, cfg.num_kv_heads, hd)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

@@ -202,7 +202,8 @@ def _split_layers(per_layer, nb: int, p: int, offset: int = 0):
 
 
 def _sublayer(h, blk, mixer, ffn, ctx: AdapterCtx, cfg: ModelConfig, *,
-              causal, positions, cache, cache_pos, enc_out, chunk):
+              causal, positions, cache, cache_pos, enc_out, chunk,
+              block_tables=None):
     aux = {}
     new_cache = {}
     if mixer != "none":
@@ -211,7 +212,8 @@ def _sublayer(h, blk, mixer, ffn, ctx: AdapterCtx, cfg: ModelConfig, *,
             y, c = attn_lib.attention(
                 hn, blk["mixer"], ctx, cfg, causal=causal,
                 positions=positions, chunk=chunk,
-                cache=(cache or {}).get("self"), cache_pos=cache_pos)
+                cache=(cache or {}).get("self"), cache_pos=cache_pos,
+                block_tables=block_tables)
             if c is not None:
                 new_cache["self"] = c
         elif mixer == "mamba":
@@ -255,11 +257,13 @@ def _sublayer(h, blk, mixer, ffn, ctx: AdapterCtx, cfg: ModelConfig, *,
 def run_blocks(h, blocks, pattern, spec: peft_api.AdapterSpec, broadcast,
                per_layer, cfg: ModelConfig, *, causal=True, positions=None,
                caches=None, cache_pos=None, enc_out=None, layer_offset=0,
-               task=None, remat=False, chunk=0, nb=None, policy=None):
+               task=None, remat=False, chunk=0, nb=None, policy=None,
+               block_tables=None):
     """Scan over super-blocks. blocks: list of per-position dicts (leaves
     stacked over nb). Returns (h, new_caches, aux). ``policy`` is the
     resolved kernel-dispatch policy (kernels/dispatch.py), carried into
-    every layer by AdapterCtx."""
+    every layer by AdapterCtx. ``block_tables`` switches attention to the
+    paged cache layout (one table shared by every layer)."""
     p = len(pattern)
     nb = nb if nb is not None else (
         jax.tree_util.tree_leaves(blocks)[0].shape[0])
@@ -278,7 +282,8 @@ def run_blocks(h, blocks, pattern, spec: peft_api.AdapterSpec, broadcast,
                 h, blks[i], mixer, ffn, ctx, cfg, causal=causal,
                 positions=positions,
                 cache=(cch[i] if has_cache else None),
-                cache_pos=cache_pos, enc_out=enc_out, chunk=chunk)
+                cache_pos=cache_pos, enc_out=enc_out, chunk=chunk,
+                block_tables=block_tables)
             new_cch.append(nc)
             for k, v in aux.items():
                 aux_acc[k] = aux_acc.get(k, 0.0) + v
@@ -383,6 +388,64 @@ def init_caches(cfg: ModelConfig, batch: int, length: int, dtype) -> list:
             ent["slstm"] = stack(xlstm_lib.init_slstm_cache(cfg, batch))
         out.append(ent)
     return out
+
+
+def init_paged_caches(cfg: ModelConfig, num_blocks: int, page_size: int,
+                      dtype) -> list:
+    """Paged cache pytree: one flat (nb, num_blocks, page, KV, hd) block
+    pool per pattern position. Attention-only — the paged engine rejects
+    stateful mixers up front (their caches are not position-indexed)."""
+    nb = cfg.num_super_blocks
+
+    def stack(tree):
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (nb,) + a.shape), tree)
+
+    out = []
+    for mixer, _ in cfg.block_pattern:
+        if mixer != "attn":
+            raise NotImplementedError(
+                f"paged caches are attention-only (got {mixer!r})")
+        out.append({"self": stack(attn_lib.init_paged_cache(
+            cfg, num_blocks, page_size, dtype))})
+    return out
+
+
+def copy_cache_block(caches, src, dst):
+    """Device-side copy-on-write: duplicate physical block ``src`` into
+    ``dst`` across every layer of a paged cache pytree (leaves stacked
+    (nb, N, page, KV, hd)). ``src``/``dst`` may be traced scalars; the
+    host-side BlockManager decides when a copy is needed
+    (serving/block_manager.py)."""
+    def one(c):
+        return c.at[:, dst].set(c[:, src])
+    return jax.tree_util.tree_map(one, caches)
+
+
+def paged_step(base, cfg: ModelConfig, spec, broadcast, per_layer, toks,
+               caches, block_tables, pos, sel, *, task=None, policy=None):
+    """One co-batched decode / chunked-prefill step over a paged cache.
+
+    toks: (B, C) — slot b's tokens at absolute positions pos[b]..pos[b]+C-1
+    (decode slots carry 1 real token, prefilling slots up to C prompt
+    tokens; trailing columns past a slot's real count are pad whose cache
+    writes are overwritten by the step that owns those positions);
+    block_tables: (B, P) int32; pos: (B,); sel: (B,) column whose logits
+    to return (the slot's last real token). Returns (logits (B, V),
+    new caches).
+    """
+    h = embed_tokens(toks, base["embed"]["tok"], cfg.compute_dtype)
+    h = maybe_shard(h, BATCH, None, None)
+    positions = pos[:, None] + jnp.arange(toks.shape[1])[None, :]
+    h, new_caches, _ = run_blocks(
+        h, base["blocks"], cfg.block_pattern, spec, broadcast, per_layer,
+        cfg, causal=True, positions=positions, caches=caches,
+        cache_pos=pos, task=task, policy=policy, block_tables=block_tables)
+    h = norm(h, jax.tree_util.tree_map(lambda a: a[0], base["final_norm"]),
+             cfg.norm_eps)
+    h_sel = h[jnp.arange(h.shape[0]), sel]                  # (B, d)
+    logits = lm_logits(h_sel, base["embed"]["tok"])
+    return logits, new_caches
 
 
 def insert_cache_slot(caches, req_caches, slot):

@@ -1,11 +1,23 @@
-"""Serving subsystem: continuous-batching engine, adapter runtimes,
-in-graph sampling (README §Serving).
+"""Serving subsystem: continuous-batching engine over a paged KV cache,
+adapter runtimes, in-graph sampling (README §Serving, DESIGN.md §7).
 
-  Engine          — slot-based continuous batching, jitted while_loop decode
+  Engine          — slot engine, paged KV cache (block manager + scheduler,
+                    prefix sharing, in-loop chunked prefill) by default;
+                    dense layout behind ServeConfig(cache_mode="dense")
   AdapterRuntime  — live TT | to_lora_form | fold_into_dense | none
   SamplingConfig  — greedy / temperature / top-k, applied in-graph
+  BlockManager    — host-side KV block pool: free list, refcounts, COW
+  PrefixCache     — hash-chained prompt-prefix -> KV-block index
+  Scheduler       — FIFO admission gated on free blocks, not free slots
+  EngineStats     — per-generate observability (engine.last_stats)
 """
+from repro.config.base import ServeConfig  # noqa: F401  (re-export)
 from repro.serving.adapter_runtime import AdapterRuntime  # noqa: F401
+from repro.serving.block_manager import (BlockManager,  # noqa: F401
+                                         PrefixCache)
 from repro.serving.engine import (DecodeState, Engine,  # noqa: F401
-                                  Request, make_prefill, make_serve_step)
+                                  PagedState, Request, make_prefill,
+                                  make_serve_step)
 from repro.serving.sampling import SamplingConfig, sample  # noqa: F401
+from repro.serving.scheduler import Scheduler  # noqa: F401
+from repro.serving.stats import EngineStats  # noqa: F401

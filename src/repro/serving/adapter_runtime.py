@@ -23,9 +23,11 @@ slices from the SHARED tensor train — one decode batch mixes tasks with no
 per-task adapter stacks (contrast LoRETTA / TT-LoRA deployments).
 
 Kernel fusion: under ``Engine(..., kernels=KernelConfig(...))`` both the
-live and lora runtimes serve through the fused Pallas seam — the per-slot
-task gather lands in the ``tt_linear_batched_a`` kernel's leading A axis,
-so decode stays one fused kernel per adapted matrix (DESIGN.md §5).
+live and lora runtimes serve through the fused Pallas seam — paged-cache
+attention runs the block-table kernel (kernels/paged_attention.py), and
+on single-token steps the per-slot task gather lands in the
+``tt_linear_batched_a`` kernel's leading A axis, one fused kernel per
+adapted matrix (DESIGN.md §5).
 """
 from __future__ import annotations
 

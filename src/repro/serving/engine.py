@@ -1,49 +1,66 @@
-"""Slot-based continuous-batching serving engine with a jitted decode loop.
+"""Continuous-batching serving engine with a paged KV cache.
 
-Architecture (README §Serving):
+Architecture (README §Serving, DESIGN.md §7):
 
-  * The engine owns ``max_batch`` decode SLOTS. Per-slot device state — KV
-    cache rows, current token, cache position, remaining-token budget,
-    active flag, output write index, task id — lives in one ``DecodeState``
-    pytree; request metadata stays on the host.
-  * PREFILL runs per request at batch 1 (prompts right-padded to a bucket
-    so a handful of shapes cover all lengths; padded cache cells are never
-    attended because the decode mask stops at the slot's position and
-    generated tokens overwrite cells before the mask reaches them). The
-    resulting cache is written into a free slot's batch row with
-    ``dynamic_update_slice`` (transformer.insert_cache_slot).
-  * The DECODE loop is a single jitted ``jax.lax.while_loop`` stepping every
-    active slot at once; sampling (serving/sampling.py) happens in-graph so
-    the loop never leaves the device. It returns control to the host exactly
-    when some slot finishes — the host then EVICTS it (harvests the output
-    row) and ADMITS the next pending request into the freed slot. In-flight
-    slots keep their cache rows and positions across the evict/admit cycle.
-  * TASK ROUTING: each slot carries a task id. With a 4+1d adapter under the
-    live/lora runtime the (B,) slot task vector gathers per-row C[l, t_b, m]
-    slices from the one shared tensor train, so a single decode batch mixes
-    tasks (paper Eq. (4)/(6)) — no per-task adapter stacks.
+  * The engine owns ``max_batch`` decode SLOTS stepped together by ONE
+    jitted ``jax.lax.while_loop``. Per-slot device state lives in a single
+    fixed-shape pytree; request metadata stays on the host.
+  * PAGED KV CACHE (default): k/v live in a flat pool of
+    ``num_blocks × page_size`` blocks per layer; each slot owns a block
+    table mapping logical pages to physical blocks. A host-side
+    ``BlockManager`` (free list, refcounts, copy-on-write) owns the pool;
+    the ``Scheduler`` admits requests by FREE BLOCKS, not free slots —
+    memory is reserved per request need, not worst-case per slot.
+  * PREFIX SHARING: prompt pages are indexed in a hash-chained
+    ``PrefixCache`` at request completion; later requests sharing a prompt
+    prefix map the cached blocks into their table instead of recomputing
+    them (refcounted; divergence inside a shared partial page
+    copies-on-write at admit time, so the decode loop never stops for a
+    copy). Chains are namespaced per task id on task-routed runtimes —
+    any task-adapted matrix perturbs the residual stream, so deep-layer
+    prefix KV is task-dependent even with frozen k/v projections; what
+    ONE global MetaTT adapter buys over per-task LoRA stacks is one
+    engine and one block pool for every task (see block_manager.py).
+  * IN-LOOP CHUNKED PREFILL: the while_loop body processes a fixed
+    ``(B, prefill_chunk)`` token block — prefilling slots consume up to
+    ``prefill_chunk`` prompt tokens per step while decode slots carry one
+    real token, co-batched in the SAME graph. There is no separate prefill
+    function and no per-bucket recompile ladder: the step compiles once
+    for all prompt lengths (the dense mode's ``_bucket`` ladder survives
+    only behind ``ServeConfig(cache_mode="dense")``, the parity baseline).
+  * The loop returns to the host exactly when some slot finishes — the
+    host EVICTS it (harvests the output row, returns blocks to the pool /
+    prefix cache) and ADMITS pending requests into freed slots while other
+    slots keep generating.
+  * TASK ROUTING: each slot carries a task id; with a 4+1d adapter under
+    the live/lora runtime the (B,) slot task vector gathers per-row
+    C[l, t_b, m] slices from the one shared tensor train (paper
+    Eq. (4)/(6)) — a single decode batch mixes tasks.
 
-The engine requires attention-pattern models (stateful mixers — mamba/xlstm
-— integrate right-padding junk into their prefill state and have no
-position-indexed cache to insert at slot granularity).
+The engine requires attention-pattern models (stateful mixers — mamba /
+xlstm — have no position-indexed cache to page).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import functools
+import time
 from typing import Any, Callable, List, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config.base import KernelConfig, ModelConfig
+from repro.config.base import KernelConfig, ModelConfig, ServeConfig
 from repro.kernels import dispatch as kernel_dispatch
 from repro.models import transformer
 from repro.peft import api as peft_api
 from repro.serving import sampling as sampling_lib
 from repro.serving.adapter_runtime import AdapterRuntime
+from repro.serving.block_manager import BlockManager, PrefixCache
+from repro.serving.scheduler import Scheduler
+from repro.serving.stats import EngineStats
 
 
 @dataclasses.dataclass
@@ -70,7 +87,7 @@ def _pad_caches(caches, cfg: ModelConfig, batch: int, cache_len: int):
 
 
 class DecodeState(NamedTuple):
-    """Loop-carried per-slot device state (leaves fixed-shape pytrees)."""
+    """Dense-mode loop-carried per-slot device state."""
     tok: jnp.ndarray        # (B, 1)  last sampled token per slot
     pos: jnp.ndarray        # (B,)    cache position tok will be written at
     remaining: jnp.ndarray  # (B,)    tokens still to sample
@@ -82,27 +99,55 @@ class DecodeState(NamedTuple):
     caches: Any             # transformer KV caches, batch axis = slots
 
 
+class PagedState(NamedTuple):
+    """Paged-mode loop-carried per-slot device state. A slot is either
+    PREFILLING (done < plen: the body consumes up to ``prefill_chunk``
+    prompt tokens per step) or DECODING (one sampled token per step) —
+    both co-batched in the same fixed-shape graph. Block tables are NOT
+    loop-carried: they only change at admit/evict boundaries, which the
+    loop already crosses, so the host passes them as a plain argument."""
+    tok: jnp.ndarray        # (B, 1)  last sampled token per slot
+    prompt: jnp.ndarray     # (B, Lp) full prompt tokens (right-padded)
+    plen: jnp.ndarray       # (B,)    prompt length
+    done: jnp.ndarray       # (B,)    tokens whose KV is in cache
+    remaining: jnp.ndarray  # (B,)    tokens still to sample
+    active: jnp.ndarray     # (B,)    slot is mid-request
+    widx: jnp.ndarray       # (B,)    next column of the output buffer
+    out: jnp.ndarray        # (B, out_cap) generated tokens
+    task: jnp.ndarray       # (B,)    per-slot task id (4+1d routing)
+    key: jnp.ndarray        # PRNG key (in-graph sampling)
+    caches: Any             # paged KV pools (leaves (nb, N, page, KV, hd))
+
+
 class Engine:
     """Continuous-batching engine over an AdapterRuntime.
 
-    cache_len bounds prompt_len + max_new_tokens per request; out_cap bounds
-    max_new_tokens. ``generate`` serves any number of requests through the
-    fixed slots, admitting/evicting as they finish.
+    ``serve`` (config.base.ServeConfig) picks the cache layout: "paged"
+    (default — block/paged cache, prefix sharing, in-loop chunked prefill)
+    or "dense" (the PR-1 slot layout, kept as the parity baseline). The
+    legacy keyword arguments populate a ServeConfig when ``serve`` is not
+    given. ``cache_len`` bounds prompt_len + max_new_tokens per request;
+    ``out_cap`` bounds max_new_tokens. ``generate`` serves any number of
+    requests through the fixed slots, admitting/evicting as they finish;
+    per-call observability lands on ``engine.last_stats``.
     """
 
     def __init__(self, model_cfg: ModelConfig, runtime: AdapterRuntime, *,
-                 max_batch: int = 4, cache_len: int = 64, out_cap: int = 32,
-                 prompt_buckets: Sequence[int] = (),
+                 max_batch: Optional[int] = None,
+                 cache_len: Optional[int] = None,
+                 out_cap: Optional[int] = None,
+                 prompt_buckets: Optional[Sequence[int]] = None,
                  sampling: sampling_lib.SamplingConfig =
                  sampling_lib.SamplingConfig(),
                  seed: int = 0,
-                 kernels: Optional[KernelConfig] = None):
+                 kernels: Optional[KernelConfig] = None,
+                 serve: Optional[ServeConfig] = None):
         for mixer, _ in model_cfg.block_pattern:
             if mixer != "attn":
                 raise NotImplementedError(
                     f"slot engine needs attention KV caches; mixer {mixer!r} "
                     "carries stateful caches that cannot be slot-inserted "
-                    "from a padded prefill")
+                    "or paged")
         if model_cfg.is_encdec:
             raise NotImplementedError("enc-dec serving is not slotted yet")
         if runtime.tasked and runtime.spec.adapts("moe_down"):
@@ -113,32 +158,106 @@ class Engine:
                 "per-request task routing does not reach the expert-sorted "
                 "moe_down path; serve this adapter with a scalar task "
                 "(per-task engines) or drop moe_down from matrix_types")
+        legacy = dict(max_batch=max_batch, cache_len=cache_len,
+                      out_cap=out_cap, prompt_buckets=prompt_buckets)
+        if serve is None:
+            serve = ServeConfig(
+                max_batch=max_batch if max_batch is not None else 4,
+                cache_len=cache_len if cache_len is not None else 64,
+                out_cap=out_cap if out_cap is not None else 32,
+                prompt_buckets=(tuple(prompt_buckets)
+                                if prompt_buckets is not None else ()))
+        elif any(v is not None for v in legacy.values()):
+            given = [k for k, v in legacy.items() if v is not None]
+            raise ValueError(
+                f"pass serving shape knobs either via serve=ServeConfig "
+                f"or via keyword arguments, not both (got serve= and "
+                f"{given})")
+        self.sv = serve.validate()
         self.cfg = model_cfg
         self.rt = runtime
-        self.max_batch = max_batch
-        self.cache_len = cache_len
-        self.out_cap = out_cap
-        self.prompt_buckets = tuple(sorted(prompt_buckets))
+        self.max_batch = self.sv.max_batch
+        self.cache_len = self.sv.cache_len
+        self.out_cap = self.sv.out_cap
+        self.prompt_buckets = tuple(sorted(self.sv.prompt_buckets))
         self.sampling = sampling.validate()
-        # resolved once; static inside the jitted prefill/decode graphs.
-        # With a (4+1)d adapter the fused decode route is the batched-A
-        # kernel: each slot's A factor is gathered from the task axis by
-        # the slot's task id (kernels/tt_linear.py::tt_linear_batched_a).
+        # resolved once; static inside the jitted step graphs. With a
+        # (4+1)d adapter the fused decode route is the batched-A kernel
+        # (kernels/tt_linear.py::tt_linear_batched_a); paged attention
+        # routes through kernels/paged_attention.py.
         self.policy = kernel_dispatch.resolve(kernels)
         self._key = jax.random.PRNGKey(seed)
         self._weights = (runtime.base, runtime.broadcast, runtime.per_layer)
-        self._prefill = jax.jit(self._prefill_impl)
-        self._admit = jax.jit(self._admit_impl, donate_argnums=(0,))
-        self._decode = jax.jit(self._decode_impl, donate_argnums=(3,))
+        self._decode_traces = 0
+        self._prefill_traces = 0
+        self.last_stats = EngineStats(cache_mode=self.sv.cache_mode)
+        if self.sv.cache_mode == "dense":
+            self._prefill = jax.jit(self._prefill_impl)
+            self._admit = jax.jit(self._admit_impl, donate_argnums=(0,))
+            self._decode = jax.jit(self._decode_impl, donate_argnums=(3,))
+        else:
+            self._init_paged()
+
+    def _init_paged(self) -> None:
+        sv = self.sv
+        self._chunk = min(sv.prefill_chunk, sv.cache_len)
+        self._page = sv.page_size
+        self._num_blocks = sv.resolved_num_blocks
+        # table width: worst-case pages per request, plus sentinel columns
+        # so pad-column writes past a request's allocation land out of
+        # table instead of clamping into a real page
+        self._p_tab = (sv.pages_per_request
+                       + max(1, -(-self._chunk // self._page)))
+        self._lp = sv.cache_len + self._chunk   # prompt buffer width
+        self.bm = BlockManager(self._num_blocks, self._page)
+        self.prefix = PrefixCache(self.bm) if sv.prefix_cache else None
+        self.sched = Scheduler(self.bm, self.prefix, self.last_stats)
+        # any task-adapted matrix (q/v by default) perturbs the residual
+        # stream, so layer>=1 prefix KV is task-dependent even where k/v
+        # projections are frozen — tasked runtimes key prefix chains per
+        # task id; untasked runtimes (one task, merged, none) share one
+        # namespace across all requests
+        self._kv_tasked = self.rt.tasked
+        self._tables = np.full((self.max_batch, self._p_tab),
+                               self._num_blocks, np.int32)
+        self._block_bytes = self._kv_bytes(self._page)
+        self._padmit = jax.jit(self._paged_admit_impl, donate_argnums=(0,))
+        self._pcow = jax.jit(self._cow_impl, donate_argnums=(0,))
+        self._pdecode = jax.jit(self._paged_decode_impl,
+                                donate_argnums=(3,))
+        # the physical block pools persist ACROSS generate calls — the
+        # prefix cache indexes into them, so warm requests reuse KV
+        # computed by earlier calls
+        self._paged_caches = transformer.init_paged_caches(
+            self.cfg, self._num_blocks, self._page, self.cfg.compute_dtype)
+
+    def _kv_bytes(self, tokens: int) -> int:
+        """Device bytes of k+v cache for ``tokens`` cells across every
+        layer — the one formula behind both the paged block size and the
+        dense-reservation equivalent the benchmarks compare against."""
+        return (2 * self.cfg.num_super_blocks * len(self.cfg.block_pattern)
+                * tokens * self.cfg.kv_dim
+                * jnp.dtype(self.cfg.compute_dtype).itemsize)
+
+    def _reset_paged_pool(self) -> None:
+        """Drop every block (and the prefix index) — used when a failed
+        generate leaves slot refcounts or donated buffers inconsistent."""
+        self.bm = BlockManager(self._num_blocks, self._page)
+        self.prefix = PrefixCache(self.bm) if self.sv.prefix_cache else None
+        self.sched = Scheduler(self.bm, self.prefix, self.last_stats)
+        self._tables[:] = self._num_blocks
+        self._paged_caches = transformer.init_paged_caches(
+            self.cfg, self._num_blocks, self._page, self.cfg.compute_dtype)
 
     # ------------------------------------------------------------------
-    # jitted pieces (weights passed as args so they are never baked into
-    # the executable as constants)
+    # dense mode: jitted pieces (weights passed as args so they are never
+    # baked into the executable as constants)
     # ------------------------------------------------------------------
 
     def _prefill_impl(self, base, bc, pl, tokens, last_idx, task):
         """tokens (1, Pb) right-padded -> (last-position logits (V,),
         caches padded to cache_len)."""
+        self._prefill_traces += 1       # python side effect: runs per trace
         out = transformer.forward(base, self.cfg, self.rt.spec, bc, pl,
                                   tokens, task=task, policy=self.policy)
         caches = _pad_caches(out.caches, self.cfg, 1, self.cache_len)
@@ -166,6 +285,7 @@ class Engine:
     def _decode_impl(self, base, bc, pl, state: DecodeState) -> DecodeState:
         """Jitted continuous decode: step all active slots until one
         finishes (or none remain) — the host only sees slot boundaries."""
+        self._decode_traces += 1        # python side effect: runs per trace
         active0 = state.active
         rows = jnp.arange(self.max_batch)
 
@@ -192,6 +312,82 @@ class Engine:
         return jax.lax.while_loop(cond, body, state)
 
     # ------------------------------------------------------------------
+    # paged mode: jitted pieces
+    # ------------------------------------------------------------------
+
+    def _paged_admit_impl(self, state: PagedState, slot, prompt_row, plen,
+                          done0, n_new, task_id) -> PagedState:
+        """Place request metadata into slot ``slot``. No prefill here —
+        the decode loop's chunked-prefill path consumes the prompt
+        starting at ``done0`` (tokens [0, done0) came from the prefix
+        cache; the scheduler guarantees done0 <= plen - 1 so the last
+        prompt token always runs through the model for its logits)."""
+        return state._replace(
+            prompt=jax.lax.dynamic_update_slice(
+                state.prompt, prompt_row[None], (slot, 0)),
+            plen=state.plen.at[slot].set(plen),
+            done=state.done.at[slot].set(done0),
+            remaining=state.remaining.at[slot].set(n_new),
+            active=state.active.at[slot].set(True),
+            widx=state.widx.at[slot].set(0),
+            out=state.out.at[slot].set(0),
+            task=state.task.at[slot].set(task_id))
+
+    def _cow_impl(self, state: PagedState, src, dst) -> PagedState:
+        """Copy-on-write one physical block (all layers) — scheduled at
+        admit time so the decode loop never writes a shared block."""
+        return state._replace(
+            caches=transformer.copy_cache_block(state.caches, src, dst))
+
+    def _paged_decode_impl(self, base, bc, pl, state: PagedState,
+                           tables) -> PagedState:
+        """One jitted while_loop co-batching chunked prefill and decode:
+        every step runs a fixed (B, C) token block — prefilling slots
+        consume up to C prompt tokens, decoding slots one sampled token
+        (pad columns' cache writes are overwritten by the step that owns
+        those positions; sentinel table entries drop out-of-allocation
+        writes). Compiles ONCE for all prompt lengths."""
+        self._decode_traces += 1        # python side effect: runs per trace
+        active0 = state.active
+        C = self._chunk
+        rows = jnp.arange(self.max_batch)
+
+        def cond(s):
+            return jnp.any(s.active) & jnp.all(s.active == active0)
+
+        def body(s):
+            is_pf = s.done < s.plen
+            start = jnp.where(is_pf, s.done, 0)
+            chunk = jax.vmap(
+                lambda p, st: jax.lax.dynamic_slice(p, (st,), (C,)))(
+                    s.prompt, start)
+            ntok = jnp.where(is_pf, jnp.minimum(C, s.plen - s.done), 1)
+            dec = jnp.pad(s.tok, ((0, 0), (0, C - 1)))
+            toks = jnp.where(is_pf[:, None], chunk, dec)
+            task = s.task if self.rt.tasked else None
+            logits, caches = transformer.paged_step(
+                base, self.cfg, self.rt.spec, bc, pl, toks, s.caches,
+                tables, s.done, ntok - 1, task=task, policy=self.policy)
+            key, sub = jax.random.split(s.key)
+            nxt = sampling_lib.sample(logits, sub, self.sampling)
+            new_done = s.done + ntok
+            # a slot emits a token when its step reached the last prompt
+            # position (prefill -> first token) or is decoding
+            produced = s.active & (new_done >= s.plen)
+            col = jnp.where(produced, s.widx, self.out_cap)
+            out = s.out.at[rows, col].set(nxt, mode="drop")
+            adv = produced.astype(jnp.int32)
+            tok = jnp.where(produced[:, None], nxt[:, None], s.tok)
+            return PagedState(
+                tok=tok, prompt=s.prompt, plen=s.plen, done=new_done,
+                remaining=s.remaining - adv,
+                active=s.active & ((s.remaining > 1) | ~produced),
+                widx=s.widx + adv, out=out, task=s.task, key=key,
+                caches=caches)
+
+        return jax.lax.while_loop(cond, body, state)
+
+    # ------------------------------------------------------------------
     # host-side orchestration
     # ------------------------------------------------------------------
 
@@ -205,6 +401,19 @@ class Engine:
             caches=transformer.init_caches(self.cfg, b, self.cache_len,
                                            self.cfg.compute_dtype))
 
+    def init_paged_state(self, key) -> PagedState:
+        """Fresh per-slot state over the engine's PERSISTENT block pools
+        (ownership of the pool buffers moves into the donated state; the
+        host loop hands them back at the end of generate)."""
+        b, cap = self.max_batch, self.out_cap
+        z = functools.partial(jnp.zeros, dtype=jnp.int32)
+        caches, self._paged_caches = self._paged_caches, None
+        return PagedState(
+            tok=z((b, 1)), prompt=z((b, self._lp)), plen=z((b,)),
+            done=z((b,)), remaining=z((b,)),
+            active=jnp.zeros((b,), bool), widx=z((b,)), out=z((b, cap)),
+            task=z((b,)), key=key, caches=caches)
+
     def _bucket(self, plen: int) -> int:
         for bkt in self.prompt_buckets:
             if bkt >= plen:
@@ -216,7 +425,7 @@ class Engine:
         return min(n, self.cache_len)   # prefill cache is cache_len wide
 
     def _validate_request(self, req: Request):
-        prompt = jnp.asarray(req.prompt, jnp.int32).reshape(-1)
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
         plen = int(prompt.shape[0])
         if plen < 1:
             raise ValueError("empty prompt")
@@ -231,6 +440,36 @@ class Engine:
         self.rt.check_task(req.task)
         return prompt, plen
 
+    def generate(self, requests: Sequence[Request], *,
+                 key=None) -> List[np.ndarray]:
+        """Serve ``requests`` through the slots; returns, per request, the
+        generated token ids (np.ndarray of length max_new_tokens). Fills
+        ``self.last_stats`` (tokens/sec, KV blocks in use, prefix-cache
+        hit rate, admit/evict counts — serving/stats.py).
+
+        Without an explicit ``key`` the engine advances its own PRNG
+        stream, so successive calls draw fresh samples under
+        temperature/top-k (greedy is key-independent either way)."""
+        for req in requests:
+            self._validate_request(req)  # fail fast, before any decode work
+        if key is None:
+            self._key, key = jax.random.split(self._key)
+        self.last_stats = EngineStats(cache_mode=self.sv.cache_mode,
+                                      requests=len(requests))
+        t0 = time.perf_counter()
+        if self.sv.cache_mode == "dense":
+            results = self._generate_dense(requests, key)
+        else:
+            results = self._generate_paged(requests, key)
+        st = self.last_stats
+        st.wall_s = time.perf_counter() - t0
+        st.tokens_generated = sum(len(r) for r in results)
+        st.decode_traces = self._decode_traces
+        st.prefill_traces = self._prefill_traces
+        return results
+
+    # -- dense ---------------------------------------------------------
+
     def _admit_request(self, state: DecodeState, slot: int,
                        req: Request) -> DecodeState:
         prompt, plen = self._validate_request(req)
@@ -239,22 +478,18 @@ class Engine:
         task = jnp.int32(req.task) if self.rt.tasked else None
         last, caches1 = self._prefill(*self._weights, padded,
                                       jnp.int32(plen - 1), task)
+        self.last_stats.admitted += 1
         return self._admit(state, jnp.int32(slot), caches1, last,
                            jnp.int32(plen), jnp.int32(req.max_new_tokens),
                            jnp.int32(req.task))
 
-    def generate(self, requests: Sequence[Request], *,
-                 key=None) -> List[np.ndarray]:
-        """Serve ``requests`` through the slots; returns, per request, the
-        generated token ids (np.ndarray of length max_new_tokens).
-
-        Without an explicit ``key`` the engine advances its own PRNG stream,
-        so successive calls draw fresh samples under temperature/top-k
-        (greedy is key-independent either way)."""
-        for req in requests:
-            self._validate_request(req)  # fail fast, before any decode work
-        if key is None:
-            self._key, key = jax.random.split(self._key)
+    def _generate_dense(self, requests, key) -> List[np.ndarray]:
+        st = self.last_stats
+        st.page_size = self.cache_len
+        st.num_blocks = self.max_batch
+        st.block_bytes = self._kv_bytes(self.cache_len)
+        # dense reserves the whole max_batch × cache_len cache up front
+        st.kv_blocks_peak = self.max_batch
         state = self.init_state(key)
         pending = collections.deque(enumerate(requests))
         results: List[Optional[np.ndarray]] = [None] * len(requests)
@@ -270,6 +505,7 @@ class Engine:
             # decode every active slot until one finishes
             if bool(np.any(np.asarray(state.active))):
                 state = self._decode(*self._weights, state)
+                st.decode_calls += 1
             # evict finished slots (also catches max_new_tokens == 1)
             active = np.asarray(state.active)
             out = np.asarray(state.out)
@@ -278,13 +514,91 @@ class Engine:
                 if meta[slot] is not None and not active[slot]:
                     results[meta[slot]] = out[slot, : int(widx[slot])].copy()
                     meta[slot] = None
+                    st.evicted += 1
         return results  # type: ignore[return-value]
+
+    # -- paged ---------------------------------------------------------
+
+    def _generate_paged(self, requests, key) -> List[np.ndarray]:
+        st = self.last_stats
+        st.page_size = self._page
+        st.num_blocks = self._num_blocks
+        st.block_bytes = self._block_bytes
+        self.sched.stats = st           # block/prefix counters land here
+        state = self.init_paged_state(key)
+        self._tables[:] = self._num_blocks
+        pending = collections.deque(enumerate(requests))
+        results: List[Optional[np.ndarray]] = [None] * len(requests)
+        meta: List[Optional[dict]] = [None] * self.max_batch
+        try:
+            state = self._paged_loop(state, pending, results, meta, st)
+        except BaseException:
+            self._reset_paged_pool()    # slot refs / donated pool are gone
+            raise
+        self._paged_caches = state.caches
+        return results  # type: ignore[return-value]
+
+    def _paged_loop(self, state, pending, results, meta,
+                    st) -> PagedState:
+        while pending or any(m is not None for m in meta):
+            # admit while blocks AND slots allow (strict FIFO: a blocked
+            # head waits for evictions rather than being overtaken)
+            for slot in range(self.max_batch):
+                if meta[slot] is not None or not pending:
+                    continue
+                idx, req = pending[0]
+                prompt, plen = self._validate_request(req)
+                ns = req.task if self._kv_tasked else None
+                plan = self.sched.plan(prompt.tolist(),
+                                       req.max_new_tokens, namespace=ns)
+                if plan is None:
+                    break               # backpressure: out of KV blocks
+                pending.popleft()
+                if plan.cow is not None:
+                    state = self._pcow(state, jnp.int32(plan.cow[0]),
+                                       jnp.int32(plan.cow[1]))
+                row = np.full((self._p_tab,), self._num_blocks, np.int32)
+                row[:len(plan.blocks)] = plan.blocks
+                self._tables[slot] = row
+                prow = np.zeros((self._lp,), np.int32)
+                prow[:plen] = prompt
+                state = self._padmit(
+                    state, jnp.int32(slot), jnp.asarray(prow),
+                    jnp.int32(plen), jnp.int32(plan.n_cached),
+                    jnp.int32(req.max_new_tokens), jnp.int32(req.task))
+                meta[slot] = dict(idx=idx, prompt=prompt,
+                                  blocks=plan.blocks, ns=ns)
+            if not any(m is not None for m in meta):
+                # no slot busy and the head still does not fit: the pool
+                # (even fully drained of cached blocks) cannot hold it
+                raise RuntimeError(
+                    "paged admission deadlock: request needs more KV "
+                    "blocks than the pool can ever free")
+            # run the co-batched prefill/decode loop until a slot finishes
+            if bool(np.any(np.asarray(state.active))):
+                state = self._pdecode(*self._weights, state,
+                                      jnp.asarray(self._tables))
+                st.decode_calls += 1
+            active = np.asarray(state.active)
+            out = np.asarray(state.out)
+            widx = np.asarray(state.widx)
+            for slot in range(self.max_batch):
+                m = meta[slot]
+                if m is not None and not active[slot]:
+                    results[m["idx"]] = out[slot, : int(widx[slot])].copy()
+                    # prompt pages are fully computed now: index them for
+                    # prefix reuse, return the rest to the free list
+                    self.sched.release(m["prompt"], m["blocks"],
+                                       namespace=m["ns"])
+                    self._tables[slot] = self._num_blocks
+                    meta[slot] = None
+        return state
 
 
 # ---------------------------------------------------------------------------
-# single-shot helpers (moved here from train/train_step.py; train_step keeps
-# deprecation re-exports). These are the seed's one-request-shape-at-a-time
-# path — the Engine above supersedes them for real serving.
+# single-shot helpers (the seed's one-request-shape-at-a-time path — the
+# Engine above supersedes them for real serving; tests and benchmarks keep
+# them as reference decoders).
 # ---------------------------------------------------------------------------
 
 

@@ -1,0 +1,62 @@
+"""Lightweight per-``generate`` engine observability.
+
+The engine fills one ``EngineStats`` per ``generate`` call and keeps it on
+``engine.last_stats``; ``benchmarks/bench_serving.py`` and
+``examples/serve.py`` print it. Everything here is host-side counting —
+no device syncs beyond what the engine already does.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class EngineStats:
+    cache_mode: str = "paged"
+    requests: int = 0
+    tokens_generated: int = 0
+    wall_s: float = 0.0
+    admitted: int = 0
+    evicted: int = 0
+    decode_calls: int = 0        # host->device decode-loop invocations
+    decode_traces: int = 0       # jit (re)traces of the decode graph
+    prefill_traces: int = 0      # dense mode: per-bucket prefill compiles
+    # --- KV memory ---
+    page_size: int = 0
+    num_blocks: int = 0          # pool budget (paged) / dense equivalent
+    kv_blocks_peak: int = 0      # max blocks simultaneously in use
+    block_bytes: int = 0         # device bytes per block (all layers, k+v)
+    # --- prefix cache ---
+    prefix_lookups: int = 0      # admissions that consulted the cache
+    prefix_hit_tokens: int = 0   # prompt tokens served from cached blocks
+    prefix_lookup_tokens: int = 0  # prompt tokens eligible for reuse
+    cow_copies: int = 0          # copy-on-write block copies
+    cache_evictions: int = 0     # prefix blocks reclaimed under pressure
+    # --- scheduler ---
+    backpressure_waits: int = 0  # admissions deferred for lack of blocks
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens_generated / self.wall_s if self.wall_s else 0.0
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        if not self.prefix_lookup_tokens:
+            return 0.0
+        return self.prefix_hit_tokens / self.prefix_lookup_tokens
+
+    @property
+    def kv_bytes_peak(self) -> int:
+        return self.kv_blocks_peak * self.block_bytes
+
+    def summary(self) -> str:
+        return (f"mode={self.cache_mode} reqs={self.requests} "
+                f"toks={self.tokens_generated} "
+                f"tok/s={self.tokens_per_s:.1f} "
+                f"kv_blocks_peak={self.kv_blocks_peak}/{self.num_blocks} "
+                f"kv_bytes_peak={self.kv_bytes_peak} "
+                f"prefix_hit_rate={self.prefix_hit_rate:.2f} "
+                f"cow={self.cow_copies} admits={self.admitted} "
+                f"evicts={self.evicted} waits={self.backpressure_waits} "
+                f"decode_traces={self.decode_traces} "
+                f"prefill_traces={self.prefill_traces}")

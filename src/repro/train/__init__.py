@@ -2,8 +2,6 @@ from repro.train.train_step import (  # noqa: F401
     TrainState,
     init_train_state,
     make_full_ft_step,
-    make_prefill,
-    make_serve_step,
     make_train_step,
     reinit_after_dmrg,
 )

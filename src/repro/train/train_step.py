@@ -6,9 +6,8 @@ no optimizer state, no master copy — the memory model that makes 1T-param
 fine-tuning fit, DESIGN.md §4). Supports microbatch gradient accumulation
 (lax.scan), remat-per-super-block, and optional gradient compression.
 
-The serving helpers (make_prefill / make_serve_step) moved to
-repro.serving.engine, next to the continuous-batching Engine; thin
-deprecation re-exports remain at the bottom of this module.
+The serving helpers (make_prefill / make_serve_step) live in
+repro.serving.engine, next to the continuous-batching Engine.
 """
 from __future__ import annotations
 
@@ -132,29 +131,3 @@ def make_full_ft_step(cfg: ModelConfig, opt_cfg: OptimizerConfig,
                                        grad_norm=gnorm)
 
     return jax.jit(step_fn, donate_argnums=(0, 1))
-
-
-# ---------------------------------------------------------------------------
-# serving — MOVED to repro.serving.engine (the slot-based continuous-batching
-# engine lives there too). Thin deprecation re-exports only.
-# ---------------------------------------------------------------------------
-
-
-def make_serve_step(*args, **kwargs) -> Callable:
-    """Deprecated: use repro.serving.engine.make_serve_step (or the Engine)."""
-    import warnings
-
-    from repro.serving import engine as _engine
-    warnings.warn("repro.train.train_step.make_serve_step moved to "
-                  "repro.serving.engine", DeprecationWarning, stacklevel=2)
-    return _engine.make_serve_step(*args, **kwargs)
-
-
-def make_prefill(*args, **kwargs) -> Callable:
-    """Deprecated: use repro.serving.engine.make_prefill (or the Engine)."""
-    import warnings
-
-    from repro.serving import engine as _engine
-    warnings.warn("repro.train.train_step.make_prefill moved to "
-                  "repro.serving.engine", DeprecationWarning, stacklevel=2)
-    return _engine.make_prefill(*args, **kwargs)

@@ -1,0 +1,44 @@
+"""Gradient compression (distributed/compression.py) — deterministic
+tests that run without hypothesis (test_property.py holds the
+property-based variants, skipped where hypothesis is absent)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import compression
+
+
+def test_topk_error_feedback_carries_residual_across_steps():
+    """The residual must CARRY across steps: a coordinate too small to
+    make the top-k at step 1 accumulates in the residual until it wins a
+    later step — so over N constant-gradient steps every coordinate's
+    cumulative transmitted mass approaches N·g (bounded residual), while
+    dropping the residual each step silently loses those coordinates."""
+    g = {"g": jnp.array([1.0, 0.4, 0.3, 0.2])}
+    comp = compression.GradCompressor("topk", topk_frac=0.25)   # k = 1
+    n_steps = 12
+    res = comp.init_residual(g)
+    sent = jnp.zeros(4)
+    for _ in range(n_steps):
+        out, res = comp(g, res)
+        sent = sent + out["g"]
+    # error feedback: cumulative transmission == N·g minus the (bounded)
+    # final residual — nothing is lost, only delayed
+    np.testing.assert_allclose(np.asarray(sent + res["g"]),
+                               n_steps * np.asarray(g["g"]), atol=1e-5)
+    assert all(float(s) > 0 for s in sent)      # every coordinate got out
+    # without feedback the small coordinates never transmit at all
+    sent_nofb = jnp.zeros(4)
+    for _ in range(n_steps):
+        out, _ = comp(g, comp.init_residual(g))
+        sent_nofb = sent_nofb + out["g"]
+    assert float(sent_nofb[1]) == 0 and float(sent_nofb[3]) == 0
+
+
+def test_topk_residual_dtype_and_structure_follow_grads():
+    g = {"a": jnp.ones((4, 4), jnp.bfloat16), "b": jnp.ones((8,))}
+    comp = compression.GradCompressor("topk", topk_frac=0.5)
+    res = comp.init_residual(g)
+    out, new_res = comp(g, res)
+    assert out["a"].dtype == jnp.bfloat16       # roundtrip keeps dtype
+    assert new_res["a"].dtype == jnp.float32    # residual accumulates f32
+    assert out["b"].shape == (8,)
