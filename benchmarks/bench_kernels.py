@@ -17,7 +17,7 @@ from benchmarks.common import emit, time_call
 from repro import configs as registry
 from repro.config.base import RunConfig, SHAPES
 from repro.core import tt as ttlib
-from repro.kernels import dispatch
+from repro.kernels import dispatch, quant
 from repro.models import model as M
 from repro.models import transformer as T
 from repro.peft import api as peft_api
@@ -43,6 +43,20 @@ def _linear_rows(rows) -> None:
                          f"M={m_},K={k},N={n},r={r},"
                          f"hbm_roundtrip_saved_bytes={saved}"))
 
+    # w8a16: int8 base + f32 per-channel scales through the same seam —
+    # the TPU story is the weight HBM read dropping from 4B (f32) / 2B
+    # (bf16) to 1B per element (+ one f32 scale per output channel)
+    wq = quant.quantize_linear(w)
+    w_bytes_fp = k * n * 4
+    w_bytes_q = k * n * 1 + n * 4
+    for name, pol in POLICIES:
+        us = time_call(jax.jit(lambda x_, a_, b_, p=pol: dispatch.tt_linear_q(
+            x_, wq, a_, b_, alpha=1.0, policy=p)), x, a, b,
+            iters=3, warmup=1)
+        rows.append(emit(f"kernels/tt_linear_w8a16_{name}", us,
+                         f"M={m_},K={k},N={n},r={r},"
+                         f"w_bytes={w_bytes_q}vs{w_bytes_fp}"))
+
     s = 8                                 # decode slots
     xa = jax.random.normal(key, (s, k), jnp.float32)
     ab = jax.random.normal(key, (s, k, r), jnp.float32) / 32
@@ -50,6 +64,13 @@ def _linear_rows(rows) -> None:
         us = time_call(jax.jit(lambda *t, p=pol: dispatch.tt_linear_batched_a(
             *t, alpha=1.0, policy=p)), xa, w, ab, b, iters=3, warmup=1)
         rows.append(emit(f"kernels/tt_linear_batched_a_{name}", us,
+                         f"slots={s},K={k},N={n},r={r}"))
+    for name, pol in POLICIES:
+        us = time_call(jax.jit(
+            lambda x_, a_, b_, p=pol: dispatch.tt_linear_batched_a_q(
+                x_, wq, a_, b_, alpha=1.0, policy=p)), xa, ab, b,
+            iters=3, warmup=1)
+        rows.append(emit(f"kernels/tt_linear_batched_a_w8a16_{name}", us,
                          f"slots={s},K={k},N={n},r={r}"))
 
 

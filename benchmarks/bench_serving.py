@@ -11,12 +11,20 @@
    asserted and throughput / peak KV memory / prefix-cache hit rate come
    from the engine's OWN stats object (engine.last_stats — the numbers a
    deployment would scrape), not benchmark-side re-derivation.
+4. fp vs int8 (w8a16 weights + int8 KV) paged serving: greedy-token match
+   fraction (>= TOKEN_MATCH_MIN asserted) and peak KV bytes (int8 must
+   come in below fp at the same num_blocks budget) — again from
+   engine.last_stats.
+
+Engine stats of every engine run land in ``ENGINE_STATS`` (reset per
+``run()``) so ``benchmarks/run.py --json`` can emit them machine-readably.
 
     PYTHONPATH=src python benchmarks/bench_serving.py [--smoke]
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -25,7 +33,7 @@ import numpy as np
 
 from benchmarks.common import emit, time_call
 from repro import configs as registry
-from repro.config.base import (KernelConfig, RunConfig, SHAPES,
+from repro.config.base import (KernelConfig, QuantConfig, RunConfig, SHAPES,
                                ServeConfig)
 from repro.core import tt as ttlib
 from repro.core.merge import fold_transformer
@@ -34,6 +42,22 @@ from repro.models import model as M, transformer as T
 from repro.peft import api as peft_api
 from repro.serving import AdapterRuntime, Engine, Request
 from repro.serving import engine as se
+
+#: engine stats (dataclasses.asdict + derived rates) of every timed engine
+#: run in the latest run() call, labeled — consumed by run.py --json
+ENGINE_STATS: list = []
+
+#: documented int8-vs-fp greedy-parity floor (argmax near-ties flip under
+#: quantization noise on a random-weight smoke model)
+TOKEN_MATCH_MIN = 0.9
+
+
+def _record_stats(label: str, st) -> None:
+    d = dataclasses.asdict(st)
+    d.update(label=label, tokens_per_s=st.tokens_per_s,
+             prefix_hit_rate=st.prefix_hit_rate,
+             kv_bytes_peak=st.kv_bytes_peak)
+    ENGINE_STATS.append(d)
 
 
 def _decode_step_rows(rows) -> None:
@@ -252,6 +276,7 @@ def _paged_rows(rows, *, smoke: bool) -> None:
             f"cow={st.cow_copies},waits={st.backpressure_waits},"
             f"decode_traces={st.decode_traces},"
             f"prefill_traces={st.prefill_traces}"))
+        _record_stats(f"engine_{mode}_shared_prefix", st)
         print(f"# engine stats [{mode}]: {st.summary()}")
         if mode == "dense":
             dense_bytes = st.kv_bytes_peak   # the engine's own number
@@ -275,12 +300,91 @@ def _paged_rows(rows, *, smoke: bool) -> None:
                     f"reservation {dense_bytes}")
 
 
+def _quant_rows(rows, *, smoke: bool) -> None:
+    """fp vs int8 (weights=int8 w8a16 + kv=int8) paged serving on the
+    shared-prefix mixed-task workload (DESIGN.md §8).
+
+    Both engines run the same requests at the same ``num_blocks`` budget;
+    the int8 run must (a) track the fp run's greedy tokens within the
+    documented TOKEN_MATCH_MIN tolerance and (b) report lower peak KV
+    bytes (its blocks are int8 cells + per-cell scales — roughly half of
+    bf16, a quarter of f32) — both read from engine.last_stats.
+    """
+    n_req, n_new, slots = (6, 6, 3) if smoke else (16, 16, 4)
+    cfg = registry.get_smoke_config("stablelm-1.6b")
+    run_cfg = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                        adapter_kind="metatt", adapter_variant="4+1d",
+                        num_tasks=2, adapter_rank=8)
+    spec = M.build_adapter_spec(run_cfg)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, spec, key)
+    params["adapter"] = {"cores": ttlib.random_tt(key, spec.cfg.mode_sizes,
+                                                  8, scale=0.5)}
+    rt = AdapterRuntime.build("lora", params["base"], spec,
+                              params["adapter"], params["frozen"])
+    cache_len = 32 + n_new
+    sys_prompt = np.asarray(jax.random.randint(key, (18,), 0,
+                                               cfg.vocab_size))
+    keys = jax.random.split(key, n_req)
+    reqs = []
+    for i in range(n_req):
+        tail = np.asarray(jax.random.randint(keys[i], (2 + i % 4,), 0,
+                                             cfg.vocab_size))
+        prompt = (np.concatenate([sys_prompt, tail])
+                  if i % 2 == 0 else tail)
+        reqs.append(Request(prompt, n_new, task=i % 2))
+
+    outs, stats = {}, {}
+    for name, qc in (("fp", QuantConfig()),
+                     ("int8", QuantConfig(weights="int8", kv="int8"))):
+        eng = Engine(cfg, rt, serve=ServeConfig(
+            max_batch=slots, cache_len=cache_len, out_cap=n_new,
+            page_size=8, prefill_chunk=8, quant=qc))
+        eng.generate(reqs)                      # compile + warm the cache
+        t0 = time.perf_counter()
+        outs[name] = eng.generate(reqs)
+        dt = time.perf_counter() - t0
+        st = eng.last_stats
+        stats[name] = st
+        rows.append(emit(
+            f"serving/engine_paged_{name}",
+            dt / max(st.tokens_generated, 1) * 1e6,
+            f"tok_per_s={st.tokens_per_s:.1f},w={st.weights_dtype},"
+            f"kv={st.kv_dtype},kv_bytes_peak={st.kv_bytes_peak},"
+            f"kv_blocks_peak={st.kv_blocks_peak}/{st.num_blocks},"
+            f"block_bytes={st.block_bytes},"
+            f"prefix_hit_rate={st.prefix_hit_rate:.2f}"))
+        _record_stats(f"engine_paged_{name}", st)
+        print(f"# engine stats [{name}]: {st.summary()}")
+    total = sum(len(o) for o in outs["fp"])
+    same = sum(int(a == b) for f, q in zip(outs["fp"], outs["int8"])
+               for a, b in zip(f.tolist(), q.tolist()))
+    match = same / total
+    rows.append(emit(
+        "serving/int8_vs_fp", 0.0,
+        f"token_match={match:.3f},"
+        f"kv_bytes_int8={stats['int8'].kv_bytes_peak},"
+        f"kv_bytes_fp={stats['fp'].kv_bytes_peak},"
+        f"block_bytes_int8={stats['int8'].block_bytes},"
+        f"block_bytes_fp={stats['fp'].block_bytes}"))
+    if match < TOKEN_MATCH_MIN:
+        raise AssertionError(
+            f"int8 engine greedy tokens match fp at {match:.3f} < "
+            f"{TOKEN_MATCH_MIN} tolerance")
+    if not stats["int8"].kv_bytes_peak < stats["fp"].kv_bytes_peak:
+        raise AssertionError(
+            f"int8 peak KV bytes {stats['int8'].kv_bytes_peak} not below "
+            f"fp {stats['fp'].kv_bytes_peak} at equal num_blocks")
+
+
 def run(*, smoke: bool = False) -> list:
+    ENGINE_STATS.clear()
     rows = []
     _decode_step_rows(rows)
     _engine_rows(rows, smoke=smoke)
     _fused_engine_rows(rows, smoke=smoke)
     _paged_rows(rows, smoke=smoke)
+    _quant_rows(rows, smoke=smoke)
     return rows
 
 

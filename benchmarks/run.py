@@ -6,32 +6,70 @@ dry-run artifacts (benchmarks/roofline.py); run
 
 ``--smoke`` runs the CI subset: the kernel-dispatch benches and the serving
 smoke benches — fused-vs-unfused parity from the same dispatch seam the
-model uses, plus the paged-vs-dense engine comparison (token parity,
-prefix-cache hit rate and peak-KV-memory assertions from the engine's own
-stats) — cheap enough to gate every CI run against kernel regressions and
-benchmark bit-rot.
+model uses, the paged-vs-dense engine comparison, and the fp-vs-int8
+quantized serving comparison (token parity, prefix-cache hit rate and
+peak-KV-memory assertions from the engine's own stats) — cheap enough to
+gate every CI run against kernel regressions and benchmark bit-rot.
+
+``--json`` additionally writes ``BENCH_kernels.json`` and
+``BENCH_serving.json`` at the repo root — the same rows as the CSV (parsed
+into objects) plus, for serving, the engines' own stats objects — so
+future PRs can diff the perf trajectory machine-readably instead of
+scraping stdout.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-def main(*, smoke: bool = False) -> None:
+
+def _row_dicts(rows: list) -> list:
+    """"name,us,derived" CSV strings -> dicts (derived may hold commas)."""
+    out = []
+    for r in rows:
+        name, us, derived = r.split(",", 2)
+        out.append({"name": name, "us_per_call": float(us),
+                    "derived": derived})
+    return out
+
+
+def _write_json(path: str, payload: dict) -> None:
+    full = os.path.join(REPO_ROOT, path)
+    with open(full, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"# wrote {full}", flush=True)
+
+
+def _emit_json(kernel_rows: list, serving_rows: list) -> None:
+    from benchmarks import bench_serving
+    _write_json("BENCH_kernels.json", {"rows": _row_dicts(kernel_rows)})
+    _write_json("BENCH_serving.json",
+                {"rows": _row_dicts(serving_rows),
+                 "engine_stats": bench_serving.ENGINE_STATS})
+
+
+def main(*, smoke: bool = False, emit_json: bool = False) -> None:
     print("name,us_per_call,derived")
     from benchmarks import (bench_fig2_dmrg, bench_init_ablation,
                             bench_kernels, bench_serving, bench_table1,
                             bench_table2, roofline)
     if smoke:
-        bench_kernels.run(smoke=True)
-        bench_serving.run(smoke=True)
+        kernel_rows = bench_kernels.run(smoke=True)
+        serving_rows = bench_serving.run(smoke=True)
+        if emit_json:
+            _emit_json(kernel_rows, serving_rows)
         return
     bench_table1.run()
     bench_table2.run()
     bench_fig2_dmrg.run()
     bench_init_ablation.run()
-    bench_serving.run()
-    bench_kernels.run()
+    serving_rows = bench_serving.run()
+    kernel_rows = bench_kernels.run()
+    if emit_json:
+        _emit_json(kernel_rows, serving_rows)
     # roofline summary rows (from dry-run artifacts, if present)
     for out_dir, label in (("artifacts/dryrun", "baseline"),
                            ("artifacts/dryrun_opt", "optimized")):
@@ -53,5 +91,10 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI subset: kernel-dispatch + serving smoke "
-                         "benches (incl. paged-vs-dense engine parity)")
-    main(smoke=ap.parse_args().smoke)
+                         "benches (incl. paged-vs-dense and fp-vs-int8 "
+                         "engine parity)")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_kernels.json / BENCH_serving.json "
+                         "at the repo root (rows + engine stats)")
+    args = ap.parse_args()
+    main(smoke=args.smoke, emit_json=args.json)

@@ -21,7 +21,16 @@ python -m pytest -x -q tests/test_kernels.py tests/test_dispatch.py
 # with the paged-attention kernel in interpret mode
 python -m pytest -x -q tests/test_block_manager.py tests/test_paged_engine.py
 
+# quant-parity job: w8a16 fused kernels and the int8 paged KV cache must
+# match their dequantize-then-fp oracles in interpret mode, and the
+# quantized engine (weights=int8, kv=int8) must track the fp engine's
+# greedy tokens and round-trip prefix sharing / COW / base snapshots
+python -m pytest -x -q tests/test_quant.py
+
 # benchmark smoke: kernel-dispatch + serving benches (assert fused-vs-unfused
 # AND paged-vs-dense token parity, nonzero prefix hit rate, paged KV peak
-# below the dense reservation), so regressions and benchmark bit-rot fail CI
-python benchmarks/run.py --smoke
+# below the dense reservation, int8 peak KV bytes below fp at equal blocks,
+# int8 greedy-token match within tolerance), so regressions and benchmark
+# bit-rot fail CI; --json leaves BENCH_kernels.json / BENCH_serving.json at
+# the repo root so future PRs can diff the perf trajectory
+python benchmarks/run.py --smoke --json

@@ -1,1 +1,2 @@
-from repro.checkpoint.ckpt import CheckpointManager  # noqa: F401
+from repro.checkpoint.ckpt import (CheckpointManager,  # noqa: F401
+                                   load_base_snapshot, save_base_snapshot)

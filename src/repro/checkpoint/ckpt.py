@@ -72,6 +72,37 @@ def _unflatten_into(template, arrays: dict):
     return jax.tree_util.tree_unflatten(flat[1], leaves)
 
 
+def save_base_snapshot(path: str, base: Any) -> str:
+    """Atomic one-file snapshot of a serving base pytree.
+
+    Built for the quantized serving path (DESIGN.md §8): the engine
+    int8-quantizes the frozen base once at construction, and this snapshot
+    lets a serving restart (or a fleet of replicas) load the packed
+    ``{"q8", "scale"}`` leaves instead of re-reading + re-quantizing the
+    fp base — int8 leaves store natively in npz, so the snapshot is ~4x
+    smaller than an fp32 base dump. Works for any base pytree (folded /
+    fp bases included). Returns the path written.
+    """
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    arrays = _flatten(jax.device_get(base))
+    tmp = path + f".tmp.{os.getpid()}"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
+    return path
+
+
+def load_base_snapshot(path: str, template: Any) -> Any:
+    """Inverse of ``save_base_snapshot``: ``template`` supplies the pytree
+    structure and leaf dtypes (int8 q8 leaves restore as int8)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    with np.load(path) as z:
+        arrays = dict(z)
+    return _unflatten_into(template, arrays)
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3, async_save: bool = False):
         self.dir = directory

@@ -147,6 +147,50 @@ SHAPES = {
 
 
 @dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Serving-side quantization of the FROZEN half of the model
+    (kernels/quant.py, DESIGN.md §8). MetaTT freezes the base transformer
+    by construction, so the base matmul weights and the KV cache are pure
+    read-only bandwidth in the decode hot path — int8 halves that traffic
+    while the trained TT/LoRA adapter factors stay full precision.
+
+    weights: "none" | "int8" — symmetric int8 of the frozen base matrices
+        (attention q/k/v/o and dense-FFN up/gate/down), one f32 scale per
+        output channel, or per K-group when ``group_size`` > 0. The rank-r
+        adapter epilogue runs in full precision either way.
+    kv:      "none" | "int8" — int8 paged KV cache: quantized at write
+        time per cache cell (token × kv-head, amax/127 over head_dim),
+        scales stored in the SAME paged block layout as the cells, so
+        prefix sharing and copy-on-write round-trip the quantized
+        representation exactly. Paged cache mode only.
+    group_size: K rows per weight-scale group; 0 = one scale per output
+        channel (whole-K group). Multiples of 128 keep exactly one scale
+        row per kernel K-tile; matrices whose K the group does not divide
+        fall back to per-channel.
+    """
+    weights: str = "none"          # none | int8
+    kv: str = "none"               # none | int8
+    group_size: int = 0
+
+    @property
+    def any(self) -> bool:
+        return self.weights != "none" or self.kv != "none"
+
+    def validate(self) -> "QuantConfig":
+        for name in ("weights", "kv"):
+            v = getattr(self, name)
+            if v not in ("none", "int8"):
+                raise ValueError(
+                    f"QuantConfig.{name}={v!r}; want none | int8")
+        if self.group_size and self.group_size % 128 != 0:
+            raise ValueError(
+                f"QuantConfig.group_size={self.group_size} must be a "
+                "multiple of the 128-lane MXU native size (one scale row "
+                "per kernel K-tile)")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
 class KernelConfig:
     """Kernel-dispatch policy (DESIGN.md §5) — resolved once into a
     ``repro.kernels.dispatch.KernelPolicy`` and threaded through
@@ -165,6 +209,9 @@ class KernelConfig:
         single-token cached decode).
     bm/bn/bk: tt_linear tile overrides (0 -> per-shape heuristic).
     bq/bkv:   flash-attention tile overrides (0 -> per-shape heuristic).
+    quant:    frozen-base / KV quantization (QuantConfig); the serving
+        engine reads ``quant.weights`` here to int8-quantize the base once
+        at construction (ServeConfig.quant is the KV-side twin).
     """
     backend: str = "auto"          # auto | pallas | ref
     interpret: Optional[bool] = None
@@ -175,8 +222,10 @@ class KernelConfig:
     bk: int = 0
     bq: int = 0
     bkv: int = 0
+    quant: QuantConfig = QuantConfig()
 
     def validate(self) -> "KernelConfig":
+        self.quant.validate()
         if self.backend not in ("auto", "pallas", "ref"):
             raise ValueError(f"unknown kernel backend {self.backend!r}; "
                              "want auto | pallas | ref")
@@ -221,6 +270,10 @@ class ServeConfig:
         prefix (hash-chained at page granularity, partial last page
         included; divergence after a shared partial page copies-on-write).
     prompt_buckets: dense mode only — prefill pad buckets.
+    quant: QuantConfig — ``quant.kv="int8"`` stores the paged KV pools as
+        int8 with per-cell f32 scales in the same block layout (paged mode
+        only); ``quant.weights`` here is honored too (merged with
+        KernelConfig.quant by the engine).
     """
     max_batch: int = 4
     cache_len: int = 64
@@ -231,6 +284,7 @@ class ServeConfig:
     prefill_chunk: int = 8
     prefix_cache: bool = True
     prompt_buckets: tuple = ()
+    quant: QuantConfig = QuantConfig()
 
     @property
     def pages_per_request(self) -> int:
@@ -245,6 +299,12 @@ class ServeConfig:
         if self.cache_mode not in ("paged", "dense"):
             raise ValueError(f"unknown cache_mode {self.cache_mode!r}; "
                              "want paged | dense")
+        self.quant.validate()
+        if self.quant.kv == "int8" and self.cache_mode != "paged":
+            raise ValueError(
+                "kv=int8 quantization is implemented for the paged cache "
+                "layout only (per-page scale pools); use "
+                "cache_mode='paged'")
         for name in ("max_batch", "cache_len", "out_cap", "page_size",
                      "prefill_chunk"):
             if getattr(self, name) < 1:

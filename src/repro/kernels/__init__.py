@@ -3,9 +3,13 @@
 tt_linear           — fused base-matmul + rank-r TT epilogue (paper Eq. (5))
 tt_linear_batched_a — same fusion with a per-slot A operand (the serving
                       engine's (4+1)d task-routed decode batches)
+tt_linear[_batched_a]_w8 — w8a16 twins: int8 frozen base dequantized
+                      in-register, fp TT epilogue (quant.py, DESIGN.md §8)
 flash_attention     — blockwise online-softmax attention (train/prefill)
 decode_attention    — decode-shaped variant (one query token per row
                       against a position-masked KV cache)
+paged_attention     — block-table paged-cache attention (fp or int8 KV
+                      with per-cell scale pools)
 
 Model code reaches these through ``repro.kernels.dispatch`` (KernelPolicy —
 DESIGN.md §5); ``ops`` holds the padding/broadcast wrappers. Each kernel
@@ -13,6 +17,9 @@ has a pure-jnp oracle in ref.py and a shape/dtype-sweeping allclose test in
 tests/test_kernels.py (interpret=True on CPU; TPU is the target).
 """
 from repro.kernels import dispatch  # noqa: F401
+from repro.kernels import quant  # noqa: F401
 from repro.kernels.dispatch import KernelPolicy, resolve  # noqa: F401
 from repro.kernels.ops import (decode_attention, flash_attention,  # noqa: F401
-                               tt_linear, tt_linear_batched_a)
+                               paged_decode_attention, tt_linear,
+                               tt_linear_batched_a, tt_linear_batched_a_q,
+                               tt_linear_q)

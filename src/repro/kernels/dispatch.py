@@ -39,6 +39,7 @@ import jax.numpy as jnp
 
 from repro.config.base import KernelConfig
 from repro.kernels import ops
+from repro.kernels import quant as quant_lib
 from repro.kernels import ref as _ref
 
 
@@ -144,6 +145,47 @@ def tt_linear(x, w, a, b, *, alpha: float = 1.0,
     return _ref.tt_linear_ref(x, w, a, b, float(alpha))
 
 
+def tt_linear_q(x, wq, a, b, *, alpha: float = 1.0,
+                policy: Optional[KernelPolicy] = None):
+    """w8a16 adapted linear over a packed int8 base leaf (DESIGN.md §8).
+
+    wq: ``{"q8": int8 (K, N), "scale": f32 (G, N)}`` (kernels/quant.py);
+    x/a/b as in ``tt_linear``. Inference-only — the int8 base is frozen by
+    construction, so no custom VJP is defined; differentiate the ref path
+    (plain XLA dequant + matmul) if a gradient is ever needed.
+    """
+    if policy is not None and policy.fused_linear:
+        return ops.tt_linear_q(x, wq["q8"], wq["scale"], a, b,
+                               alpha=float(alpha), backend="pallas",
+                               interpret=policy.interpret, bm=policy.bm,
+                               bn=policy.bn, bk=policy.bk)
+    return _ref.tt_linear_q_ref(x, wq["q8"], wq["scale"], a, b,
+                                float(alpha))
+
+
+def tt_linear_batched_a_q(x, wq, a, b, *, alpha: float = 1.0,
+                          policy: Optional[KernelPolicy] = None):
+    """w8a16 per-row-A adapted linear (slot-task routing over an int8
+    base). Decode shapes run the fused w8 kernel; the (B, T>1, K) chunked-
+    prefill generalization dequantizes once and runs the batched-einsum
+    reference from the same seam (mirrors ``tt_linear_batched_a``)."""
+    decode_shaped = x.ndim == 2 or (x.ndim == 3 and x.shape[1] == 1)
+    if decode_shaped:
+        fused = policy is not None and policy.fused_linear
+        kw = dict(interpret=policy.interpret, bm=policy.bm, bn=policy.bn,
+                  bk=policy.bk) if fused else {}
+        return ops.tt_linear_batched_a_q(
+            x, wq["q8"], wq["scale"], a, b, alpha=float(alpha),
+            backend="pallas" if fused else "ref", **kw)
+    w = quant_lib.dequantize(wq, x.dtype)
+    p = jnp.einsum("b...k,bkr->b...r", x, a.astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    y = y + float(alpha) * jnp.dot(p, b.astype(p.dtype),
+                                   preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)
+
+
 def tt_linear_batched_a(x, w, a, b, *, alpha: float = 1.0,
                         policy: Optional[KernelPolicy] = None):
     """Per-row-A adapted linear (the (4+1)d slot-task routing form).
@@ -218,13 +260,18 @@ def decode_attention(q, k, v, pos, *,
 
 
 def paged_decode_attention(q, k_cache, v_cache, tables, pos, *,
+                           k_scale=None, v_scale=None,
                            policy: Optional[KernelPolicy] = None):
     """Paged-cache attention (decode and in-loop chunked prefill).
     q: (B, C, H, d); k_cache, v_cache: (N, page, KV, d); tables: (B, P)
-    int32 block table; pos: (B,) base positions -> (B, C, H, d)."""
+    int32 block table; pos: (B,) base positions -> (B, C, H, d).
+    k_scale/v_scale: (N, page, KV) per-cell scale pools when the cache is
+    int8 (the kernel dequantizes pages in-register)."""
     if policy is not None and policy.flash_attn:
         return ops.paged_decode_attention(q, k_cache, v_cache, tables, pos,
+                                          k_scale=k_scale, v_scale=v_scale,
                                           backend="pallas",
                                           interpret=policy.interpret)
     return ops.paged_decode_attention(q, k_cache, v_cache, tables, pos,
+                                      k_scale=k_scale, v_scale=v_scale,
                                       backend="ref")

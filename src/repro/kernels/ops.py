@@ -24,6 +24,8 @@ from repro.kernels.paged_attention import (
     paged_decode_attention as _paged_attn)
 from repro.kernels.tt_linear import tt_linear as _tt_linear
 from repro.kernels.tt_linear import tt_linear_batched_a as _tt_linear_ba
+from repro.kernels.tt_linear import tt_linear_batched_a_w8 as _tt_ba_w8
+from repro.kernels.tt_linear import tt_linear_w8 as _tt_linear_w8
 
 
 def _on_tpu() -> bool:
@@ -88,6 +90,83 @@ def tt_linear(x, w, a, b, *, alpha: float = 1.0, backend: str = "auto",
     y = _tt_linear(xf, w, a, b, alpha=alpha, bm=bm, bn=bn, bk=bk,
                    interpret=_interp(interpret))
     return y[:m0, :n0].reshape(*lead, n0)
+
+
+def _quant_tiles(k_dim: int, n_dim: int, scale, bn: int, bk: int):
+    """Resolve (bn, bk, per_channel) for a w8 call: group-wise scales pin
+    bk to the group size (one scale row per K tile; quantize_base
+    guarantees the group divides K)."""
+    groups = scale.shape[0]
+    per_channel = groups == 1
+    bn = _pick_tile(n_dim, bn, (256, 128))
+    if per_channel:
+        bk = _pick_tile(k_dim, bk, (512, 256, 128))
+    else:
+        bk = k_dim // groups
+    return bn, bk, per_channel
+
+
+def tt_linear_q(x, wq, scale, a, b, *, alpha: float = 1.0,
+                backend: str = "auto", interpret: bool | None = None,
+                bm: int = 0, bn: int = 0, bk: int = 0):
+    """w8a16 adapted linear: int8 base W + f32 scales (kernels/quant.py),
+    fp adapter factors. Same padding contract as ``tt_linear`` (padded K
+    rows of the int8 W are zero, so they contribute nothing under any
+    scale; padded scale columns are sliced off with the output).
+    """
+    if _use_ref(backend):
+        return _ref.tt_linear_q_ref(x, wq, scale, a, b, alpha)
+    lead = x.shape[:-1]
+    k_dim = x.shape[-1]
+    n_dim = wq.shape[1]
+    xf = x.reshape(-1, k_dim)
+    bm = _pick_tile(xf.shape[0], bm, (256, 128))
+    bn, bk, _ = _quant_tiles(k_dim, n_dim, scale, bn, bk)
+    xf, m0 = _pad_to(xf, 0, bm)
+    xf, _ = _pad_to(xf, 1, bk)
+    wq, _ = _pad_to(wq, 0, bk)
+    wq, n0 = _pad_to(wq, 1, bn)
+    scale, _ = _pad_to(scale, 1, bn)
+    a, _ = _pad_to(a, 0, bk)
+    a, _ = _pad_to(a, 1, 128)            # r is kept whole per tile
+    b, _ = _pad_to(b, 0, 128)
+    b, _ = _pad_to(b, 1, bn)
+    y = _tt_linear_w8(xf, wq, scale, a, b, alpha=alpha, bm=bm, bn=bn,
+                      bk=bk, interpret=_interp(interpret))
+    return y[:m0, :n0].reshape(*lead, n0)
+
+
+def tt_linear_batched_a_q(x, wq, scale, a, b, *, alpha: float = 1.0,
+                          backend: str = "auto",
+                          interpret: bool | None = None, bm: int = 0,
+                          bn: int = 0, bk: int = 0):
+    """w8a16 per-row-A adapted linear (the decode-slot task-routing form
+    of ``tt_linear_batched_a`` over an int8 base)."""
+    squeeze = x.ndim == 3
+    if squeeze:
+        assert x.shape[1] == 1, ("batched-A fusion is decode-shaped "
+                                 "(one token per slot)", x.shape)
+        x = x[:, 0]
+    if _use_ref(backend):
+        y = _ref.tt_linear_batched_a_q_ref(x, wq, scale, a, b, alpha)
+        return y[:, None] if squeeze else y
+    k_dim, n_dim = wq.shape
+    bm = _pick_tile(x.shape[0], bm, (8,))
+    bn, bk, _ = _quant_tiles(k_dim, n_dim, scale, bn, bk)
+    x, m0 = _pad_to(x, 0, bm)
+    x, _ = _pad_to(x, 1, bk)
+    wq, _ = _pad_to(wq, 0, bk)
+    wq, n0 = _pad_to(wq, 1, bn)
+    scale, _ = _pad_to(scale, 1, bn)
+    a, _ = _pad_to(a, 0, bm)
+    a, _ = _pad_to(a, 1, bk)
+    a, _ = _pad_to(a, 2, 128)
+    b, _ = _pad_to(b, 0, 128)
+    b, _ = _pad_to(b, 1, bn)
+    y = _tt_ba_w8(x, wq, scale, a, b, alpha=alpha, bm=bm, bn=bn, bk=bk,
+                  interpret=_interp(interpret))
+    y = y[:m0, :n0]
+    return y[:, None] if squeeze else y
 
 
 def tt_linear_batched_a(x, w, a, b, *, alpha: float = 1.0,
@@ -201,6 +280,7 @@ def decode_attention(q, k, v, pos, *, backend: str = "auto",
 
 
 def paged_decode_attention(q, k_cache, v_cache, tables, pos, *,
+                           k_scale=None, v_scale=None,
                            backend: str = "auto",
                            interpret: bool | None = None):
     """Block-table attention over a paged KV cache (serving engine decode
@@ -214,10 +294,19 @@ def paged_decode_attention(q, k_cache, v_cache, tables, pos, *,
     kernel gathers blocks in its index map (scalar-prefetched table) so
     the gathered cache never materializes; the reference path gathers
     explicitly — same valid set, same logical order.
+
+    k_scale/v_scale: optional (N, page, KV) per-cell scale pools for the
+    int8 KV mode — the kernel dequantizes pages in-register; the
+    reference path dequantizes the pool up front (same math).
     """
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (q.shape[0],))
     if _use_ref(backend):
+        if k_scale is not None:
+            k_cache = k_cache.astype(jnp.float32) * k_scale[..., None]
+            v_cache = v_cache.astype(jnp.float32) * v_scale[..., None]
+            return _ref.paged_decode_attention_ref(
+                q, k_cache, v_cache, tables, pos).astype(q.dtype)
         return _ref.paged_decode_attention_ref(q, k_cache, v_cache,
                                                tables, pos)
-    return _paged_attn(q, k_cache, v_cache, tables, pos,
+    return _paged_attn(q, k_cache, v_cache, tables, pos, k_scale, v_scale,
                        interpret=_interp(interpret))

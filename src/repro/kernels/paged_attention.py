@@ -18,11 +18,17 @@ absolute position ``pos[b] + c`` and attends cache cells ``[0, pos[b]+c]``
 skipped entirely, and sentinel table entries (>= num_blocks: unallocated
 logical pages) are clamped by the index map and hidden by the same mask.
 
+int8 KV mode (DESIGN.md §8): when per-cell scale pools ``(N, page, KV)``
+ride along, the k/v page tiles arrive int8 and dequantize in-register
+(``q8 * scale``) right before the score / value dots — the fp cache never
+exists in HBM, halving KV read traffic per decoded token. Scales follow
+the SAME block gather as the cells (one extra (1, page, 1) tile per page).
+
 Layout: blocks of (1, C, 1, d) queries per (slot, head) against
 (1, page, 1, d) cache tiles; online-softmax scratch (m, l, acc) carried
 across the sequential page grid axis, exactly like flash_attention.py.
 Validated in interpret mode against kernels/ref.py::
-paged_decode_attention_ref.
+paged_decode_attention_ref (its quantized leg dequantizes explicitly).
 """
 from __future__ import annotations
 
@@ -38,9 +44,12 @@ from repro.kernels.compat import CompilerParams
 NEG = -1e30
 
 
-def _kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
-            acc_ref, *, scale: float, page: int, chunk: int,
-            kv_steps: int):
+def _kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, *rest, scale: float,
+            page: int, chunk: int, kv_steps: int, quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     b, j = pl.program_id(0), pl.program_id(2)
 
     @pl.when(j == 0)
@@ -58,6 +67,11 @@ def _kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
     def _block():
         q = q_ref[0, :, 0]                                 # (C, d)
         k = k_ref[0, :, 0]                                 # (page, d)
+        if quantized:
+            # in-register dequant: int8 cells × per-cell (token, kv-head)
+            # scale — the fp page never exists outside VMEM
+            q = q.astype(jnp.float32)
+            k = k.astype(jnp.float32) * ks_ref[0, :, 0][:, None]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale    # (C, page)
@@ -70,9 +84,11 @@ def _kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         p = jnp.where(valid, jnp.exp(s - m_new[:, None]), 0.0)
         corr = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        v = v_ref[0, :, 0]
+        if quantized:
+            v = v.astype(jnp.float32) * vs_ref[0, :, 0][:, None]
         acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
-            p.astype(v_ref.dtype), v_ref[0, :, 0],
-            preferred_element_type=jnp.float32)
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
         m_ref[...] = m_new
 
     @pl.when(j == kv_steps - 1)
@@ -84,11 +100,13 @@ def _kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
                            v_cache: jnp.ndarray, tables: jnp.ndarray,
-                           pos: jnp.ndarray, *,
+                           pos: jnp.ndarray, k_scale=None, v_scale=None, *,
                            interpret: bool = True) -> jnp.ndarray:
     """q: (B, C, H, d); k_cache, v_cache: (N, page, KV, d) flat block
     pools; tables: (B, P) int32 block table (sentinel >= N for
     unallocated pages); pos: (B,) base positions -> (B, C, H, d).
+    k_scale/v_scale: optional (N, page, KV) per-cell scale pools — when
+    given the cache pools are int8 and dequantize in-register.
 
     Grid (B, H, P): the page axis is sequential (online softmax); the
     block table is scalar-prefetched so each page's physical block is
@@ -98,22 +116,33 @@ def paged_decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
     n, page, kv, _ = k_cache.shape
     g = h // kv
     p_tab = tables.shape[1]
+    quantized = k_scale is not None
     grid = (b, h, p_tab)
     kernel = functools.partial(_kernel, scale=d ** -0.5, page=page,
-                               chunk=c, kv_steps=p_tab)
+                               chunk=c, kv_steps=p_tab, quantized=quantized)
 
     def kv_map(bi, hi, j, tbl, _pos):
         return (jnp.minimum(tbl[bi, j], n - 1), 0, hi // g, 0)
 
+    def s_map(bi, hi, j, tbl, _pos):
+        return (jnp.minimum(tbl[bi, j], n - 1), 0, hi // g)
+
+    in_specs = [
+        pl.BlockSpec((1, c, 1, d),
+                     lambda bi, hi, j, tbl, _pos: (bi, 0, hi, 0)),
+        pl.BlockSpec((1, page, 1, d), kv_map),
+        pl.BlockSpec((1, page, 1, d), kv_map),
+    ]
+    operands = [q, k_cache, v_cache]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, page, 1), s_map),
+                     pl.BlockSpec((1, page, 1), s_map)]
+        operands += [k_scale, v_scale]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, c, 1, d),
-                         lambda bi, hi, j, tbl, _pos: (bi, 0, hi, 0)),
-            pl.BlockSpec((1, page, 1, d), kv_map),
-            pl.BlockSpec((1, page, 1, d), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, c, 1, d),
                                lambda bi, hi, j, tbl, _pos: (bi, 0, hi, 0)),
         scratch_shapes=[
@@ -129,4 +158,4 @@ def paged_decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(tables.astype(jnp.int32), pos.astype(jnp.int32), q, k_cache, v_cache)
+    )(tables.astype(jnp.int32), pos.astype(jnp.int32), *operands)

@@ -1,0 +1,151 @@
+"""Symmetric int8 quantization of the frozen serving state (DESIGN.md §8).
+
+MetaTT freezes the base transformer by construction — only the tiny shared
+TT is trained — so in the decode hot path the base weight matrices and the
+KV cache are pure *read-only bandwidth*, and paged decode (DESIGN.md §7)
+is bandwidth-bound. This module quantizes exactly that frozen half:
+
+  * ``quantize_int8`` / ``dequantize_int8`` — symmetric per-output-channel
+    (optionally K-group-wise) int8 of a weight matrix ``(..., K, N)``.
+    One f32 scale per output channel (``group_size=0``) or per
+    ``group_size``-row K group: ``scale = amax / 127`` over the group,
+    ``q = clip(round(w / scale), ±127)``. Max dequant error is scale/2
+    per element (tests/test_quant.py pins the bound).
+  * ``quantize_linear`` / ``is_quantized`` / ``dequantize`` — the packed
+    ``{"q8": int8, "scale": f32}`` container that replaces a raw weight
+    leaf in the base pytree. The container is a plain pytree (jit-able,
+    scan-sliceable: the transformer scan slices its leading ``nb`` axis
+    exactly like a raw weight) and the group size is derived from shapes,
+    so no static metadata rides along.
+  * ``quantize_base`` — walks a transformer base pytree and packs the
+    matmul hot-path leaves (attention wq/wk/wv/wo, dense-FFN wu/wd/wg);
+    embeddings, norms, routers and MoE expert banks stay full precision.
+    The serving engine calls this ONCE at construction.
+  * ``quantize_kv`` — per-cell (token × kv-head) activation quantization
+    for the int8 paged KV cache: amax/127 over head_dim at write time.
+    Per-cell (not per-whole-page) scales are deliberate: pages fill
+    incrementally inside the jitted decode loop, so a page-wide scale
+    would have to re-scale already-written cells — per-cell scales make
+    every write independent, and they live in the SAME paged block layout
+    as the cells, so prefix sharing and copy-on-write round-trip the
+    quantized representation exactly (serving/block_manager.py owns the
+    blocks either way).
+
+The trained adapter factors are NEVER quantized — the fused w8a16 kernels
+(kernels/tt_linear.py) dequantize the int8 base tile in-register and apply
+the full-precision rank-r TT epilogue while the tile is still in VMEM.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+
+#: container marker key — a dict leaf carrying this key is a packed weight
+QKEY = "q8"
+
+#: weight-dict keys eligible for base quantization (the dense matmul hot
+#: path). MoE expert banks (e_*/s_*), routers, norms, embeddings, mamba /
+#: xlstm state mixers stay fp — they are either not (K, N) matmuls or not
+#: servable by the paged engine anyway.
+_QUANT_KEYS = frozenset({"wq", "wk", "wv", "wo", "wu", "wd", "wg"})
+
+_EPS = 1e-8
+
+
+def quantize_int8(w: jnp.ndarray, group_size: int = 0):
+    """w: (..., K, N) -> (q int8 (..., K, N), scale f32 (..., G, N)).
+
+    ``group_size=0`` is per-output-channel (G = 1, amax over all of K);
+    otherwise K splits into G = K // group_size groups with one scale row
+    each (``group_size`` must divide K — callers fall back to per-channel
+    when it does not).
+    """
+    *lead, k, n = w.shape
+    if group_size:
+        if k % group_size:
+            raise ValueError(
+                f"group_size={group_size} does not divide K={k}")
+        g = k // group_size
+    else:
+        g = 1
+    wf = w.astype(jnp.float32).reshape(*lead, g, k // g, n)
+    amax = jnp.max(jnp.abs(wf), axis=-2)                    # (..., G, N)
+    scale = jnp.maximum(amax, _EPS) / 127.0
+    q = jnp.clip(jnp.round(wf / scale[..., :, None, :]), -127, 127)
+    return q.astype(jnp.int8).reshape(*lead, k, n), scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of ``quantize_int8`` (up to the rounding error): f32 out."""
+    *lead, k, n = q.shape
+    g = scale.shape[-2]
+    qf = q.astype(jnp.float32).reshape(*lead, g, k // g, n)
+    return (qf * scale[..., :, None, :]).reshape(*lead, k, n)
+
+
+def quantize_linear(w: jnp.ndarray, group_size: int = 0) -> dict:
+    """Pack one weight leaf into the ``{"q8", "scale"}`` container."""
+    q, scale = quantize_int8(w, group_size)
+    return {QKEY: q, "scale": scale}
+
+
+def is_quantized(w: Any) -> bool:
+    return isinstance(w, dict) and QKEY in w
+
+
+def dequantize(w: dict, dtype=jnp.float32) -> jnp.ndarray:
+    """Unpack a ``{"q8", "scale"}`` container to a dense matrix."""
+    return dequantize_int8(w[QKEY], w["scale"]).astype(dtype)
+
+
+def quantize_base(base: dict, *, group_size: int = 0) -> dict:
+    """Pack every matmul hot-path leaf of a transformer base pytree.
+
+    Returns a NEW pytree (the input is not mutated) in which attention
+    wq/wk/wv/wo and dense-FFN wu/wd/wg leaves — shaped ``(nb, K, N)``,
+    stacked over super-blocks — are replaced by ``{"q8", "scale"}``
+    containers; everything else (embeddings, norms, final norm, MoE
+    banks) passes through untouched. Matrices whose K the group size
+    does not divide quantize per-output-channel instead.
+    """
+    def qdict(d: dict) -> dict:
+        out = {}
+        for key, v in d.items():
+            if key in _QUANT_KEYS and hasattr(v, "ndim") and v.ndim == 3:
+                gs = group_size if (group_size
+                                    and v.shape[-2] % group_size == 0) else 0
+                out[key] = quantize_linear(v, group_size=gs)
+            else:
+                out[key] = v
+        return out
+
+    def qblocks(blocks: list) -> list:
+        out = []
+        for blk in blocks:
+            nb = {}
+            for name, sub in blk.items():
+                nb[name] = (qdict(sub) if name in ("mixer", "ffn", "xattn")
+                            else sub)
+            out.append(nb)
+        return out
+
+    out = dict(base)
+    out["blocks"] = qblocks(base["blocks"])
+    if "enc_blocks" in base:
+        out["enc_blocks"] = qblocks(base["enc_blocks"])
+    return out
+
+
+def quantize_kv(x: jnp.ndarray):
+    """Per-cell KV quantization: x (..., d) -> (int8 (..., d), f32 (...)).
+
+    One scale per cache cell per kv head (amax over head_dim). All-zero
+    vectors quantize to q=0 with the epsilon scale — they dequantize back
+    to exact zero.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.maximum(amax, _EPS) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale

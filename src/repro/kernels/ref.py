@@ -4,6 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.quant import dequantize_int8
+
 
 def tt_linear_ref(x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray,
                   b: jnp.ndarray, alpha: float = 1.0) -> jnp.ndarray:
@@ -11,6 +13,30 @@ def tt_linear_ref(x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray,
     the middle cores pre-merged into A = G1·G2[l]·G3[m], B = G4)."""
     y = jnp.dot(x, w, preferred_element_type=jnp.float32)
     p = jnp.dot(x, a, preferred_element_type=jnp.float32)
+    y = y + alpha * jnp.dot(p, b.astype(p.dtype),
+                            preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)
+
+
+def tt_linear_q_ref(x: jnp.ndarray, wq: jnp.ndarray, scale: jnp.ndarray,
+                    a: jnp.ndarray, b: jnp.ndarray,
+                    alpha: float = 1.0) -> jnp.ndarray:
+    """w8a16 oracle: dequantize the int8 base (per-channel or group-wise
+    scales — quant.py owns the layout rule) then run the fp adapted
+    linear. The Pallas twin dequantizes the W tile in-register; same
+    math, same f32 accumulation."""
+    return tt_linear_ref(x, dequantize_int8(wq, scale), a, b, alpha)
+
+
+def tt_linear_batched_a_q_ref(x: jnp.ndarray, wq: jnp.ndarray,
+                              scale: jnp.ndarray, a: jnp.ndarray,
+                              b: jnp.ndarray,
+                              alpha: float = 1.0) -> jnp.ndarray:
+    """Per-row-A (slot-task-routed) w8a16 oracle. x: (S, K); a: (S, K, r)."""
+    w = dequantize_int8(wq, scale)
+    p = jnp.einsum("sk,skr->sr", x, a.astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
     y = y + alpha * jnp.dot(p, b.astype(p.dtype),
                             preferred_element_type=jnp.float32)
     return y.astype(x.dtype)

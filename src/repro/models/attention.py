@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.config.base import ModelConfig
 from repro.kernels import dispatch
+from repro.kernels import quant as quant_lib
 from repro.models.layers import AdapterCtx, adapted_linear, apply_rope
 from repro.sharding import BATCH, SEQ, current_mesh, maybe_shard
 
@@ -249,6 +250,13 @@ def _paged_attend(x, q, k, v, w, ctx: AdapterCtx, cache: dict,
     sentinel or out-of-table pages drop (``mode="drop"``) — that is what
     keeps an evicted slot's garbage out of blocks reassigned to new
     requests.
+
+    int8 KV mode (cache carries ``k_s``/``v_s`` per-cell scale pools,
+    DESIGN.md §8): the RoPE'd k and the v quantize at write time — one
+    amax/127 scale per (token, kv-head) cell — and scales scatter through
+    the SAME block table as the cells, so COW and prefix sharing
+    round-trip the quantized representation; attention dequantizes
+    in-register inside the paged kernel.
     """
     b, t, _ = x.shape
     n_blocks, page = cache["k"].shape[0], cache["k"].shape[1]
@@ -258,16 +266,27 @@ def _paged_attend(x, q, k, v, w, ctx: AdapterCtx, cache: dict,
                               jnp.clip(pidx, 0, p_tab - 1), axis=1)
     blk = jnp.where(pidx < p_tab, blk, n_blocks)             # drop, not clamp
     off = positions % page
+    quantized = "k_s" in cache
+    if quantized:
+        k, k_s = quant_lib.quantize_kv(k)
+        v, v_s = quant_lib.quantize_kv(v)
     ck = cache["k"].at[blk, off].set(k.astype(cache["k"].dtype),
                                      mode="drop")
     cv = cache["v"].at[blk, off].set(v.astype(cache["v"].dtype),
                                      mode="drop")
+    new_cache = {"k": ck, "v": cv}
+    scales = {}
+    if quantized:
+        new_cache["k_s"] = cache["k_s"].at[blk, off].set(k_s, mode="drop")
+        new_cache["v_s"] = cache["v_s"].at[blk, off].set(v_s, mode="drop")
+        scales = dict(k_scale=new_cache["k_s"], v_scale=new_cache["v_s"])
     pol = ctx.policy if _flash_ok(ctx) else None
     out = dispatch.paged_decode_attention(q, ck, cv, block_tables,
-                                          positions[:, 0], policy=pol)
+                                          positions[:, 0], policy=pol,
+                                          **scales)
     out = out.reshape(b, t, n_h * hd)
     y = adapted_linear(out, w["wo"], ctx, "attn_o")
-    return maybe_shard(y, BATCH, SEQ, None), {"k": ck, "v": cv}
+    return maybe_shard(y, BATCH, SEQ, None), new_cache
 
 
 def init_cache(cfg: ModelConfig, batch: int, length: int, dtype) -> dict:
@@ -277,9 +296,17 @@ def init_cache(cfg: ModelConfig, batch: int, length: int, dtype) -> dict:
 
 
 def init_paged_cache(cfg: ModelConfig, num_blocks: int, page_size: int,
-                     dtype) -> dict:
+                     dtype, kv_quant: bool = False) -> dict:
     """Flat per-layer KV block pool: (num_blocks, page, KV, hd). Which
-    request owns which block lives host-side (serving/block_manager.py)."""
+    request owns which block lives host-side (serving/block_manager.py).
+    ``kv_quant`` stores cells as int8 plus per-cell f32 scale pools
+    (``k_s``/``v_s``, (num_blocks, page, KV)) in the same block layout."""
     hd = cfg.resolved_head_dim
     shape = (num_blocks, page_size, cfg.num_kv_heads, hd)
+    if kv_quant:
+        s_shape = shape[:-1]
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_s": jnp.zeros(s_shape, jnp.float32),
+                "v_s": jnp.zeros(s_shape, jnp.float32)}
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import dispatch
+from repro.kernels import quant as quant_lib
 from repro.peft import api as peft_api
 from repro.sharding import BATCH, SEQ, maybe_shard
 
@@ -46,25 +47,40 @@ def adapted_linear(x: jnp.ndarray, w: jnp.ndarray, ctx: AdapterCtx, m: str,
     + rank-r epilogue run as ONE fused kernel — the delta is applied while
     the output tile is still in VMEM instead of three HBM round-trips of
     the (M, N) output (kernels/tt_linear.py).
+
+    ``w`` may be a packed int8 leaf (``{"q8", "scale"}``, kernels/quant.py
+    — the serving engine quantizes the frozen base once at construction):
+    adapted matmuls then run the fused w8a16 kernels (int8 W tile
+    dequantized in-register, fp rank-r epilogue); unadapted ones
+    dequantize into the plain XLA matmul (still int8 HBM reads — XLA
+    fuses the scale multiply into the GEMM's operand load).
     """
     pol = ctx.policy
+    wq = quant_lib.is_quantized(w)
     if pol is not None and pol.fused_linear and ctx.spec.adapts(m):
         form = peft_api.lora_form_factors(ctx.spec, ctx.broadcast, ctx.layer,
                                           m, task=ctx.task)
         if form is not None:
             fa, fb, alpha = form
             fa, fb = fa.astype(x.dtype), fb.astype(x.dtype)
-            wc = w.astype(x.dtype)
             if fa.ndim == 3:      # (B,) task vector: per-slot A operand
-                y = dispatch.tt_linear_batched_a(x, wc, fa, fb, alpha=alpha,
-                                                 policy=pol)
+                y = (dispatch.tt_linear_batched_a_q(x, w, fa, fb,
+                                                    alpha=alpha, policy=pol)
+                     if wq else
+                     dispatch.tt_linear_batched_a(x, w.astype(x.dtype), fa,
+                                                  fb, alpha=alpha,
+                                                  policy=pol))
             else:
-                y = dispatch.tt_linear(x, wc, fa, fb, alpha=alpha,
-                                       policy=pol)
+                y = (dispatch.tt_linear_q(x, w, fa, fb, alpha=alpha,
+                                          policy=pol)
+                     if wq else
+                     dispatch.tt_linear(x, w.astype(x.dtype), fa, fb,
+                                        alpha=alpha, policy=pol))
             if b is not None:
                 y = y + b.astype(y.dtype)
             return y
-    y = x @ w.astype(x.dtype)
+    wd = quant_lib.dequantize(w, x.dtype) if wq else w.astype(x.dtype)
+    y = x @ wd
     if b is not None:
         y = y + b.astype(x.dtype)
     d = peft_api.adapter_delta(ctx.spec, ctx.broadcast, ctx.layer, x, m,

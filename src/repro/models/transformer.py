@@ -391,10 +391,13 @@ def init_caches(cfg: ModelConfig, batch: int, length: int, dtype) -> list:
 
 
 def init_paged_caches(cfg: ModelConfig, num_blocks: int, page_size: int,
-                      dtype) -> list:
+                      dtype, kv_quant: bool = False) -> list:
     """Paged cache pytree: one flat (nb, num_blocks, page, KV, hd) block
     pool per pattern position. Attention-only — the paged engine rejects
-    stateful mixers up front (their caches are not position-indexed)."""
+    stateful mixers up front (their caches are not position-indexed).
+    ``kv_quant`` makes the pools int8 with per-cell scale pools riding in
+    the same block layout (``copy_cache_block`` and the host-side block
+    bookkeeping treat them like any other leaf)."""
     nb = cfg.num_super_blocks
 
     def stack(tree):
@@ -407,7 +410,7 @@ def init_paged_caches(cfg: ModelConfig, num_blocks: int, page_size: int,
             raise NotImplementedError(
                 f"paged caches are attention-only (got {mixer!r})")
         out.append({"self": stack(attn_lib.init_paged_cache(
-            cfg, num_blocks, page_size, dtype))})
+            cfg, num_blocks, page_size, dtype, kv_quant=kv_quant))})
     return out
 
 

@@ -36,6 +36,14 @@ Architecture (README §Serving, DESIGN.md §7):
     the live/lora runtime the (B,) slot task vector gathers per-row
     C[l, t_b, m] slices from the one shared tensor train (paper
     Eq. (4)/(6)) — a single decode batch mixes tasks.
+  * QUANTIZED SERVING (DESIGN.md §8): MetaTT's base is frozen by
+    construction, so base weights + KV cache are pure read-only
+    bandwidth. ``QuantConfig(weights="int8")`` packs the base matmul
+    leaves once at construction (the fused w8a16 kernels dequantize
+    in-register; the TT delta stays fp); ``kv="int8"`` stores paged KV
+    cells as int8 with per-cell scale pools in the same block layout, so
+    the same num_blocks HBM budget holds ~2x (bf16) the tokens and
+    prefix sharing / COW round-trip the quantized representation.
 
 The engine requires attention-pattern models (stateful mixers — mamba /
 xlstm — have no position-indexed cache to page).
@@ -52,8 +60,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config.base import KernelConfig, ModelConfig, ServeConfig
+from repro.checkpoint import ckpt as ckpt_lib
+from repro.config.base import (KernelConfig, ModelConfig, QuantConfig,
+                               ServeConfig)
 from repro.kernels import dispatch as kernel_dispatch
+from repro.kernels import quant as quant_lib
 from repro.models import transformer
 from repro.peft import api as peft_api
 from repro.serving import sampling as sampling_lib
@@ -186,11 +197,32 @@ class Engine:
         # (kernels/tt_linear.py::tt_linear_batched_a); paged attention
         # routes through kernels/paged_attention.py.
         self.policy = kernel_dispatch.resolve(kernels)
+        # quantization (DESIGN.md §8): KernelConfig.quant and
+        # ServeConfig.quant merge (int8 wins) — the base is packed ONCE
+        # here, so every prefill/decode graph reads int8 weight leaves;
+        # the KV side sizes the paged pools below.
+        kq = (kernels.quant if isinstance(kernels, KernelConfig)
+              else QuantConfig())
+        sq = self.sv.quant
+        self.quant = QuantConfig(
+            weights="int8" if "int8" in (kq.weights, sq.weights) else "none",
+            kv="int8" if "int8" in (kq.kv, sq.kv) else "none",
+            group_size=kq.group_size or sq.group_size).validate()
+        self._kv_quant = self.quant.kv == "int8"
+        if self._kv_quant and self.sv.cache_mode != "paged":
+            raise ValueError(
+                "kv=int8 quantization needs cache_mode='paged' (the int8 "
+                "cells and their scale pools live in the paged block "
+                "layout)")
+        base = runtime.base
+        if self.quant.weights == "int8":
+            base = quant_lib.quantize_base(
+                base, group_size=self.quant.group_size)
         self._key = jax.random.PRNGKey(seed)
-        self._weights = (runtime.base, runtime.broadcast, runtime.per_layer)
+        self._weights = (base, runtime.broadcast, runtime.per_layer)
         self._decode_traces = 0
         self._prefill_traces = 0
-        self.last_stats = EngineStats(cache_mode=self.sv.cache_mode)
+        self.last_stats = self._new_stats()
         if self.sv.cache_mode == "dense":
             self._prefill = jax.jit(self._prefill_impl)
             self._admit = jax.jit(self._admit_impl, donate_argnums=(0,))
@@ -229,15 +261,31 @@ class Engine:
         # prefix cache indexes into them, so warm requests reuse KV
         # computed by earlier calls
         self._paged_caches = transformer.init_paged_caches(
-            self.cfg, self._num_blocks, self._page, self.cfg.compute_dtype)
+            self.cfg, self._num_blocks, self._page, self.cfg.compute_dtype,
+            kv_quant=self._kv_quant)
+
+    def _new_stats(self, requests: int = 0) -> EngineStats:
+        return EngineStats(
+            cache_mode=self.sv.cache_mode, requests=requests,
+            weights_dtype=("int8" if self.quant.weights == "int8"
+                           else "fp"),
+            kv_dtype="int8" if self._kv_quant else "fp")
 
     def _kv_bytes(self, tokens: int) -> int:
         """Device bytes of k+v cache for ``tokens`` cells across every
         layer — the one formula behind both the paged block size and the
-        dense-reservation equivalent the benchmarks compare against."""
-        return (2 * self.cfg.num_super_blocks * len(self.cfg.block_pattern)
-                * tokens * self.cfg.kv_dim
-                * jnp.dtype(self.cfg.compute_dtype).itemsize)
+        dense-reservation equivalent the benchmarks compare against. In
+        int8 KV mode a cell costs kv_dim int8 bytes plus one f32 scale
+        per kv head (k and v each) — roughly half the bf16 cost and a
+        quarter of f32, so the same num_blocks budget holds ~2x (bf16) to
+        ~4x (f32) the tokens."""
+        layers = self.cfg.num_super_blocks * len(self.cfg.block_pattern)
+        if self._kv_quant:
+            per_cell = self.cfg.kv_dim + 4 * self.cfg.num_kv_heads
+        else:
+            per_cell = (self.cfg.kv_dim
+                        * jnp.dtype(self.cfg.compute_dtype).itemsize)
+        return 2 * layers * tokens * per_cell
 
     def _reset_paged_pool(self) -> None:
         """Drop every block (and the prefix index) — used when a failed
@@ -247,7 +295,8 @@ class Engine:
         self.sched = Scheduler(self.bm, self.prefix, self.last_stats)
         self._tables[:] = self._num_blocks
         self._paged_caches = transformer.init_paged_caches(
-            self.cfg, self._num_blocks, self._page, self.cfg.compute_dtype)
+            self.cfg, self._num_blocks, self._page, self.cfg.compute_dtype,
+            kv_quant=self._kv_quant)
 
     # ------------------------------------------------------------------
     # dense mode: jitted pieces (weights passed as args so they are never
@@ -388,6 +437,29 @@ class Engine:
         return jax.lax.while_loop(cond, body, state)
 
     # ------------------------------------------------------------------
+    # base-weight snapshot (quantized serving restarts, DESIGN.md §8)
+    # ------------------------------------------------------------------
+
+    @property
+    def base_weights(self):
+        """The base pytree the step graphs actually read — with
+        weights=int8 these are the packed ``{"q8", "scale"}`` leaves."""
+        return self._weights[0]
+
+    def save_base_snapshot(self, path: str) -> str:
+        """Snapshot the (possibly int8-quantized) serving base to one
+        ``.npz`` so a restart loads packed weights instead of
+        re-quantizing the fp base (checkpoint/ckpt.py)."""
+        return ckpt_lib.save_base_snapshot(path, self._weights[0])
+
+    def load_base_snapshot(self, path: str) -> None:
+        """Replace the serving base with a snapshot saved by an engine of
+        the same model/quant configuration (the current base is the
+        structure/dtype template)."""
+        base = ckpt_lib.load_base_snapshot(path, self._weights[0])
+        self._weights = (base,) + self._weights[1:]
+
+    # ------------------------------------------------------------------
     # host-side orchestration
     # ------------------------------------------------------------------
 
@@ -454,8 +526,7 @@ class Engine:
             self._validate_request(req)  # fail fast, before any decode work
         if key is None:
             self._key, key = jax.random.split(self._key)
-        self.last_stats = EngineStats(cache_mode=self.sv.cache_mode,
-                                      requests=len(requests))
+        self.last_stats = self._new_stats(requests=len(requests))
         t0 = time.perf_counter()
         if self.sv.cache_mode == "dense":
             results = self._generate_dense(requests, key)

@@ -21,11 +21,15 @@ class EngineStats:
     decode_calls: int = 0        # host->device decode-loop invocations
     decode_traces: int = 0       # jit (re)traces of the decode graph
     prefill_traces: int = 0      # dense mode: per-bucket prefill compiles
+    # --- quantization (DESIGN.md §8) ---
+    weights_dtype: str = "fp"    # "fp" | "int8" — frozen base matmul leaves
+    kv_dtype: str = "fp"         # "fp" | "int8" — KV cache cells
     # --- KV memory ---
     page_size: int = 0
     num_blocks: int = 0          # pool budget (paged) / dense equivalent
     kv_blocks_peak: int = 0      # max blocks simultaneously in use
-    block_bytes: int = 0         # device bytes per block (all layers, k+v)
+    block_bytes: int = 0         # device bytes per block (all layers, k+v
+    #                              + per-cell scales in int8 mode)
     # --- prefix cache ---
     prefix_lookups: int = 0      # admissions that consulted the cache
     prefix_hit_tokens: int = 0   # prompt tokens served from cached blocks
@@ -50,7 +54,8 @@ class EngineStats:
         return self.kv_blocks_peak * self.block_bytes
 
     def summary(self) -> str:
-        return (f"mode={self.cache_mode} reqs={self.requests} "
+        return (f"mode={self.cache_mode} w={self.weights_dtype} "
+                f"kv={self.kv_dtype} reqs={self.requests} "
                 f"toks={self.tokens_generated} "
                 f"tok/s={self.tokens_per_s:.1f} "
                 f"kv_blocks_peak={self.kv_blocks_peak}/{self.num_blocks} "
