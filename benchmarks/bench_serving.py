@@ -15,11 +15,18 @@
    fraction (>= TOKEN_MATCH_MIN asserted) and peak KV bytes (int8 must
    come in below fp at the same num_blocks budget) — again from
    engine.last_stats.
+5. ``--mesh``: tensor-parallel vs single-device serving (DESIGN.md §9) —
+   the TP=4 engine must be token-identical to TP=1 and report per-shard
+   peak KV bytes of global/4; the ``serving/tp4_vs_tp1`` row (plus both
+   engines' stats) is merged into ``BENCH_serving.json`` in place.
+   Needs 4 devices: run under
+   ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the
+   scripts/ci.sh sharded-parity job does).
 
 Engine stats of every engine run land in ``ENGINE_STATS`` (reset per
 ``run()``) so ``benchmarks/run.py --json`` can emit them machine-readably.
 
-    PYTHONPATH=src python benchmarks/bench_serving.py [--smoke]
+    PYTHONPATH=src python benchmarks/bench_serving.py [--smoke] [--mesh]
 """
 from __future__ import annotations
 
@@ -377,6 +384,120 @@ def _quant_rows(rows, *, smoke: bool) -> None:
             f"fp {stats['fp'].kv_bytes_peak} at equal num_blocks")
 
 
+def _mesh_rows(rows, *, smoke: bool, mesh_shape=(1, 4)) -> None:
+    """Tensor-parallel vs single-device paged serving (DESIGN.md §9) on
+    the shared-prefix mixed-task workload.
+
+    Both engines serve identical requests; the TP engine shards the KV
+    pools on the kv-head axis over the "model" mesh axis. Asserted from
+    the engines' own stats: token identity (greedy decode is bitwise
+    deterministic under the head/vocab-stripe sharding), global KV
+    accounting unchanged, and per-shard peak KV bytes == global / tp.
+    """
+    tp = int(np.prod(mesh_shape))
+    if jax.device_count() < tp:
+        raise SystemExit(
+            f"--mesh needs {tp} devices; on CPU run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={tp}")
+    n_req, n_new, slots = (6, 6, 3) if smoke else (16, 16, 4)
+    cfg = registry.get_smoke_config("stablelm-1.6b")
+    run_cfg = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                        adapter_kind="metatt", adapter_variant="4+1d",
+                        num_tasks=2, adapter_rank=8)
+    spec = M.build_adapter_spec(run_cfg)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, spec, key)
+    params["adapter"] = {"cores": ttlib.random_tt(key, spec.cfg.mode_sizes,
+                                                  8, scale=0.5)}
+    rt = AdapterRuntime.build("lora", params["base"], spec,
+                              params["adapter"], params["frozen"])
+    cache_len = 32 + n_new
+    sys_prompt = np.asarray(jax.random.randint(key, (18,), 0,
+                                               cfg.vocab_size))
+    keys = jax.random.split(key, n_req)
+    reqs = []
+    for i in range(n_req):
+        tail = np.asarray(jax.random.randint(keys[i], (2 + i % 4,), 0,
+                                             cfg.vocab_size))
+        prompt = (np.concatenate([sys_prompt, tail])
+                  if i % 2 == 0 else tail)
+        reqs.append(Request(prompt, n_new, task=i % 2))
+
+    outs, stats = {}, {}
+    for label, mesh in (("tp1", ()), (f"tp{tp}", tuple(mesh_shape))):
+        eng = Engine(cfg, rt, serve=ServeConfig(
+            max_batch=slots, cache_len=cache_len, out_cap=n_new,
+            page_size=8, prefill_chunk=8, mesh_shape=mesh))
+        eng.generate(reqs)                      # compile + warm the cache
+        t0 = time.perf_counter()
+        outs[label] = eng.generate(reqs)
+        dt = time.perf_counter() - t0
+        st = eng.last_stats
+        stats[label] = st
+        rows.append(emit(
+            f"serving/engine_{label}",
+            dt / max(st.tokens_generated, 1) * 1e6,
+            f"tok_per_s={st.tokens_per_s:.1f},shards={st.shards},"
+            f"kv_bytes_peak={st.kv_bytes_peak},"
+            f"kv_bytes_peak_per_shard={st.kv_bytes_peak_per_shard},"
+            f"prefix_hit_rate={st.prefix_hit_rate:.2f}"))
+        _record_stats(f"engine_{label}", st)
+        print(f"# engine stats [{label}]: {st.summary()}")
+    t1, t4 = stats["tp1"], stats[f"tp{tp}"]
+    parity = all(a.tolist() == b.tolist() for a, b in
+                 zip(outs["tp1"], outs[f"tp{tp}"]))
+    rows.append(emit(
+        f"serving/tp{tp}_vs_tp1", 0.0,
+        f"identical_tokens={parity},shards={t4.shards},"
+        f"kv_bytes_peak={t4.kv_bytes_peak},"
+        f"kv_bytes_peak_per_shard={t4.kv_bytes_peak_per_shard},"
+        f"tok_per_s_tp1={t1.tokens_per_s:.1f},"
+        f"tok_per_s_tp{tp}={t4.tokens_per_s:.1f}"))
+    if not parity:
+        raise AssertionError("sharded engine diverged from single-device")
+    if t4.kv_bytes_peak != t1.kv_bytes_peak:
+        raise AssertionError("global KV accounting changed under TP")
+    if t4.kv_bytes_peak_per_shard * t4.shards != t4.kv_bytes_peak:
+        raise AssertionError("per-shard KV bytes do not sum to global")
+
+
+def _merge_rows_into_json(rows) -> None:
+    """Merge freshly produced CSV rows (+ ENGINE_STATS) into
+    BENCH_serving.json in place — rows with the same name are replaced,
+    everything else is preserved, so the ``--mesh`` job composes with
+    ``run.py --json`` regardless of execution order."""
+    import json
+    import os
+    from benchmarks.run import REPO_ROOT, _row_dicts
+    path = os.path.join(REPO_ROOT, "BENCH_serving.json")
+    payload = {"rows": [], "engine_stats": []}
+    if os.path.exists(path):
+        with open(path) as f:
+            payload = json.load(f)
+    new = _row_dicts(rows)
+    names = {r["name"] for r in new}
+    payload["rows"] = [r for r in payload.get("rows", [])
+                       if r["name"] not in names] + new
+    labels = {s["label"] for s in ENGINE_STATS}
+    payload["engine_stats"] = [s for s in payload.get("engine_stats", [])
+                               if s.get("label") not in labels]
+    payload["engine_stats"] += ENGINE_STATS
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"# merged {sorted(names)} into {path}", flush=True)
+
+
+def run_mesh(*, smoke: bool = False) -> list:
+    """The ``--mesh`` entry point: only the TP-vs-single-device rows
+    (CI runs this as its own job, with --smoke, under forced fake
+    devices)."""
+    ENGINE_STATS.clear()
+    rows = []
+    _mesh_rows(rows, smoke=smoke)
+    _merge_rows_into_json(rows)
+    return rows
+
+
 def run(*, smoke: bool = False) -> list:
     ENGINE_STATS.clear()
     rows = []
@@ -392,4 +513,13 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small shapes for CI")
-    run(smoke=ap.parse_args().smoke)
+    ap.add_argument("--mesh", action="store_true",
+                    help="tensor-parallel vs single-device rows only "
+                         "(needs 4 devices; merges serving/tp4_vs_tp1 "
+                         "into BENCH_serving.json; honors --smoke)")
+    args = ap.parse_args()
+    if args.mesh:
+        print("name,us_per_call,derived")
+        run_mesh(smoke=args.smoke)
+    else:
+        run(smoke=args.smoke)

@@ -46,9 +46,11 @@ def _write_json(path: str, payload: dict) -> None:
 def _emit_json(kernel_rows: list, serving_rows: list) -> None:
     from benchmarks import bench_serving
     _write_json("BENCH_kernels.json", {"rows": _row_dicts(kernel_rows)})
-    _write_json("BENCH_serving.json",
-                {"rows": _row_dicts(serving_rows),
-                 "engine_stats": bench_serving.ENGINE_STATS})
+    # merge (replace same-name rows / same-label stats, keep the rest)
+    # rather than overwrite, so rows written by other jobs — e.g. the
+    # sharded-parity job's serving/tp4_vs_tp1 (`bench_serving --mesh`) —
+    # survive this writer regardless of execution order
+    bench_serving._merge_rows_into_json(serving_rows)
 
 
 def main(*, smoke: bool = False, emit_json: bool = False) -> None:

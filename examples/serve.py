@@ -11,6 +11,12 @@ Serves a mixed-task request stream through the slot engine
   * merged — ΔW of one task folded into the frozen weights (zero overhead);
              single-task streams only.
 
+``--tp N`` serves through the tensor-parallel engine (DESIGN.md §9):
+shard_map over a (1, N) ("data", "model") mesh, KV pools kv-head-sharded
+per device — token-identical output, per-shard KV bytes = global / N.
+Needs N devices (on CPU:
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+
     PYTHONPATH=src python examples/serve.py [--tokens 16] [--requests 8]
 """
 import argparse
@@ -19,15 +25,17 @@ import time
 import jax
 
 from repro import configs as registry
-from repro.config.base import RunConfig, SHAPES
+from repro.config.base import RunConfig, SHAPES, ServeConfig
 from repro.core import tt as ttlib
 from repro.models import model as M
 from repro.serving import AdapterRuntime, Engine, Request
 
 
-def serve(cfg, runtime, reqs, *, max_batch, cache_len, out_cap):
-    eng = Engine(cfg, runtime, max_batch=max_batch, cache_len=cache_len,
-                 out_cap=out_cap)
+def serve(cfg, runtime, reqs, *, max_batch, cache_len, out_cap, tp=0):
+    sv = ServeConfig(max_batch=max_batch, cache_len=cache_len,
+                     out_cap=out_cap,
+                     mesh_shape=(1, tp) if tp else ())
+    eng = Engine(cfg, runtime, serve=sv)
     eng.generate(reqs)   # warm-up: compile once + populate the prefix cache
     t0 = time.perf_counter()
     outs = eng.generate(reqs)
@@ -45,6 +53,9 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4, help="decode slots")
     ap.add_argument("--tasks", type=int, default=3)
+    ap.add_argument("--tp", type=int, default=0,
+                    help="tensor-parallel shards on the 'model' mesh "
+                         "axis (0 = single device)")
     args = ap.parse_args()
 
     cfg = registry.get_smoke_config("stablelm-1.6b")
@@ -66,7 +77,7 @@ def main():
             for i in range(args.requests)]
     cache_len = 16 + args.tokens
     kw = dict(max_batch=args.batch, cache_len=cache_len,
-              out_cap=args.tokens)
+              out_cap=args.tokens, tp=args.tp)
 
     rt_live = AdapterRuntime.build("live", base, spec, adapter, frozen)
     live, t_live, toks = serve(cfg, rt_live, reqs, **kw)

@@ -27,6 +27,14 @@ python -m pytest -x -q tests/test_block_manager.py tests/test_paged_engine.py
 # greedy tokens and round-trip prefix sharing / COW / base snapshots
 python -m pytest -x -q tests/test_quant.py
 
+# sharded-parity job: the tensor-parallel engine (shard_map over a
+# ("data","model") mesh, kv-head-sharded KV pools, vocab-striped readout)
+# must be token-identical to the single-device engine on a forced
+# 4-device CPU mesh across runtimes / cache modes / kv dtypes, with
+# per-shard KV accounting summing to the global figure
+XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    python -m pytest -x -q tests/test_sharded_engine.py
+
 # benchmark smoke: kernel-dispatch + serving benches (assert fused-vs-unfused
 # AND paged-vs-dense token parity, nonzero prefix hit rate, paged KV peak
 # below the dense reservation, int8 peak KV bytes below fp at equal blocks,
@@ -34,3 +42,9 @@ python -m pytest -x -q tests/test_quant.py
 # bit-rot fail CI; --json leaves BENCH_kernels.json / BENCH_serving.json at
 # the repo root so future PRs can diff the perf trajectory
 python benchmarks/run.py --smoke --json
+
+# tensor-parallel serving bench: TP=4 vs TP=1 on a forced 4-device mesh
+# (token identity + per-shard KV bytes asserted); merges the
+# serving/tp4_vs_tp1 row into the BENCH_serving.json written above
+XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    python benchmarks/bench_serving.py --mesh --smoke

@@ -274,6 +274,21 @@ class ServeConfig:
         int8 with per-cell f32 scales in the same block layout (paged mode
         only); ``quant.weights`` here is honored too (merged with
         KernelConfig.quant by the engine).
+    mesh_shape: tensor-parallel serving (DESIGN.md §9). Empty tuple
+        (default) = single-device engine. A ``(data, model)`` pair builds
+        a mesh (sharding/rules.py::serve_mesh) and the engine wraps its
+        jitted step graphs in ``shard_map``: KV caches / paged pools
+        shard on the kv-head axis over the "model" axis, attention runs
+        per-shard on its local head group, the readout computes a
+        per-shard vocab stripe and all-gathers the (B, V) logits for
+        in-graph sampling. Everything else — TT cores, block table, slot
+        state, sampling RNG — is replicated, so greedy decode is
+        token-identical to the single-device engine. The "data" axis is
+        reserved for replica DP (state is replicated across it today).
+        num_heads, num_kv_heads and padded_vocab must each be divisible
+        by the "model" axis size.
+    tp_axis: mesh axis name the KV/head/vocab sharding applies to
+        (default "model"; must be one of the serve-mesh axes).
     """
     max_batch: int = 4
     cache_len: int = 64
@@ -285,6 +300,8 @@ class ServeConfig:
     prefix_cache: bool = True
     prompt_buckets: tuple = ()
     quant: QuantConfig = QuantConfig()
+    mesh_shape: tuple = ()         # () | (data, model)
+    tp_axis: str = "model"
 
     @property
     def pages_per_request(self) -> int:
@@ -309,6 +326,17 @@ class ServeConfig:
                      "prefill_chunk"):
             if getattr(self, name) < 1:
                 raise ValueError(f"ServeConfig.{name} must be >= 1")
+        if self.mesh_shape:
+            if len(self.mesh_shape) != 2 \
+                    or any(int(s) < 1 for s in self.mesh_shape):
+                raise ValueError(
+                    f"ServeConfig.mesh_shape={self.mesh_shape!r} must be "
+                    "a (data, model) pair of positive ints (empty for "
+                    "single-device serving)")
+            if self.tp_axis not in ("data", "model"):
+                raise ValueError(
+                    f"ServeConfig.tp_axis={self.tp_axis!r} must name a "
+                    "serve-mesh axis (data | model)")
         if self.cache_mode == "paged" and self.page_size % 8 != 0:
             raise ValueError(
                 f"page_size={self.page_size} must be a multiple of the "

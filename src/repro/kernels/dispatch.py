@@ -27,6 +27,15 @@ holds for forward/inference only; a blockwise flash backward kernel is the
 known follow-up at this seam. Future backends (GPU Triton, new TPU
 generations) plug in here: add a branch to resolve() and the whole stack
 follows.
+
+Sharded serving (DESIGN.md §9): these entry points are shard_map-safe —
+under the engine's tensor-parallel mesh each shard calls them with its
+LOCAL head group and LOCAL KV-pool shard (q (B, C, H/tp, d) against
+(N, page, KV/tp, d) pools), which is just a smaller instance of the
+single-device shapes documented below; no kernel knows about the mesh.
+The ambient-GSPMD guard lives one level up (models/attention.py::
+_flash_ok): kernels stand down under an ambient >1-chip mesh, but run
+per-shard inside shard_map where no ambient mesh exists.
 """
 from __future__ import annotations
 

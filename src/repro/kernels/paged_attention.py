@@ -29,6 +29,13 @@ Layout: blocks of (1, C, 1, d) queries per (slot, head) against
 across the sequential page grid axis, exactly like flash_attention.py.
 Validated in interpret mode against kernels/ref.py::
 paged_decode_attention_ref (its quantized leg dequantizes explicitly).
+
+Under tensor-parallel serving (DESIGN.md §9) the kernel is invoked once
+PER SHARD inside the engine's shard_map region, with the shard's local
+head group and local kv-head-striped pools — H and KV below are then
+H/tp and KV/tp; the grid/indexing logic is unchanged because every
+(slot, head) program is independent and the block table (replicated) and
+positions are shard-agnostic.
 """
 from __future__ import annotations
 

@@ -27,15 +27,20 @@ from repro.config.base import ModelConfig
 from repro.kernels import dispatch
 from repro.kernels import quant as quant_lib
 from repro.models.layers import AdapterCtx, adapted_linear, apply_rope
-from repro.sharding import BATCH, SEQ, current_mesh, maybe_shard
+from repro.sharding import (BATCH, SEQ, current_mesh, maybe_shard,
+                            serve_tp_gather, serve_tp_slice)
 
 NEG_INF = -1e30
 
 
 def _flash_ok(ctx: AdapterCtx) -> bool:
-    """Pallas attention applies on a single device only — under a >1-chip
-    mesh the sharded XLA paths (context-parallel scores, sequence-sharded
-    caches) own the layout decisions."""
+    """Pallas attention applies per device: under an AMBIENT >1-chip
+    GSPMD mesh the sharded XLA paths (context-parallel scores,
+    sequence-sharded caches) own the layout decisions, so the kernels
+    stand down. Inside the serving engine's ``shard_map`` region there is
+    no ambient mesh — each shard invokes the kernels on its LOCAL head
+    group / cache shard (DESIGN.md §9), which is exactly the
+    single-device shape they support."""
     pol = ctx.policy
     if pol is None or not pol.flash_attn:
         return False
@@ -152,6 +157,15 @@ def attention(x: jnp.ndarray, w: dict, ctx: AdapterCtx, cfg: ModelConfig, *,
         # vector of per-row positions (the serving engine's decode slots —
         # each slot advances independently under continuous batching).
         assert t == 1, "decode path expects a single query token"
+        # serve-TP (DESIGN.md §9): inside the engine's shard_map region
+        # the cache arrives kv-head-sharded — slice this shard's
+        # contiguous head group (q heads stay kv-aligned: H/tp = G·KV/tp)
+        # and all-gather the per-head outputs below. No-ops unsharded.
+        q = serve_tp_slice(q, 2)
+        k = serve_tp_slice(k, 2)
+        v = serve_tp_slice(v, 2)
+        kv_l = k.shape[2]
+        h_l = kv_l * g
         if jnp.ndim(cache_pos) == 0:
             ck = jax.lax.dynamic_update_slice(
                 cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
@@ -172,12 +186,12 @@ def attention(x: jnp.ndarray, w: dict, ctx: AdapterCtx, cfg: ModelConfig, *,
             # the GQA broadcast happen inside the dispatch seam
             out = dispatch.decode_attention(q, ck, cv, cp,
                                             policy=ctx.policy)
-            out = out.reshape(b, 1, n_kv, g, hd)
         else:
-            qh = q.reshape(b, 1, n_kv, g, hd)
+            qh = q.reshape(b, 1, kv_l, g, hd)
             mask = (jnp.arange(s_len)[None, :] <= cp[:, None]
                     )[:, None, None, None, :]
             out = _softmax_attend(qh, ck, cv, mask, scale)
+        out = serve_tp_gather(out.reshape(b, 1, h_l, hd), 2)
         new_cache = {"k": ck, "v": cv}
     else:
         # ---- train / prefill / cross
@@ -257,8 +271,19 @@ def _paged_attend(x, q, k, v, w, ctx: AdapterCtx, cache: dict,
     the SAME block table as the cells, so COW and prefix sharing
     round-trip the quantized representation; attention dequantizes
     in-register inside the paged kernel.
+
+    Serve-TP (DESIGN.md §9): inside the engine's shard_map region the
+    pools arrive kv-head-sharded; this shard slices its contiguous
+    q/k/v head group (post-RoPE — per-head ops commute with the slice),
+    scatters/attends against its LOCAL pool shard only, and the per-head
+    outputs are all-gathered before the replicated output projection.
+    Block ids, positions and masks are shard-independent, so the
+    host-side BlockManager never sees the mesh.
     """
     b, t, _ = x.shape
+    q = serve_tp_slice(q, 2)
+    k = serve_tp_slice(k, 2)
+    v = serve_tp_slice(v, 2)
     n_blocks, page = cache["k"].shape[0], cache["k"].shape[1]
     p_tab = block_tables.shape[1]
     pidx = positions // page                                 # (B, C)
@@ -284,6 +309,7 @@ def _paged_attend(x, q, k, v, w, ctx: AdapterCtx, cache: dict,
     out = dispatch.paged_decode_attention(q, ck, cv, block_tables,
                                           positions[:, 0], policy=pol,
                                           **scales)
+    out = serve_tp_gather(out, 2)
     out = out.reshape(b, t, n_h * hd)
     y = adapted_linear(out, w["wo"], ctx, "attn_o")
     return maybe_shard(y, BATCH, SEQ, None), new_cache

@@ -31,7 +31,8 @@ from repro.models import xlstm as xlstm_lib
 from repro.models.layers import (AdapterCtx, dense_ffn, embed_tokens,
                                  lm_logits, norm)
 from repro.peft import api as peft_api
-from repro.sharding import BATCH, SEQ, maybe_shard
+from repro.sharding import (BATCH, SEQ, get_serve_tp, maybe_shard,
+                            serve_tp_gather, serve_tp_slice)
 
 # ---------------------------------------------------------------------------
 # init
@@ -425,6 +426,23 @@ def copy_cache_block(caches, src, dst):
     return jax.tree_util.tree_map(one, caches)
 
 
+def _serve_logits(h, embed):
+    """Tied-embedding readout for the serving step graphs. h: (B, d);
+    embed: (V, d), replicated. Returns (B, V) logits.
+
+    Under serve-time tensor parallelism (sharding.get_serve_tp — the
+    engine's shard_map region, DESIGN.md §9) each shard computes its
+    contiguous padded-vocab column stripe — bitwise equal to the matching
+    columns of the replicated readout, since column-splitting a GEMM
+    changes no per-element reduction order — and the full logits are
+    all-gathered for in-graph sampling: the ONE all-gather of activations
+    in the decode step, sized (B, V) per token."""
+    if get_serve_tp() is None:
+        return lm_logits(h, embed)
+    local = serve_tp_slice(embed, 0)
+    return serve_tp_gather(h @ local.T.astype(h.dtype), 1)
+
+
 def paged_step(base, cfg: ModelConfig, spec, broadcast, per_layer, toks,
                caches, block_tables, pos, sel, *, task=None, policy=None):
     """One co-batched decode / chunked-prefill step over a paged cache.
@@ -447,7 +465,7 @@ def paged_step(base, cfg: ModelConfig, spec, broadcast, per_layer, toks,
     h = norm(h, jax.tree_util.tree_map(lambda a: a[0], base["final_norm"]),
              cfg.norm_eps)
     h_sel = h[jnp.arange(h.shape[0]), sel]                  # (B, d)
-    logits = lm_logits(h_sel, base["embed"]["tok"])
+    logits = _serve_logits(h_sel, base["embed"]["tok"])
     return logits, new_caches
 
 
@@ -484,5 +502,5 @@ def decode_step(base, cfg: ModelConfig, spec, broadcast, per_layer, token,
         task=task, policy=policy)
     h = norm(h, jax.tree_util.tree_map(lambda a: a[0], base["final_norm"]),
              cfg.norm_eps)
-    logits = lm_logits(h[:, 0], base["embed"]["tok"])
+    logits = _serve_logits(h[:, 0], base["embed"]["tok"])
     return logits, new_caches

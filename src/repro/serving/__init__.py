@@ -1,9 +1,12 @@
 """Serving subsystem: continuous-batching engine over a paged KV cache,
-adapter runtimes, in-graph sampling (README §Serving, DESIGN.md §7).
+adapter runtimes, in-graph sampling (README §Serving, DESIGN.md §7;
+tensor-parallel serving over a ("data","model") mesh via
+ServeConfig.mesh_shape — DESIGN.md §9).
 
   Engine          — slot engine, paged KV cache (block manager + scheduler,
                     prefix sharing, in-loop chunked prefill) by default;
-                    dense layout behind ServeConfig(cache_mode="dense")
+                    dense layout behind ServeConfig(cache_mode="dense");
+                    shard_map-sharded step graphs when mesh_shape is set
   AdapterRuntime  — live TT | to_lora_form | fold_into_dense | none
   SamplingConfig  — greedy / temperature / top-k, applied in-graph
   BlockManager    — host-side KV block pool: free list, refcounts, COW

@@ -37,9 +37,25 @@ from typing import Dict, List, Optional, Tuple
 
 class BlockManager:
     """Free list + refcounts over ``num_blocks`` KV blocks of ``page_size``
-    tokens. Pure host state; no jax."""
+    tokens. Pure host state; no jax.
+
+    COW rule (the one invariant everything else leans on): a block is
+    WRITABLE only at refcount exactly 1 — one slot, no prefix-cache
+    sharers. The scheduler checks ``writable`` at admit time and, when a
+    request's first writable position lands inside a shared page,
+    allocates a fresh block and schedules ONE device copy
+    (``transformer.copy_cache_block``) before the slot ever decodes;
+    the jitted loop itself never copies or allocates.
+
+    Sharding note (DESIGN.md §9): block ids are shard-agnostic — pools
+    shard on the kv-head axis, never on blocks, so id ``bid`` addresses
+    row ``bid`` of EVERY shard's pool and one host-side decision is
+    valid on all shards. One BlockManager serves any mesh size.
+    """
 
     def __init__(self, num_blocks: int, page_size: int):
+        """num_blocks: pool capacity; page_size: tokens per block (both
+        >= 1). All blocks start free with refcount 0."""
         if num_blocks < 1 or page_size < 1:
             raise ValueError((num_blocks, page_size))
         self.num_blocks = num_blocks
@@ -50,13 +66,16 @@ class BlockManager:
     # -- introspection -------------------------------------------------
     @property
     def free_blocks(self) -> int:
+        """Blocks currently allocatable (refcount 0)."""
         return len(self._free)
 
     @property
     def used_blocks(self) -> int:
+        """Blocks held by at least one slot or the prefix cache."""
         return self.num_blocks - len(self._free)
 
     def refcount(self, bid: int) -> int:
+        """Current reference count of block ``bid`` (0 = free)."""
         return self._ref[bid]
 
     # -- alloc / share / free ------------------------------------------
@@ -127,16 +146,20 @@ class PrefixCache:
     """
 
     def __init__(self, bm: BlockManager):
+        """bm: the pool whose blocks this cache pins (one refcount per
+        cached entry). Starts empty."""
         self.bm = bm
         self._entries: Dict[tuple, _Entry] = {}
         self._partials: Dict[tuple, List[tuple]] = {}  # parent -> entry keys
         self._tick = 0
 
     def __len__(self) -> int:
+        """Number of cached page entries (== pinned blocks)."""
         return len(self._entries)
 
     @property
     def cached_blocks(self) -> int:
+        """Blocks currently pinned by the cache (one per entry)."""
         return len(self._entries)
 
     def _touch(self, e: _Entry) -> None:
@@ -273,5 +296,7 @@ class PrefixCache:
         self.bm.deref(e.block)
 
     def clear(self) -> None:
+        """Drop every entry and release the cache's refcounts (blocks
+        still held by live slots stay allocated)."""
         for e in list(self._entries.values()):
             self._drop(e)

@@ -44,6 +44,21 @@ Architecture (README §Serving, DESIGN.md §7):
     cells as int8 with per-cell scale pools in the same block layout, so
     the same num_blocks HBM budget holds ~2x (bf16) the tokens and
     prefix sharing / COW round-trip the quantized representation.
+  * TENSOR-PARALLEL SERVING (DESIGN.md §9): with
+    ``ServeConfig(mesh_shape=(data, model))`` the engine builds a mesh
+    (sharding/rules.py::serve_mesh) and wraps every jitted step graph —
+    admit, COW, the prefill+decode while_loop — in ``shard_map``. The
+    K/V (and int8 scale) pools shard on the KV-HEAD axis over "model":
+    each shard scatters and attends only its contiguous head group
+    against its local pool shard, the readout computes a per-shard
+    vocab stripe, and the (B, V) logits are all-gathered for in-graph
+    sampling — the only collectives in the loop. TT cores, block
+    tables, slot state, task ids and the sampling PRNG are replicated,
+    and ALL admission / eviction / COW decisions stay host-side on the
+    shard-agnostic BlockManager (one block id indexes every shard's
+    pool), so sharded greedy decode is token-identical to the
+    single-device engine and per-shard peak KV bytes are 1/|model| of
+    the global figure (``EngineStats.kv_bytes_peak_per_shard``).
 
 The engine requires attention-pattern models (stateful mixers — mamba /
 xlstm — have no position-indexed cache to page).
@@ -59,6 +74,7 @@ from typing import Any, Callable, List, NamedTuple, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import ckpt as ckpt_lib
 from repro.config.base import (KernelConfig, ModelConfig, QuantConfig,
@@ -72,6 +88,9 @@ from repro.serving.adapter_runtime import AdapterRuntime
 from repro.serving.block_manager import BlockManager, PrefixCache
 from repro.serving.scheduler import Scheduler
 from repro.serving.stats import EngineStats
+from repro.sharding import (serve_cache_pspec, serve_cache_sharding,
+                            serve_mesh, serve_tp_slice, set_serve_tp)
+from repro.sharding.compat import shard_map
 
 
 @dataclasses.dataclass
@@ -141,6 +160,12 @@ class Engine:
     ``out_cap`` bounds max_new_tokens. ``generate`` serves any number of
     requests through the fixed slots, admitting/evicting as they finish;
     per-call observability lands on ``engine.last_stats``.
+
+    ``serve.mesh_shape=(data, model)`` makes the engine tensor-parallel
+    (DESIGN.md §9): KV caches shard on the kv-head axis over "model"
+    inside shard_map-wrapped step graphs, token-identically to the
+    single-device engine (greedy). num_heads / num_kv_heads /
+    padded_vocab must divide the "model" axis size.
     """
 
     def __init__(self, model_cfg: ModelConfig, runtime: AdapterRuntime, *,
@@ -192,6 +217,25 @@ class Engine:
         self.out_cap = self.sv.out_cap
         self.prompt_buckets = tuple(sorted(self.sv.prompt_buckets))
         self.sampling = sampling.validate()
+        # tensor-parallel serving (DESIGN.md §9): the mesh is built once;
+        # every step graph below is shard_map-wrapped over it. Head /
+        # vocab groups are sliced contiguously per shard, so the sharded
+        # dims must divide the TP axis (no silent replicated fallback —
+        # the KV-pool memory claim would quietly evaporate).
+        self.mesh = None
+        self._tp = 1
+        if self.sv.mesh_shape:
+            self.mesh = serve_mesh(self.sv.mesh_shape)
+            self._tp = int(self.mesh.shape[self.sv.tp_axis])
+            for dim, name in ((model_cfg.num_heads, "num_heads"),
+                              (model_cfg.num_kv_heads, "num_kv_heads"),
+                              (model_cfg.padded_vocab, "padded_vocab")):
+                if dim % self._tp:
+                    raise ValueError(
+                        f"{name}={dim} is not divisible by the "
+                        f"{self.sv.tp_axis}-axis size {self._tp}; the "
+                        "sharded engine slices contiguous head / vocab "
+                        "groups per shard")
         # resolved once; static inside the jitted step graphs. With a
         # (4+1)d adapter the fused decode route is the batched-A kernel
         # (kernels/tt_linear.py::tt_linear_batched_a); paged attention
@@ -225,10 +269,61 @@ class Engine:
         self.last_stats = self._new_stats()
         if self.sv.cache_mode == "dense":
             self._prefill = jax.jit(self._prefill_impl)
-            self._admit = jax.jit(self._admit_impl, donate_argnums=(0,))
-            self._decode = jax.jit(self._decode_impl, donate_argnums=(3,))
+            self._init_dense()
         else:
             self._init_paged()
+
+    # ------------------------------------------------------------------
+    # step-graph construction (single-device jit, or jit(shard_map) over
+    # the serve mesh — DESIGN.md §9)
+    # ------------------------------------------------------------------
+
+    def _rep_spec(self, tree):
+        """Fully-replicated PartitionSpec pytree matching ``tree``."""
+        return jax.tree_util.tree_map(lambda _: P(), tree)
+
+    def _shard_mapped(self, fn, in_specs, out_specs):
+        """Wrap a step impl in ``shard_map`` over the serve mesh (identity
+        without one). The wrapper installs the serve-TP trace context
+        (sharding.set_serve_tp) around tracing, which is what makes the
+        attention / readout call sites slice this shard's head and vocab
+        groups; it is cleared before control returns to the host."""
+        if self.mesh is None:
+            return fn
+        axis, tp = self.sv.tp_axis, self._tp
+
+        def traced(*args):
+            set_serve_tp(axis, tp)
+            try:
+                return fn(*args)
+            finally:
+                set_serve_tp(None)
+
+        return shard_map(traced, mesh=self.mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+
+    def _init_dense(self) -> None:
+        """Jit (and, on a mesh, shard_map) the dense-mode step graphs.
+        Sharded layout: decode caches (nb, B, S, KV, hd) shard the
+        kv-head axis on "model"; prefill stays a plain replicated jit
+        (it computes full-width caches that admit slices per shard)."""
+        if self.mesh is None:
+            self._admit = jax.jit(self._admit_impl, donate_argnums=(0,))
+            self._decode = jax.jit(self._decode_impl, donate_argnums=(3,))
+            return
+        template = transformer.init_caches(
+            self.cfg, self.max_batch, self.cache_len, self.cfg.compute_dtype)
+        sspec = DecodeState(
+            tok=P(), pos=P(), remaining=P(), active=P(), widx=P(),
+            out=P(), task=P(), key=P(),
+            caches=serve_cache_pspec(template, self.sv.tp_axis))
+        wspec = tuple(self._rep_spec(w) for w in self._weights)
+        self._admit = jax.jit(self._shard_mapped(
+            self._admit_impl,
+            (sspec, P(), self._rep_spec(template), P(), P(), P(), P()),
+            sspec), donate_argnums=(0,))
+        self._decode = jax.jit(self._shard_mapped(
+            self._decode_impl, (*wspec, sspec), sspec), donate_argnums=(3,))
 
     def _init_paged(self) -> None:
         sv = self.sv
@@ -253,28 +348,65 @@ class Engine:
         self._tables = np.full((self.max_batch, self._p_tab),
                                self._num_blocks, np.int32)
         self._block_bytes = self._kv_bytes(self._page)
-        self._padmit = jax.jit(self._paged_admit_impl, donate_argnums=(0,))
-        self._pcow = jax.jit(self._cow_impl, donate_argnums=(0,))
-        self._pdecode = jax.jit(self._paged_decode_impl,
-                                donate_argnums=(3,))
         # the physical block pools persist ACROSS generate calls — the
         # prefix cache indexes into them, so warm requests reuse KV
         # computed by earlier calls
-        self._paged_caches = transformer.init_paged_caches(
+        self._paged_caches = self._fresh_pools()
+        if self.mesh is None:
+            self._padmit = jax.jit(self._paged_admit_impl,
+                                   donate_argnums=(0,))
+            self._pcow = jax.jit(self._cow_impl, donate_argnums=(0,))
+            self._pdecode = jax.jit(self._paged_decode_impl,
+                                    donate_argnums=(3,))
+            return
+        # sharded step graphs (DESIGN.md §9): pools shard on the kv-head
+        # axis; every other state leaf — slot scalars, prompt rows, the
+        # PRNG key — and the block tables replicate, so the host-side
+        # admit/evict/COW bookkeeping is identical on every shard.
+        sspec = PagedState(
+            tok=P(), prompt=P(), plen=P(), done=P(), remaining=P(),
+            active=P(), widx=P(), out=P(), task=P(), key=P(),
+            caches=serve_cache_pspec(self._paged_caches, self.sv.tp_axis))
+        wspec = tuple(self._rep_spec(w) for w in self._weights)
+        self._padmit = jax.jit(self._shard_mapped(
+            self._paged_admit_impl,
+            (sspec, P(), P(), P(), P(), P(), P()), sspec),
+            donate_argnums=(0,))
+        self._pcow = jax.jit(self._shard_mapped(
+            self._cow_impl, (sspec, P(), P()), sspec), donate_argnums=(0,))
+        self._pdecode = jax.jit(self._shard_mapped(
+            self._paged_decode_impl, (*wspec, sspec, P()), sspec),
+            donate_argnums=(3,))
+
+    def _fresh_pools(self):
+        """Zero paged K/V (+ int8 scale) pools, kv-head-sharded over the
+        serve mesh when one is configured (the host-side BlockManager is
+        shard-agnostic: one block id addresses row ``bid`` of every
+        shard's pool)."""
+        caches = transformer.init_paged_caches(
             self.cfg, self._num_blocks, self._page, self.cfg.compute_dtype,
             kv_quant=self._kv_quant)
+        if self.mesh is not None:
+            caches = jax.device_put(caches, serve_cache_sharding(
+                caches, self.mesh, self.sv.tp_axis))
+        return caches
 
     def _new_stats(self, requests: int = 0) -> EngineStats:
+        """Fresh per-generate stats object (cache mode / dtypes / shard
+        count are engine constants; counters start at zero)."""
         return EngineStats(
             cache_mode=self.sv.cache_mode, requests=requests,
             weights_dtype=("int8" if self.quant.weights == "int8"
                            else "fp"),
-            kv_dtype="int8" if self._kv_quant else "fp")
+            kv_dtype="int8" if self._kv_quant else "fp",
+            shards=self._tp)
 
     def _kv_bytes(self, tokens: int) -> int:
-        """Device bytes of k+v cache for ``tokens`` cells across every
-        layer — the one formula behind both the paged block size and the
-        dense-reservation equivalent the benchmarks compare against. In
+        """GLOBAL (all-shard) device bytes of k+v cache for ``tokens``
+        cells across every layer — the one formula behind both the paged
+        block size and the dense-reservation equivalent the benchmarks
+        compare against; under TP each shard holds 1/``shards`` of it
+        (EngineStats.block_bytes_per_shard does the division). In
         int8 KV mode a cell costs kv_dim int8 bytes plus one f32 scale
         per kv head (k and v each) — roughly half the bf16 cost and a
         quarter of f32, so the same num_blocks budget holds ~2x (bf16) to
@@ -294,9 +426,7 @@ class Engine:
         self.prefix = PrefixCache(self.bm) if self.sv.prefix_cache else None
         self.sched = Scheduler(self.bm, self.prefix, self.last_stats)
         self._tables[:] = self._num_blocks
-        self._paged_caches = transformer.init_paged_caches(
-            self.cfg, self._num_blocks, self._page, self.cfg.compute_dtype,
-            kv_quant=self._kv_quant)
+        self._paged_caches = self._fresh_pools()
 
     # ------------------------------------------------------------------
     # dense mode: jitted pieces (weights passed as args so they are never
@@ -316,9 +446,14 @@ class Engine:
     def _admit_impl(self, state: DecodeState, slot, caches1,
                     last_logits, plen, n_new, task_id) -> DecodeState:
         """Insert a prefilled request into slot ``slot`` and sample its
-        first token from the prefill logits (counted toward the output)."""
+        first token from the prefill logits (counted toward the output).
+        Inside the sharded graph the replicated full-width prefill cache
+        is sliced to this shard's kv-head stripe before insertion
+        (serve_tp_slice no-ops on a single device)."""
         key, sub = jax.random.split(state.key)
         t0 = sampling_lib.sample(last_logits[None], sub, self.sampling)[0]
+        caches1 = jax.tree_util.tree_map(
+            lambda c: serve_tp_slice(c, 3), caches1)
         caches = transformer.insert_cache_slot(state.caches, caches1, slot)
         return state._replace(
             tok=jax.lax.dynamic_update_slice(state.tok, t0[None, None],

@@ -4,6 +4,11 @@ Every sampler is a pure jnp function of (logits, key) so it lives INSIDE the
 jitted ``lax.while_loop`` decode body (repro/serving/engine.py) — the loop
 never leaves the device to pick a token. The method/temperature/top_k knobs
 are static (baked into the trace); the PRNG key is loop-carried state.
+
+Under tensor-parallel serving (DESIGN.md §9) sampling runs REPLICATED:
+every shard holds the all-gathered (B, V) logits and the same loop-carried
+key, so each draws the identical token and the decode loop stays in
+lockstep across the mesh with no extra collective.
 """
 from __future__ import annotations
 

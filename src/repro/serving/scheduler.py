@@ -14,6 +14,13 @@ Policy is strict FIFO — the head request either fits or everybody waits
 (no starvation; documented tradeoff vs. best-fit packing). ``plan`` returns
 None under backpressure; the engine decodes on, finishing slots return
 blocks, and the head is retried.
+
+Under tensor-parallel serving (DESIGN.md §9) nothing here changes:
+admission runs host-side on shard-agnostic block ids (pools shard on the
+kv-head axis, never on blocks), so one deterministic decision is valid
+on every shard and the replicated block table stays the single source of
+truth — per-shard schedulers would have to agree on placement via
+collectives instead.
 """
 from __future__ import annotations
 
@@ -26,7 +33,12 @@ from repro.serving.stats import EngineStats
 
 @dataclasses.dataclass
 class AdmitPlan:
-    """Everything the engine needs to place one request into a slot."""
+    """Everything the engine needs to place one request into a slot:
+    ``blocks[i]`` is the physical block backing logical page ``i``
+    (refs already taken), ``n_cached`` the prompt tokens whose KV is
+    already in those blocks (the chunked prefill starts at ``done0 =
+    n_cached``), ``cow`` an optional ``(src, dst)`` device block copy to
+    run before decoding, ``total_pages == len(blocks)``."""
     blocks: List[int]            # physical block per logical page
     n_cached: int                # prompt tokens already in cache (done0)
     cow: Optional[Tuple[int, int]] = None   # (src, dst) device block copy
@@ -38,6 +50,9 @@ class Scheduler:
 
     def __init__(self, bm: BlockManager, prefix: Optional[PrefixCache],
                  stats: Optional[EngineStats] = None):
+        """bm: the block pool; prefix: optional prefix cache consulted /
+        populated at admit / release; stats: counter sink (the engine
+        swaps in its per-generate EngineStats)."""
         self.bm = bm
         self.prefix = prefix
         self.stats = stats if stats is not None else EngineStats()

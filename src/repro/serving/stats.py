@@ -4,6 +4,13 @@ The engine fills one ``EngineStats`` per ``generate`` call and keeps it on
 ``engine.last_stats``; ``benchmarks/bench_serving.py`` and
 ``examples/serve.py`` print it. Everything here is host-side counting —
 no device syncs beyond what the engine already does.
+
+Byte accounting is GLOBAL (all shards): ``block_bytes`` / ``kv_bytes_peak``
+describe the whole logical cache regardless of the serve mesh, so
+paged-vs-dense and int8-vs-fp comparisons read identically on a mesh of 1
+and on a TP mesh. ``shards`` records how many ways the kv-head axis is
+sharded (1 without a mesh); the ``*_per_shard`` properties divide the
+global figures down to what one device actually holds (DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -12,6 +19,8 @@ import dataclasses
 
 @dataclasses.dataclass
 class EngineStats:
+    """Counters for one ``Engine.generate`` call (all host-side ints /
+    floats; derived rates are properties so serialized dicts stay flat)."""
     cache_mode: str = "paged"
     requests: int = 0
     tokens_generated: int = 0
@@ -24,12 +33,15 @@ class EngineStats:
     # --- quantization (DESIGN.md §8) ---
     weights_dtype: str = "fp"    # "fp" | "int8" — frozen base matmul leaves
     kv_dtype: str = "fp"         # "fp" | "int8" — KV cache cells
-    # --- KV memory ---
+    # --- KV memory (GLOBAL, all-shard bytes — see module docstring) ---
     page_size: int = 0
     num_blocks: int = 0          # pool budget (paged) / dense equivalent
     kv_blocks_peak: int = 0      # max blocks simultaneously in use
-    block_bytes: int = 0         # device bytes per block (all layers, k+v
-    #                              + per-cell scales in int8 mode)
+    block_bytes: int = 0         # global device bytes per block (all
+    #                              layers, k+v, + per-cell scales in int8
+    #                              mode; every shard holds 1/shards of it)
+    shards: int = 1              # kv-head shards ("model" axis size; 1 =
+    #                              single device, DESIGN.md §9)
     # --- prefix cache ---
     prefix_lookups: int = 0      # admissions that consulted the cache
     prefix_hit_tokens: int = 0   # prompt tokens served from cached blocks
@@ -41,25 +53,49 @@ class EngineStats:
 
     @property
     def tokens_per_s(self) -> float:
+        """Generated tokens / wall seconds of the generate call (0.0
+        before any timed run)."""
         return self.tokens_generated / self.wall_s if self.wall_s else 0.0
 
     @property
     def prefix_hit_rate(self) -> float:
+        """Fraction of reuse-eligible prompt tokens served from cached
+        blocks (0.0 when nothing was eligible)."""
         if not self.prefix_lookup_tokens:
             return 0.0
         return self.prefix_hit_tokens / self.prefix_lookup_tokens
 
     @property
     def kv_bytes_peak(self) -> int:
+        """Peak GLOBAL (all-shard) KV bytes in use:
+        ``kv_blocks_peak * block_bytes``."""
         return self.kv_blocks_peak * self.block_bytes
 
+    @property
+    def block_bytes_per_shard(self) -> int:
+        """Device bytes one shard holds per block — the kv-head axis is
+        sharded ``shards`` ways, every other dim whole, so this is
+        exactly ``block_bytes / shards``."""
+        return self.block_bytes // max(self.shards, 1)
+
+    @property
+    def kv_bytes_peak_per_shard(self) -> int:
+        """Peak KV bytes resident on ONE device:
+        ``kv_blocks_peak * block_bytes_per_shard`` (== global peak on a
+        mesh of 1; ≈ global / |model| under TP)."""
+        return self.kv_blocks_peak * self.block_bytes_per_shard
+
     def summary(self) -> str:
+        """One-line human-readable digest (printed by examples/serve.py
+        and bench_serving)."""
         return (f"mode={self.cache_mode} w={self.weights_dtype} "
-                f"kv={self.kv_dtype} reqs={self.requests} "
+                f"kv={self.kv_dtype} shards={self.shards} "
+                f"reqs={self.requests} "
                 f"toks={self.tokens_generated} "
                 f"tok/s={self.tokens_per_s:.1f} "
                 f"kv_blocks_peak={self.kv_blocks_peak}/{self.num_blocks} "
                 f"kv_bytes_peak={self.kv_bytes_peak} "
+                f"(per_shard={self.kv_bytes_peak_per_shard}) "
                 f"prefix_hit_rate={self.prefix_hit_rate:.2f} "
                 f"cow={self.cow_copies} admits={self.admitted} "
                 f"evicts={self.evicted} waits={self.backpressure_waits} "

@@ -51,6 +51,112 @@ def get_seq_axis() -> str | None:
     return _seq_axis[0]
 
 
+# --------------------------------------------------------------------------
+# Serve-time tensor parallelism (DESIGN.md §9).
+#
+# The serving engine wraps its jitted step graphs in ``shard_map`` over a
+# ("data", "model") mesh. Inside that manual-mesh region the ambient-mesh
+# machinery above is inert (``current_mesh()`` is None, so ``maybe_shard``
+# no-ops) and the per-shard call sites — attention head slicing, the
+# vocab-striped readout — consult this TRACE-TIME context instead: it is
+# set by the engine around tracing a sharded step and cleared after, the
+# same pattern as the SEQ sentinel. ``None`` means "no serve TP" (the
+# default for training, dry-runs and the single-device engine).
+# --------------------------------------------------------------------------
+_serve_tp: list = [None]
+
+
+def set_serve_tp(axis: str | None, size: int = 0) -> None:
+    """Install (or clear, with ``axis=None``) the serve-TP trace context:
+    ``axis`` is the shard_map mesh axis name, ``size`` its length."""
+    _serve_tp[0] = (axis, size) if axis is not None else None
+
+
+def get_serve_tp() -> tuple | None:
+    """Current serve-TP context as ``(axis_name, size)``, or None when no
+    sharded serving step is being traced."""
+    return _serve_tp[0]
+
+
+def serve_tp_slice(x, axis: int):
+    """This shard's contiguous chunk of dim ``axis`` under serve TP.
+
+    x: any array whose dim ``axis`` divides the TP size (the engine
+    validates heads / kv-heads / padded vocab up front). Returns the
+    ``x.shape[axis] // tp``-wide slice owned by this shard — identity
+    when no serve-TP context is active, so call sites can be
+    unconditional. Slicing a dim that is NOT a contraction input is
+    bitwise-safe: every output element's reduction order is unchanged.
+    """
+    tp = get_serve_tp()
+    if tp is None:
+        return x
+    name, size = tp
+    assert x.shape[axis] % size == 0, \
+        f"dim {axis} of {x.shape} does not split {size} ways"
+    n = x.shape[axis] // size
+    return jax.lax.dynamic_slice_in_dim(
+        x, jax.lax.axis_index(name) * n, n, axis)
+
+
+def serve_tp_gather(x, axis: int):
+    """All-gather shard chunks back into the full dim ``axis`` (tiled),
+    inverse of ``serve_tp_slice``. Identity when no serve-TP context is
+    active."""
+    tp = get_serve_tp()
+    if tp is None:
+        return x
+    return jax.lax.all_gather(x, tp[0], axis=axis, tiled=True)
+
+
+def serve_mesh(shape, axes: tuple = ("data", "model")) -> Mesh:
+    """Serving mesh over the local devices: ``shape`` is (data, model) —
+    "model" is the tensor-parallel axis the engine shards kv-heads /
+    vocab on, "data" is reserved for replica DP (state is replicated
+    across it today). Raises with the XLA_FLAGS hint when the host does
+    not expose enough devices (CPU tests force fake devices via
+    ``--xla_force_host_platform_device_count=N``)."""
+    shape = tuple(int(s) for s in shape)
+    if len(shape) != len(axes):
+        raise ValueError(
+            f"serve mesh shape {shape} must have one entry per axis "
+            f"{axes}")
+    need = int(np.prod(shape))
+    have = jax.device_count()
+    if need > have:
+        raise ValueError(
+            f"serve mesh {dict(zip(axes, shape))} needs {need} devices "
+            f"but only {have} are visible (on CPU force fake devices "
+            f"with XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{need})")
+    return jax.make_mesh(shape, axes)
+
+
+def serve_cache_pspec(caches, axis: str = "model"):
+    """PartitionSpec pytree sharding serving KV caches on the KV-HEAD
+    axis — axis 3 of every leaf in both cache layouts:
+
+      paged pools   (nb, num_blocks, page, KV, hd)  k / v
+      scale pools   (nb, num_blocks, page, KV)      k_s / v_s (int8 KV)
+      dense caches  (nb, B, S, KV, hd)              k / v
+
+    Page/block/sequence dims stay whole, so one host-side block id
+    indexes every shard's pool identically (the BlockManager never needs
+    to know about the mesh)."""
+    def one(leaf):
+        spec = [None] * leaf.ndim
+        spec[3] = axis
+        return P(*spec)
+    return jax.tree_util.tree_map(one, caches)
+
+
+def serve_cache_sharding(caches, mesh: Mesh, axis: str = "model"):
+    """NamedSharding pytree for ``device_put``-placing serving KV caches
+    kv-head-sharded on ``axis`` (see serve_cache_pspec)."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), serve_cache_pspec(caches, axis))
+
+
 def _resolve(entry):
     if entry == SEQ:
         return _seq_axis[0]
