@@ -461,6 +461,121 @@ def _mesh_rows(rows, *, smoke: bool, mesh_shape=(1, 4)) -> None:
         raise AssertionError("per-shard KV bytes do not sum to global")
 
 
+def _decaying_tt(key, mode_sizes, rank, scale, decay):
+    """Random TT whose bond strength decays geometrically — the spectrum
+    shape DMRG rank adaptation produces on trained adapters (and the
+    regime where rank-truncated drafters track the target; a flat random
+    spectrum makes truncation a valid but useless approximation)."""
+    cores = ttlib.random_tt(key, mode_sizes, rank, scale=scale)
+    w = decay ** jnp.arange(rank)
+    out = []
+    for i, c in enumerate(cores):
+        if i == 0:
+            out.append(c * w[None, :])
+        else:
+            shape = [1] * c.ndim
+            shape[0] = c.shape[0]
+            out.append(c * w[: c.shape[0]].reshape(shape))
+    return out
+
+
+def _spec_rows(rows, *, smoke: bool) -> None:
+    """Speculative decode (rank-truncated + layer-strided TT self-drafter,
+    DESIGN.md §10) vs the plain paged engine on the shared-prefix
+    workload.
+
+    The random-weight smoke model is made REPRESENTATIVE of the regime
+    speculation targets: the adapter's TT cores get a geometrically
+    decaying bond spectrum (what DMRG rank adaptation yields on trained
+    adapters — so the rank-truncated drafter tracks the target) and the
+    base's block output projections are damped so each block is a small
+    residual perturbation (trained-network shape — so the layer-strided
+    drafter stays close). Asserted, all from engine.last_stats + outputs:
+    greedy token IDENTITY with speculation on (the accept rule only
+    commits verifier-argmax prefixes), acceptance_rate > 0.5, and
+    tokens/sec strictly above the non-speculative baseline (best-of-3
+    walls — the drafter runs half the layers, so k drafts + 1 verify
+    cost less than k+1 target passes)."""
+    import jax.tree_util as jtu
+    n_req, n_new, slots = (6, 16, 3) if smoke else (8, 24, 4)
+    cfg = registry.get_smoke_config("stablelm-1.6b")
+    run_cfg = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                        adapter_kind="metatt", adapter_variant="4+1d",
+                        num_tasks=2, adapter_rank=8)
+    spec = M.build_adapter_spec(run_cfg)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, spec, key)
+    params["adapter"] = {"cores": _decaying_tt(key, spec.cfg.mode_sizes,
+                                               8, 0.5, 0.35)}
+    blocks = jtu.tree_map_with_path(
+        lambda p, a: a * 0.05 if any(getattr(k, "key", None) in
+                                     ("wo", "wd") for k in p) else a,
+        params["base"]["blocks"])
+    base = dict(params["base"])
+    base["blocks"] = blocks
+    rt = AdapterRuntime.build("live", base, spec, params["adapter"],
+                              params["frozen"])
+    cache_len = 32 + n_new
+    sys_prompt = np.asarray(jax.random.randint(key, (18,), 0,
+                                               cfg.vocab_size))
+    keys = jax.random.split(key, n_req)
+    reqs = []
+    for i in range(n_req):
+        tail = np.asarray(jax.random.randint(keys[i], (2 + i % 4,), 0,
+                                             cfg.vocab_size))
+        prompt = (np.concatenate([sys_prompt, tail])
+                  if i % 2 == 0 else tail)
+        reqs.append(Request(prompt, n_new, task=i % 2))
+
+    from repro.config.base import SpecConfig
+    outs, walls, stats = {}, {}, {}
+    for label, sc in (("base", SpecConfig()),
+                      ("spec", SpecConfig(spec_k=3, draft_rank=4,
+                                          draft_layer_stride=2))):
+        eng = Engine(cfg, rt, serve=ServeConfig(
+            max_batch=slots, cache_len=cache_len, out_cap=n_new,
+            page_size=8, prefill_chunk=8, spec=sc))
+        eng.generate(reqs)                      # compile + warm the cache
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            outs[label] = eng.generate(reqs)
+            best = min(best, time.perf_counter() - t0)
+        walls[label] = best
+        st = eng.last_stats
+        stats[label] = st
+        rows.append(emit(
+            f"serving/engine_{label}_speculative"
+            if label == "spec" else "serving/engine_no_spec",
+            best / max(st.tokens_generated, 1) * 1e6,
+            f"tok_per_s={st.tokens_generated/best:.1f},"
+            f"spec_k={st.spec_k},accept={st.acceptance_rate:.3f},"
+            f"tok_per_step={st.tokens_per_step:.2f},"
+            f"decode_traces={st.decode_traces}"))
+        _record_stats(f"engine_{label}_spec_workload", st)
+        print(f"# engine stats [{label}]: {st.summary()}")
+    parity = all(a.tolist() == b.tolist() for a, b in
+                 zip(outs["base"], outs["spec"]))
+    accept = stats["spec"].acceptance_rate
+    speedup = walls["base"] / walls["spec"]
+    rows.append(emit(
+        "serving/spec_vs_base", 0.0,
+        f"identical_tokens={parity},accept={accept:.3f},"
+        f"speedup={speedup:.2f}x,spec_k=3,draft_rank=4,"
+        f"draft_layer_stride=2,"
+        f"tok_per_step={stats['spec'].tokens_per_step:.2f}"))
+    if not parity:
+        raise AssertionError(
+            "speculative greedy decode diverged from the baseline engine")
+    if not accept > 0.5:
+        raise AssertionError(
+            f"drafter acceptance {accept:.3f} <= 0.5 on the decaying-"
+            "spectrum workload")
+    if not speedup > 1.0:
+        raise AssertionError(
+            f"speculative engine not faster: {speedup:.2f}x <= 1.0")
+
+
 def _merge_rows_into_json(rows) -> None:
     """Merge freshly produced CSV rows (+ ENGINE_STATS) into
     BENCH_serving.json in place — rows with the same name are replaced,
@@ -498,6 +613,16 @@ def run_mesh(*, smoke: bool = False) -> list:
     return rows
 
 
+def run_spec(*, smoke: bool = False) -> list:
+    """The ``--spec`` entry point: only the speculative-vs-baseline rows,
+    merged into BENCH_serving.json (the scripts/ci.sh spec-parity job)."""
+    ENGINE_STATS.clear()
+    rows = []
+    _spec_rows(rows, smoke=smoke)
+    _merge_rows_into_json(rows)
+    return rows
+
+
 def run(*, smoke: bool = False) -> list:
     ENGINE_STATS.clear()
     rows = []
@@ -506,6 +631,7 @@ def run(*, smoke: bool = False) -> list:
     _fused_engine_rows(rows, smoke=smoke)
     _paged_rows(rows, smoke=smoke)
     _quant_rows(rows, smoke=smoke)
+    _spec_rows(rows, smoke=smoke)
     return rows
 
 
@@ -517,9 +643,16 @@ if __name__ == "__main__":
                     help="tensor-parallel vs single-device rows only "
                          "(needs 4 devices; merges serving/tp4_vs_tp1 "
                          "into BENCH_serving.json; honors --smoke)")
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative-vs-baseline rows only (merges "
+                         "serving/spec_vs_base into BENCH_serving.json; "
+                         "honors --smoke)")
     args = ap.parse_args()
     if args.mesh:
         print("name,us_per_call,derived")
         run_mesh(smoke=args.smoke)
+    elif args.spec:
+        print("name,us_per_call,derived")
+        run_spec(smoke=args.smoke)
     else:
         run(smoke=args.smoke)

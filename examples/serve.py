@@ -17,6 +17,13 @@ per device — token-identical output, per-shard KV bytes = global / N.
 Needs N devices (on CPU:
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
 
+``--spec-k K`` turns on speculative decode (DESIGN.md §10): a
+rank-truncated slice of the SAME shared TT (``--draft-rank r``, 0 = full
+rank; ``--draft-layer-stride s`` keeps every s-th block) drafts K tokens
+per engine step and one verifier pass accepts a prefix — greedy output
+stays token-identical to the non-speculative run, which the example
+checks.
+
     PYTHONPATH=src python examples/serve.py [--tokens 16] [--requests 8]
 """
 import argparse
@@ -28,13 +35,15 @@ from repro import configs as registry
 from repro.config.base import RunConfig, SHAPES, ServeConfig
 from repro.core import tt as ttlib
 from repro.models import model as M
-from repro.serving import AdapterRuntime, Engine, Request
+from repro.serving import AdapterRuntime, Engine, Request, SpecConfig
 
 
-def serve(cfg, runtime, reqs, *, max_batch, cache_len, out_cap, tp=0):
+def serve(cfg, runtime, reqs, *, max_batch, cache_len, out_cap, tp=0,
+          spec=None):
     sv = ServeConfig(max_batch=max_batch, cache_len=cache_len,
                      out_cap=out_cap,
-                     mesh_shape=(1, tp) if tp else ())
+                     mesh_shape=(1, tp) if tp else (),
+                     spec=spec or SpecConfig())
     eng = Engine(cfg, runtime, serve=sv)
     eng.generate(reqs)   # warm-up: compile once + populate the prefix cache
     t0 = time.perf_counter()
@@ -56,6 +65,14 @@ def main():
     ap.add_argument("--tp", type=int, default=0,
                     help="tensor-parallel shards on the 'model' mesh "
                          "axis (0 = single device)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="draft tokens per engine step (0 = speculative "
+                         "decode off)")
+    ap.add_argument("--draft-rank", type=int, default=0,
+                    help="drafter TT bond rank — leading slice of the "
+                         "shared cores (0 = full rank)")
+    ap.add_argument("--draft-layer-stride", type=int, default=1,
+                    help="drafter keeps every s-th transformer block")
     args = ap.parse_args()
 
     cfg = registry.get_smoke_config("stablelm-1.6b")
@@ -82,6 +99,15 @@ def main():
     rt_live = AdapterRuntime.build("live", base, spec, adapter, frozen)
     live, t_live, toks = serve(cfg, rt_live, reqs, **kw)
 
+    spec_cfg = None
+    if args.spec_k:
+        spec_cfg = SpecConfig(spec_k=args.spec_k,
+                              draft_rank=args.draft_rank,
+                              draft_layer_stride=args.draft_layer_stride)
+        speced, t_spec, _ = serve(cfg, rt_live, reqs, spec=spec_cfg, **kw)
+        same_spec = all(a.tolist() == b.tolist()
+                        for a, b in zip(live, speced))
+
     rt_lora = AdapterRuntime.build("lora", base, spec, adapter, frozen)
     lora, t_lora, _ = serve(cfg, rt_lora, reqs, **kw)
 
@@ -100,6 +126,10 @@ def main():
           f"{args.batch} slots, {args.tasks} tasks mixed per batch")
     print(f"live TT runtime   : {t_live:.2f}s  {toks/t_live:7.1f} tok/s "
           "(steady state)")
+    if spec_cfg is not None:
+        print(f"live + spec k={args.spec_k:<2}: {t_spec:.2f}s  "
+              f"{toks/t_spec:7.1f} tok/s "
+              f"(identical output: {same_spec})")
     print(f"lora-form runtime : {t_lora:.2f}s  {toks/t_lora:7.1f} tok/s "
           f"(identical output: {same_lora})")
     print(f"merged (task 0)   : {t_merged:.2f}s "

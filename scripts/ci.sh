@@ -35,6 +35,15 @@ python -m pytest -x -q tests/test_quant.py
 XLA_FLAGS=--xla_force_host_platform_device_count=4 \
     python -m pytest -x -q tests/test_sharded_engine.py
 
+# spec-parity job: speculative decode (rank-truncated TT self-drafter,
+# DESIGN.md §10) must be greedy-token-identical to the non-speculative
+# engine across cache modes / runtimes / kv dtypes / the TP mesh, keep a
+# single decode trace, preserve the rejection-sampling distribution, and
+# leak no KV blocks; forced 4-device CPU mesh runs the tp4 cases too
+# (sampling property tests ride along — they skip without hypothesis)
+XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    python -m pytest -x -q tests/test_speculative.py tests/test_property.py
+
 # benchmark smoke: kernel-dispatch + serving benches (assert fused-vs-unfused
 # AND paged-vs-dense token parity, nonzero prefix hit rate, paged KV peak
 # below the dense reservation, int8 peak KV bytes below fp at equal blocks,

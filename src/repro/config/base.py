@@ -245,6 +245,55 @@ class KernelConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative multi-token decode (serving/speculative.py,
+    DESIGN.md §10). The drafter is a RANK-TRUNCATED slice of the shared
+    TT cores — TT bond ranks nest, so keeping the leading ``draft_rank``
+    bond columns of G1 / C / G4 (or of the pre-folded lora-form A) yields
+    a cheaper adapter that shares the frozen base, the KV layout and the
+    task routing with the target model. Per engine step the drafter
+    proposes ``spec_k`` tokens against a parallel draft KV region; the
+    target model scores all k+1 positions in ONE co-batched pass (the
+    chunked-prefill (B, C) path) and an in-graph accept rule commits the
+    longest valid prefix — exact argmax match under greedy sampling,
+    rejection sampling under temperature (output distribution provably
+    unchanged). Rejected positions need no KV rollback: later steps
+    overwrite their cells before any attention mask reaches them.
+
+    spec_k: draft tokens proposed per engine step; 0 disables
+        speculation (the default — the engine is then bit-identical in
+        structure to the non-speculative one).
+    draft_rank: TT bond rank of the drafter; 0 keeps the full rank
+        (drafter == target adapter — useful to isolate the harness).
+        Applies to metatt (live and lora-form) and plain lora runtimes;
+        other adapter kinds fall back to the full-rank factors.
+    draft_layer_stride: the drafter keeps every stride-th super-block of
+        the frozen base (1 = all layers). The draft KV region shrinks by
+        the same factor.
+    """
+    spec_k: int = 0
+    draft_rank: int = 0
+    draft_layer_stride: int = 1
+
+    @property
+    def enabled(self) -> bool:
+        return self.spec_k > 0
+
+    def validate(self) -> "SpecConfig":
+        if self.spec_k < 0:
+            raise ValueError(f"SpecConfig.spec_k={self.spec_k} must be >= 0")
+        if self.draft_rank < 0:
+            raise ValueError(
+                f"SpecConfig.draft_rank={self.draft_rank} must be >= 0 "
+                "(0 = full rank)")
+        if self.draft_layer_stride < 1:
+            raise ValueError(
+                f"SpecConfig.draft_layer_stride={self.draft_layer_stride} "
+                "must be >= 1")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
 class ServeConfig:
     """Serving-engine knobs (repro/serving/engine.py).
 
@@ -289,6 +338,10 @@ class ServeConfig:
         by the "model" axis size.
     tp_axis: mesh axis name the KV/head/vocab sharding applies to
         (default "model"; must be one of the serve-mesh axes).
+    spec: SpecConfig — speculative multi-token decode with the
+        rank-truncated TT self-drafter (spec.spec_k > 0 enables it;
+        DESIGN.md §10). Works in both cache modes, composes with
+        quantization and the serve mesh.
     """
     max_batch: int = 4
     cache_len: int = 64
@@ -302,6 +355,7 @@ class ServeConfig:
     quant: QuantConfig = QuantConfig()
     mesh_shape: tuple = ()         # () | (data, model)
     tp_axis: str = "model"
+    spec: SpecConfig = SpecConfig()
 
     @property
     def pages_per_request(self) -> int:
@@ -317,6 +371,12 @@ class ServeConfig:
             raise ValueError(f"unknown cache_mode {self.cache_mode!r}; "
                              "want paged | dense")
         self.quant.validate()
+        self.spec.validate()
+        if self.spec.enabled and self.spec.spec_k + 1 > self.cache_len:
+            raise ValueError(
+                f"SpecConfig.spec_k={self.spec.spec_k}: the verifier "
+                f"scores spec_k+1 positions per step, which must fit in "
+                f"cache_len={self.cache_len}")
         if self.quant.kv == "int8" and self.cache_mode != "paged":
             raise ValueError(
                 "kv=int8 quantization is implemented for the paged cache "

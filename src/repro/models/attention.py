@@ -152,11 +152,15 @@ def attention(x: jnp.ndarray, w: dict, ctx: AdapterCtx, cfg: ModelConfig, *,
                              positions, n_h, hd)
 
     if cache is not None and kv_x is None:
-        # ---- self-attention decode: one new token into a full-length cache.
+        # ---- self-attention decode: new tokens into a full-length cache.
         # cache_pos is a scalar (whole batch at one position) or a (B,)
         # vector of per-row positions (the serving engine's decode slots —
         # each slot advances independently under continuous batching).
-        assert t == 1, "decode path expects a single query token"
+        # t > 1 is the speculative verifier's co-batched pass: token j of
+        # row b lands at cache_pos[b]+j, and each query column attends
+        # [0, cache_pos+j] through EXACTLY the t == 1 code — per-column
+        # bit-identity with t sequential single-token steps (the q/k/v/o
+        # projections and FFN still batch all t columns in one GEMM).
         # serve-TP (DESIGN.md §9): inside the engine's shard_map region
         # the cache arrives kv-head-sharded — slice this shard's
         # contiguous head group (q heads stay kv-aligned: H/tp = G·KV/tp)
@@ -166,32 +170,41 @@ def attention(x: jnp.ndarray, w: dict, ctx: AdapterCtx, cfg: ModelConfig, *,
         v = serve_tp_slice(v, 2)
         kv_l = k.shape[2]
         h_l = kv_l * g
-        if jnp.ndim(cache_pos) == 0:
+        if jnp.ndim(cache_pos) == 0 and t == 1:
             ck = jax.lax.dynamic_update_slice(
                 cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
             cv = jax.lax.dynamic_update_slice(
                 cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
         else:
             rows = jnp.arange(b)
-            ck = cache["k"].at[rows, cache_pos].set(
-                k[:, 0].astype(cache["k"].dtype))
-            cv = cache["v"].at[rows, cache_pos].set(
-                v[:, 0].astype(cache["v"].dtype))
+            cp0 = jnp.broadcast_to(jnp.asarray(cache_pos), (b,))
+            ck, cv = cache["k"], cache["v"]
+            for j in range(t):
+                # mode="drop": columns past the cache end (a draft chunk
+                # overhanging cache_len) discard instead of clamping
+                ck = ck.at[rows, cp0 + j].set(
+                    k[:, j].astype(ck.dtype), mode="drop")
+                cv = cv.at[rows, cp0 + j].set(
+                    v[:, j].astype(cv.dtype), mode="drop")
         ck = maybe_shard(ck, BATCH, "model", None, None)
         cv = maybe_shard(cv, BATCH, "model", None, None)
         s_len = ck.shape[1]
         cp = jnp.broadcast_to(jnp.asarray(cache_pos), (b,))
-        if _flash_ok(ctx):
-            # decode-shaped Pallas kernel: per-slot position masking and
-            # the GQA broadcast happen inside the dispatch seam
-            out = dispatch.decode_attention(q, ck, cv, cp,
-                                            policy=ctx.policy)
-        else:
-            qh = q.reshape(b, 1, kv_l, g, hd)
-            mask = (jnp.arange(s_len)[None, :] <= cp[:, None]
-                    )[:, None, None, None, :]
-            out = _softmax_attend(qh, ck, cv, mask, scale)
-        out = serve_tp_gather(out.reshape(b, 1, h_l, hd), 2)
+        cols = []
+        for j in range(t):
+            if _flash_ok(ctx):
+                # decode-shaped Pallas kernel: per-slot position masking
+                # and the GQA broadcast happen inside the dispatch seam
+                cols.append(dispatch.decode_attention(
+                    q[:, j:j + 1], ck, cv, cp + j, policy=ctx.policy))
+            else:
+                qh = q[:, j:j + 1].reshape(b, 1, kv_l, g, hd)
+                mask = (jnp.arange(s_len)[None, :] <= (cp + j)[:, None]
+                        )[:, None, None, None, :]
+                cols.append(_softmax_attend(qh, ck, cv, mask, scale))
+        out = cols[0] if t == 1 else jnp.concatenate(
+            [c.reshape(b, 1, kv_l, g, hd) for c in cols], axis=1)
+        out = serve_tp_gather(out.reshape(b, t, h_l, hd), 2)
         new_cache = {"k": ck, "v": cv}
     else:
         # ---- train / prefill / cross

@@ -364,9 +364,13 @@ def forward(base, cfg: ModelConfig, spec, broadcast, per_layer, tokens=None,
                         enc_out=enc_out)
 
 
-def init_caches(cfg: ModelConfig, batch: int, length: int, dtype) -> list:
-    """Stacked (over nb) cache pytree, one entry per pattern position."""
-    nb = cfg.num_super_blocks
+def init_caches(cfg: ModelConfig, batch: int, length: int, dtype, *,
+                num_super_blocks: Optional[int] = None) -> list:
+    """Stacked (over nb) cache pytree, one entry per pattern position.
+    ``num_super_blocks`` overrides cfg's — the speculative drafter's
+    layer-strided sub-model keeps its own (smaller) cache region."""
+    nb = (cfg.num_super_blocks if num_super_blocks is None
+          else num_super_blocks)
 
     def stack(tree):
         return jax.tree_util.tree_map(
@@ -392,14 +396,18 @@ def init_caches(cfg: ModelConfig, batch: int, length: int, dtype) -> list:
 
 
 def init_paged_caches(cfg: ModelConfig, num_blocks: int, page_size: int,
-                      dtype, kv_quant: bool = False) -> list:
+                      dtype, kv_quant: bool = False, *,
+                      num_super_blocks: Optional[int] = None) -> list:
     """Paged cache pytree: one flat (nb, num_blocks, page, KV, hd) block
     pool per pattern position. Attention-only — the paged engine rejects
     stateful mixers up front (their caches are not position-indexed).
     ``kv_quant`` makes the pools int8 with per-cell scale pools riding in
     the same block layout (``copy_cache_block`` and the host-side block
-    bookkeeping treat them like any other leaf)."""
-    nb = cfg.num_super_blocks
+    bookkeeping treat them like any other leaf). ``num_super_blocks``
+    overrides cfg's for the drafter's layer-strided cache region; both
+    regions are indexed by the SAME host-side block tables."""
+    nb = (cfg.num_super_blocks if num_super_blocks is None
+          else num_super_blocks)
 
     def stack(tree):
         return jax.tree_util.tree_map(
@@ -427,8 +435,10 @@ def copy_cache_block(caches, src, dst):
 
 
 def _serve_logits(h, embed):
-    """Tied-embedding readout for the serving step graphs. h: (B, d);
-    embed: (V, d), replicated. Returns (B, V) logits.
+    """Tied-embedding readout for the serving step graphs. h: (..., d);
+    embed: (V, d), replicated. Returns (..., V) logits — (B, V) for the
+    single-token decode step, (B, C, V) when the speculative verifier
+    scores every column of a co-batched chunk in one pass.
 
     Under serve-time tensor parallelism (sharding.get_serve_tp — the
     engine's shard_map region, DESIGN.md §9) each shard computes its
@@ -440,11 +450,13 @@ def _serve_logits(h, embed):
     if get_serve_tp() is None:
         return lm_logits(h, embed)
     local = serve_tp_slice(embed, 0)
-    return serve_tp_gather(h @ local.T.astype(h.dtype), 1)
+    out = h @ local.T.astype(h.dtype)
+    return serve_tp_gather(out, out.ndim - 1)
 
 
 def paged_step(base, cfg: ModelConfig, spec, broadcast, per_layer, toks,
-               caches, block_tables, pos, sel, *, task=None, policy=None):
+               caches, block_tables, pos, sel, *, task=None, policy=None,
+               all_logits=False):
     """One co-batched decode / chunked-prefill step over a paged cache.
 
     toks: (B, C) — slot b's tokens at absolute positions pos[b]..pos[b]+C-1
@@ -453,7 +465,10 @@ def paged_step(base, cfg: ModelConfig, spec, broadcast, per_layer, toks,
     writes are overwritten by the step that owns those positions);
     block_tables: (B, P) int32; pos: (B,); sel: (B,) column whose logits
     to return (the slot's last real token). Returns (logits (B, V),
-    new caches).
+    new caches). ``all_logits`` returns (B, C, V) instead — the
+    speculative verifier scores every column (sel is ignored): column c
+    attends [0, pos[b]+c], so its logits depend only on tokens <= c
+    regardless of what trails in later columns.
     """
     h = embed_tokens(toks, base["embed"]["tok"], cfg.compute_dtype)
     h = maybe_shard(h, BATCH, None, None)
@@ -464,6 +479,8 @@ def paged_step(base, cfg: ModelConfig, spec, broadcast, per_layer, toks,
         cache_pos=pos, task=task, policy=policy, block_tables=block_tables)
     h = norm(h, jax.tree_util.tree_map(lambda a: a[0], base["final_norm"]),
              cfg.norm_eps)
+    if all_logits:
+        return _serve_logits(h, base["embed"]["tok"]), new_caches
     h_sel = h[jnp.arange(h.shape[0]), sel]                  # (B, d)
     logits = _serve_logits(h_sel, base["embed"]["tok"])
     return logits, new_caches
@@ -480,18 +497,25 @@ def insert_cache_slot(caches, req_caches, slot):
 
 
 def decode_step(base, cfg: ModelConfig, spec, broadcast, per_layer, token,
-                caches, cache_pos, *, enc_out=None, task=None, policy=None):
-    """One decode step: token (B, 1) -> (logits (B, V), new caches).
+                caches, cache_pos, *, enc_out=None, task=None, policy=None,
+                all_logits=False):
+    """One decode step: token (B, T) -> (logits (B, V), new caches).
 
     cache_pos: scalar, or a (B,) vector of per-row positions (continuous-
-    batching slots — see repro/serving/engine.py). ``policy`` routes the
-    adapted matmuls / attention through the fused Pallas kernels."""
+    batching slots — see repro/serving/engine.py); token column j lands at
+    cache_pos + j (T == 1 everywhere except the speculative verifier's
+    multi-token pass — attention handles T > 1 per column, bit-identical
+    to T sequential single-token steps). ``all_logits`` returns (B, T, V)
+    — one distribution per column — instead of the last column's (B, V).
+    ``policy`` routes the adapted matmuls / attention through the fused
+    Pallas kernels."""
     h = embed_tokens(token, base["embed"]["tok"], cfg.compute_dtype)
     h = maybe_shard(h, BATCH, None, None)
+    t = token.shape[1]
     if jnp.ndim(cache_pos) == 0:
-        positions = cache_pos[None]
+        positions = cache_pos[None] + jnp.arange(t)[None, :]
     elif jnp.ndim(cache_pos) == 1:
-        positions = cache_pos[:, None]      # (B, 1): per-slot RoPE phase
+        positions = cache_pos[:, None] + jnp.arange(t)[None, :]
     else:
         positions = cache_pos
     layer_offset = cfg.encoder_layers if cfg.is_encdec else 0
@@ -502,5 +526,7 @@ def decode_step(base, cfg: ModelConfig, spec, broadcast, per_layer, token,
         task=task, policy=policy)
     h = norm(h, jax.tree_util.tree_map(lambda a: a[0], base["final_norm"]),
              cfg.norm_eps)
+    if all_logits:
+        return _serve_logits(h, base["embed"]["tok"]), new_caches
     logits = _serve_logits(h[:, 0], base["embed"]["tok"])
     return logits, new_caches

@@ -8,13 +8,16 @@ ServeConfig.mesh_shape — DESIGN.md §9).
                     dense layout behind ServeConfig(cache_mode="dense");
                     shard_map-sharded step graphs when mesh_shape is set
   AdapterRuntime  — live TT | to_lora_form | fold_into_dense | none
-  SamplingConfig  — greedy / temperature / top-k, applied in-graph
+  SamplingConfig  — greedy / temperature / top-k / top-p (+ repetition
+                    penalty), applied in-graph
+  SpecConfig      — speculative decode with a rank-truncated TT
+                    self-drafter (DESIGN.md §10)
   BlockManager    — host-side KV block pool: free list, refcounts, COW
   PrefixCache     — hash-chained prompt-prefix -> KV-block index
   Scheduler       — FIFO admission gated on free blocks, not free slots
   EngineStats     — per-generate observability (engine.last_stats)
 """
-from repro.config.base import ServeConfig  # noqa: F401  (re-export)
+from repro.config.base import ServeConfig, SpecConfig  # noqa: F401
 from repro.serving.adapter_runtime import AdapterRuntime  # noqa: F401
 from repro.serving.block_manager import (BlockManager,  # noqa: F401
                                          PrefixCache)

@@ -84,6 +84,7 @@ from repro.kernels import quant as quant_lib
 from repro.models import transformer
 from repro.peft import api as peft_api
 from repro.serving import sampling as sampling_lib
+from repro.serving import speculative as spec_lib
 from repro.serving.adapter_runtime import AdapterRuntime
 from repro.serving.block_manager import BlockManager, PrefixCache
 from repro.serving.scheduler import Scheduler
@@ -101,10 +102,14 @@ class Request:
     task: int = 0
 
 
-def _pad_caches(caches, cfg: ModelConfig, batch: int, cache_len: int):
-    """Place length-T prefill caches into a fixed cache_len-wide template."""
+def _pad_caches(caches, cfg: ModelConfig, batch: int, cache_len: int,
+                num_super_blocks: Optional[int] = None):
+    """Place length-T prefill caches into a fixed cache_len-wide template.
+    ``num_super_blocks`` sizes the template for the speculative drafter's
+    layer-strided sub-model."""
     template = transformer.init_caches(cfg, batch, cache_len,
-                                       cfg.compute_dtype)
+                                       cfg.compute_dtype,
+                                       num_super_blocks=num_super_blocks)
     if caches is None:
         return template
 
@@ -117,7 +122,10 @@ def _pad_caches(caches, cfg: ModelConfig, batch: int, cache_len: int):
 
 
 class DecodeState(NamedTuple):
-    """Dense-mode loop-carried per-slot device state."""
+    """Dense-mode loop-carried per-slot device state. ``dcaches`` is the
+    speculative drafter's parallel KV region (None when speculation is
+    off); steps/drafted/accepted are loop-carried int32 scalar counters
+    the host reads off the final state (stats.py)."""
     tok: jnp.ndarray        # (B, 1)  last sampled token per slot
     pos: jnp.ndarray        # (B,)    cache position tok will be written at
     remaining: jnp.ndarray  # (B,)    tokens still to sample
@@ -127,6 +135,10 @@ class DecodeState(NamedTuple):
     task: jnp.ndarray       # (B,)    per-slot task id (4+1d routing)
     key: jnp.ndarray        # PRNG key (in-graph sampling)
     caches: Any             # transformer KV caches, batch axis = slots
+    dcaches: Any = None     # drafter KV caches (speculative decode)
+    steps: Any = 0          # loop iterations (engine steps)
+    drafted: Any = 0        # drafter tokens proposed
+    accepted: Any = 0       # drafter tokens accepted by the verifier
 
 
 class PagedState(NamedTuple):
@@ -147,6 +159,10 @@ class PagedState(NamedTuple):
     task: jnp.ndarray       # (B,)    per-slot task id (4+1d routing)
     key: jnp.ndarray        # PRNG key (in-graph sampling)
     caches: Any             # paged KV pools (leaves (nb, N, page, KV, hd))
+    dcaches: Any = None     # drafter KV pools, same block tables
+    steps: Any = 0          # loop iterations (engine steps)
+    drafted: Any = 0        # drafter tokens proposed
+    accepted: Any = 0       # drafter tokens accepted by the verifier
 
 
 class Engine:
@@ -264,6 +280,23 @@ class Engine:
                 base, group_size=self.quant.group_size)
         self._key = jax.random.PRNGKey(seed)
         self._weights = (base, runtime.broadcast, runtime.per_layer)
+        # speculative decode (DESIGN.md §10): the drafter is a
+        # rank-truncated / layer-strided slice of the SAME weight bundle
+        # (sliced here once, on the possibly int8-packed base), proposing
+        # spec_k tokens per engine step that the target verifies in one
+        # co-batched pass inside the decode while_loop.
+        self.spec = self.sv.spec
+        self._spec_on = self.spec.enabled
+        self._draft_weights = ()
+        self._nb_draft = self.cfg.num_super_blocks
+        if self._spec_on:
+            dbase, dbc, dpl, self._nb_draft = spec_lib.build_drafter(
+                self.spec, self.rt.spec.kind, base, runtime.broadcast,
+                runtime.per_layer, len(self.cfg.block_pattern))
+            self._draft_weights = (dbase, dbc, dpl)
+        # the step graphs take target weights (+ drafter weights when
+        # speculating) as leading args so none bake in as constants
+        self._step_weights = self._weights + self._draft_weights
         self._decode_traces = 0
         self._prefill_traces = 0
         self.last_stats = self._new_stats()
@@ -306,28 +339,48 @@ class Engine:
         """Jit (and, on a mesh, shard_map) the dense-mode step graphs.
         Sharded layout: decode caches (nb, B, S, KV, hd) shard the
         kv-head axis on "model"; prefill stays a plain replicated jit
-        (it computes full-width caches that admit slices per shard)."""
+        (it computes full-width caches that admit slices per shard).
+        With speculation the drafter weights ride as three extra leading
+        args and the drafter's KV region as a state field, so the decode
+        graph's donate index shifts from 3 to 6."""
+        don = 6 if self._spec_on else 3
         if self.mesh is None:
             self._admit = jax.jit(self._admit_impl, donate_argnums=(0,))
-            self._decode = jax.jit(self._decode_impl, donate_argnums=(3,))
+            self._decode = jax.jit(self._decode_impl, donate_argnums=(don,))
             return
         template = transformer.init_caches(
             self.cfg, self.max_batch, self.cache_len, self.cfg.compute_dtype)
+        dspec = P()
+        d1spec = P()
+        if self._spec_on:
+            dtemplate = transformer.init_caches(
+                self.cfg, self.max_batch, self.cache_len,
+                self.cfg.compute_dtype, num_super_blocks=self._nb_draft)
+            dspec = serve_cache_pspec(dtemplate, self.sv.tp_axis)
+            d1spec = self._rep_spec(dtemplate)
         sspec = DecodeState(
             tok=P(), pos=P(), remaining=P(), active=P(), widx=P(),
             out=P(), task=P(), key=P(),
-            caches=serve_cache_pspec(template, self.sv.tp_axis))
-        wspec = tuple(self._rep_spec(w) for w in self._weights)
+            caches=serve_cache_pspec(template, self.sv.tp_axis),
+            dcaches=dspec, steps=P(), drafted=P(), accepted=P())
+        wspec = tuple(self._rep_spec(w) for w in self._step_weights)
         self._admit = jax.jit(self._shard_mapped(
             self._admit_impl,
-            (sspec, P(), self._rep_spec(template), P(), P(), P(), P()),
-            sspec), donate_argnums=(0,))
+            (sspec, P(), self._rep_spec(template), d1spec, P(), P(), P(),
+             P()), sspec), donate_argnums=(0,))
         self._decode = jax.jit(self._shard_mapped(
-            self._decode_impl, (*wspec, sspec), sspec), donate_argnums=(3,))
+            self._decode_impl, (*wspec, sspec), sspec),
+            donate_argnums=(don,))
 
     def _init_paged(self) -> None:
         sv = self.sv
         self._chunk = min(sv.prefill_chunk, sv.cache_len)
+        if self._spec_on:
+            # the verifier scores [committed tok, k drafts] in one pass
+            # through the SAME (B, C) co-batched graph chunked prefill
+            # uses, so the chunk must fit k+1 columns (validated
+            # spec_k + 1 <= cache_len in config.base)
+            self._chunk = max(self._chunk, self.spec.spec_k + 1)
         self._page = sv.page_size
         self._num_blocks = sv.resolved_num_blocks
         # table width: worst-case pages per request, plus sentinel columns
@@ -348,16 +401,27 @@ class Engine:
         self._tables = np.full((self.max_batch, self._p_tab),
                                self._num_blocks, np.int32)
         self._block_bytes = self._kv_bytes(self._page)
+        if self._spec_on:
+            # the drafter's parallel KV region: same block geometry, same
+            # host-side tables, 1/stride the layers — its bytes ride the
+            # same per-block accounting
+            self._block_bytes += self._kv_bytes(
+                self._page, num_super_blocks=self._nb_draft)
         # the physical block pools persist ACROSS generate calls — the
         # prefix cache indexes into them, so warm requests reuse KV
-        # computed by earlier calls
+        # computed by earlier calls (the drafter pools too: prompt cells
+        # carry drafter KV written by the in-loop sync pass, so prefix
+        # hits warm BOTH models)
         self._paged_caches = self._fresh_pools()
+        self._draft_pools = (self._fresh_pools(
+            num_super_blocks=self._nb_draft) if self._spec_on else None)
+        don = 6 if self._spec_on else 3
         if self.mesh is None:
             self._padmit = jax.jit(self._paged_admit_impl,
                                    donate_argnums=(0,))
             self._pcow = jax.jit(self._cow_impl, donate_argnums=(0,))
             self._pdecode = jax.jit(self._paged_decode_impl,
-                                    donate_argnums=(3,))
+                                    donate_argnums=(don,))
             return
         # sharded step graphs (DESIGN.md §9): pools shard on the kv-head
         # axis; every other state leaf — slot scalars, prompt rows, the
@@ -366,8 +430,11 @@ class Engine:
         sspec = PagedState(
             tok=P(), prompt=P(), plen=P(), done=P(), remaining=P(),
             active=P(), widx=P(), out=P(), task=P(), key=P(),
-            caches=serve_cache_pspec(self._paged_caches, self.sv.tp_axis))
-        wspec = tuple(self._rep_spec(w) for w in self._weights)
+            caches=serve_cache_pspec(self._paged_caches, self.sv.tp_axis),
+            dcaches=(serve_cache_pspec(self._draft_pools, self.sv.tp_axis)
+                     if self._spec_on else P()),
+            steps=P(), drafted=P(), accepted=P())
+        wspec = tuple(self._rep_spec(w) for w in self._step_weights)
         self._padmit = jax.jit(self._shard_mapped(
             self._paged_admit_impl,
             (sspec, P(), P(), P(), P(), P(), P()), sspec),
@@ -376,16 +443,17 @@ class Engine:
             self._cow_impl, (sspec, P(), P()), sspec), donate_argnums=(0,))
         self._pdecode = jax.jit(self._shard_mapped(
             self._paged_decode_impl, (*wspec, sspec, P()), sspec),
-            donate_argnums=(3,))
+            donate_argnums=(don,))
 
-    def _fresh_pools(self):
+    def _fresh_pools(self, num_super_blocks: Optional[int] = None):
         """Zero paged K/V (+ int8 scale) pools, kv-head-sharded over the
         serve mesh when one is configured (the host-side BlockManager is
         shard-agnostic: one block id addresses row ``bid`` of every
-        shard's pool)."""
+        shard's pool). ``num_super_blocks`` sizes the speculative
+        drafter's parallel pool region."""
         caches = transformer.init_paged_caches(
             self.cfg, self._num_blocks, self._page, self.cfg.compute_dtype,
-            kv_quant=self._kv_quant)
+            kv_quant=self._kv_quant, num_super_blocks=num_super_blocks)
         if self.mesh is not None:
             caches = jax.device_put(caches, serve_cache_sharding(
                 caches, self.mesh, self.sv.tp_axis))
@@ -401,7 +469,8 @@ class Engine:
             kv_dtype="int8" if self._kv_quant else "fp",
             shards=self._tp)
 
-    def _kv_bytes(self, tokens: int) -> int:
+    def _kv_bytes(self, tokens: int,
+                  num_super_blocks: Optional[int] = None) -> int:
         """GLOBAL (all-shard) device bytes of k+v cache for ``tokens``
         cells across every layer — the one formula behind both the paged
         block size and the dense-reservation equivalent the benchmarks
@@ -410,8 +479,11 @@ class Engine:
         int8 KV mode a cell costs kv_dim int8 bytes plus one f32 scale
         per kv head (k and v each) — roughly half the bf16 cost and a
         quarter of f32, so the same num_blocks budget holds ~2x (bf16) to
-        ~4x (f32) the tokens."""
-        layers = self.cfg.num_super_blocks * len(self.cfg.block_pattern)
+        ~4x (f32) the tokens. ``num_super_blocks`` overrides the layer
+        count for the drafter's strided region."""
+        nb = (self.cfg.num_super_blocks if num_super_blocks is None
+              else num_super_blocks)
+        layers = nb * len(self.cfg.block_pattern)
         if self._kv_quant:
             per_cell = self.cfg.kv_dim + 4 * self.cfg.num_kv_heads
         else:
@@ -427,6 +499,9 @@ class Engine:
         self.sched = Scheduler(self.bm, self.prefix, self.last_stats)
         self._tables[:] = self._num_blocks
         self._paged_caches = self._fresh_pools()
+        if self._spec_on:
+            self._draft_pools = self._fresh_pools(
+                num_super_blocks=self._nb_draft)
 
     # ------------------------------------------------------------------
     # dense mode: jitted pieces (weights passed as args so they are never
@@ -439,23 +514,35 @@ class Engine:
         self._prefill_traces += 1       # python side effect: runs per trace
         out = transformer.forward(base, self.cfg, self.rt.spec, bc, pl,
                                   tokens, task=task, policy=self.policy)
-        caches = _pad_caches(out.caches, self.cfg, 1, self.cache_len)
+        # nb from the caches themselves: the same graph prefills the
+        # speculative drafter's layer-strided sub-model (fewer blocks)
+        nb = jax.tree_util.tree_leaves(out.caches)[0].shape[0]
+        caches = _pad_caches(out.caches, self.cfg, 1, self.cache_len,
+                             num_super_blocks=nb)
         last = jnp.take(out.logits[0], last_idx, axis=0)
         return last, caches
 
-    def _admit_impl(self, state: DecodeState, slot, caches1,
+    def _admit_impl(self, state: DecodeState, slot, caches1, dcaches1,
                     last_logits, plen, n_new, task_id) -> DecodeState:
         """Insert a prefilled request into slot ``slot`` and sample its
         first token from the prefill logits (counted toward the output).
         Inside the sharded graph the replicated full-width prefill cache
         is sliced to this shard's kv-head stripe before insertion
-        (serve_tp_slice no-ops on a single device)."""
+        (serve_tp_slice no-ops on a single device). ``dcaches1`` is the
+        drafter's prefill of the same prompt (None unless speculating)."""
         key, sub = jax.random.split(state.key)
         t0 = sampling_lib.sample(last_logits[None], sub, self.sampling)[0]
         caches1 = jax.tree_util.tree_map(
             lambda c: serve_tp_slice(c, 3), caches1)
         caches = transformer.insert_cache_slot(state.caches, caches1, slot)
+        dcaches = state.dcaches
+        if self._spec_on:
+            dcaches1 = jax.tree_util.tree_map(
+                lambda c: serve_tp_slice(c, 3), dcaches1)
+            dcaches = transformer.insert_cache_slot(state.dcaches, dcaches1,
+                                                    slot)
         return state._replace(
+            dcaches=dcaches,
             tok=jax.lax.dynamic_update_slice(state.tok, t0[None, None],
                                              (slot, 0)),
             pos=state.pos.at[slot].set(plen),
@@ -466,12 +553,63 @@ class Engine:
             task=state.task.at[slot].set(task_id),
             key=key, caches=caches)
 
-    def _decode_impl(self, base, bc, pl, state: DecodeState) -> DecodeState:
+    # -- speculative building blocks (shared by both cache modes) ------
+
+    def _propose(self, lg, mask, key):
+        """One drafter proposal from logits ``lg`` (B, V): the token and
+        (under a sampling method) the EXACT distribution q it was drawn
+        from — the rejection rule needs q, not the raw logits. Greedy
+        proposes the argmax and needs no q (accept is exact match)."""
+        if self.sampling.method == "greedy":
+            d = jnp.argmax(sampling_lib.process_logits(
+                lg, self.sampling, penalty_mask=mask),
+                axis=-1).astype(jnp.int32)
+            return d, None
+        q = sampling_lib.token_probs(lg, self.sampling, penalty_mask=mask)
+        d = jax.random.categorical(
+            key, jnp.log(jnp.maximum(q, 1e-38)), axis=-1).astype(jnp.int32)
+        return d, q
+
+    def _spec_accept(self, L, draft, q_probs, base_mask, key):
+        """Accept/reject ``draft`` (B, k) against the verifier's one-pass
+        logits ``L`` (B, k+1, V). Greedy: longest argmax-matching prefix
+        plus the verifier's own next token — committed tokens are
+        IDENTICAL to non-speculative greedy decode. Sampling: Leviathan
+        rejection sampling against the exact per-column target
+        distributions — the output distribution is unchanged. Per-column
+        repetition-penalty masks extend ``base_mask`` with the in-chunk
+        draft prefix, matching what sequential decode would have
+        accumulated."""
+        col_masks = spec_lib.column_penalty_masks(base_mask, draft,
+                                                  L.shape[-1])
+        if self.sampling.method == "greedy":
+            g = jnp.argmax(sampling_lib.process_logits(
+                L, self.sampling, penalty_mask=col_masks),
+                axis=-1).astype(jnp.int32)
+            return spec_lib.greedy_verify(draft, g)
+        p = sampling_lib.token_probs(L, self.sampling,
+                                     penalty_mask=col_masks)
+        return spec_lib.rejection_verify(key, draft, q_probs, p)
+
+    def _decode_impl(self, base, bc, pl, *rest) -> DecodeState:
         """Jitted continuous decode: step all active slots until one
-        finishes (or none remain) — the host only sees slot boundaries."""
+        finishes (or none remain) — the host only sees slot boundaries.
+        With speculation the drafter weights arrive as three extra args
+        and each loop iteration commits up to spec_k+1 tokens per slot:
+        k drafter single-token steps (plus one write-only step syncing
+        the last draft's KV into the drafter cache), ONE multi-token
+        verifier pass scoring all k+1 columns, and the in-graph accept
+        rule — all inside the same single-trace while_loop."""
+        if self._spec_on:
+            dbase, dbc, dpl, state = rest
+        else:
+            (state,) = rest
         self._decode_traces += 1        # python side effect: runs per trace
         active0 = state.active
         rows = jnp.arange(self.max_batch)
+        K = self.spec.spec_k
+        V = self.cfg.padded_vocab
+        rp_on = self.sampling.repetition_penalty != 1.0
 
         def cond(s):
             return jnp.any(s.active) & jnp.all(s.active == active0)
@@ -482,7 +620,10 @@ class Engine:
                 base, self.cfg, self.rt.spec, bc, pl, s.tok, s.caches,
                 s.pos, task=task, policy=self.policy)
             key, sub = jax.random.split(s.key)
-            nxt = sampling_lib.sample(logits, sub, self.sampling)
+            pm = (sampling_lib.history_mask(s.out, s.widx, V)
+                  if rp_on else None)
+            nxt = sampling_lib.sample(logits, sub, self.sampling,
+                                      penalty_mask=pm)
             # inactive slots write to column out_cap -> dropped
             col = jnp.where(s.active, s.widx, self.out_cap)
             out = s.out.at[rows, col].set(nxt, mode="drop")
@@ -491,9 +632,63 @@ class Engine:
             return DecodeState(
                 tok=tok, pos=s.pos + adv, remaining=s.remaining - adv,
                 active=s.active & (s.remaining > 1), widx=s.widx + adv,
-                out=out, task=s.task, key=key, caches=caches)
+                out=out, task=s.task, key=key, caches=caches,
+                dcaches=s.dcaches, steps=s.steps + 1,
+                drafted=s.drafted, accepted=s.accepted)
 
-        return jax.lax.while_loop(cond, body, state)
+        def spec_body(s):
+            task = s.task if self.rt.tasked else None
+            keys = jax.random.split(s.key, K + 2)
+            base_mask = (sampling_lib.history_mask(s.out, s.widx, V)
+                         if rp_on else None)
+            # drafter phase: K proposals + 1 write-only step that lands
+            # the last draft's KV in the drafter cache (the next round's
+            # first drafter step attends it when every draft is accepted)
+            dc = s.dcaches
+            tok_j = s.tok
+            drafts, qs = [], []
+            mask_j = base_mask
+            for j in range(K + 1):
+                lg, dc = transformer.decode_step(
+                    dbase, self.cfg, self.rt.spec, dbc, dpl, tok_j, dc,
+                    s.pos + j, task=task, policy=self.policy)
+                if j == K:
+                    break
+                d_j, q_j = self._propose(lg, mask_j, keys[1 + j])
+                drafts.append(d_j)
+                if q_j is not None:
+                    qs.append(q_j)
+                if rp_on:
+                    oh = jax.nn.one_hot(d_j, V, dtype=jnp.bool_)
+                    mask_j = oh if mask_j is None else (mask_j | oh)
+                tok_j = d_j[:, None]
+            d = jnp.stack(drafts, axis=1)                   # (B, K)
+            # verifier: ONE multi-token pass over [committed tok, drafts]
+            toks_v = jnp.concatenate([s.tok, d], axis=1)    # (B, K+1)
+            L, caches = transformer.decode_step(
+                base, self.cfg, self.rt.spec, bc, pl, toks_v, s.caches,
+                s.pos, task=task, policy=self.policy, all_logits=True)
+            q = jnp.stack(qs, axis=1) if qs else None
+            emitted, n = self._spec_accept(L, d, q, base_mask, keys[K + 1])
+            m = jnp.where(s.active, jnp.minimum(n + 1, s.remaining), 0)
+            cols = jnp.arange(K + 1)[None, :]
+            outcol = jnp.where(cols < m[:, None], s.widx[:, None] + cols,
+                               self.out_cap)
+            out = s.out.at[rows[:, None], outcol].set(emitted, mode="drop")
+            last = jnp.take_along_axis(
+                emitted, jnp.maximum(m - 1, 0)[:, None], axis=1)
+            tok = jnp.where((m > 0)[:, None], last, s.tok)
+            nact = jnp.sum(s.active.astype(jnp.int32))
+            return DecodeState(
+                tok=tok, pos=s.pos + m, remaining=s.remaining - m,
+                active=s.active & (s.remaining > m), widx=s.widx + m,
+                out=out, task=s.task, key=keys[0], caches=caches,
+                dcaches=dc, steps=s.steps + 1,
+                drafted=s.drafted + K * nact,
+                accepted=s.accepted + jnp.sum(jnp.where(s.active, n, 0)))
+
+        return jax.lax.while_loop(
+            cond, spec_body if self._spec_on else body, state)
 
     # ------------------------------------------------------------------
     # paged mode: jitted pieces
@@ -519,22 +714,52 @@ class Engine:
 
     def _cow_impl(self, state: PagedState, src, dst) -> PagedState:
         """Copy-on-write one physical block (all layers) — scheduled at
-        admit time so the decode loop never writes a shared block."""
-        return state._replace(
-            caches=transformer.copy_cache_block(state.caches, src, dst))
+        admit time so the decode loop never writes a shared block. The
+        drafter pools are indexed by the SAME block tables, so the copy
+        covers them too: shared prefix blocks carry the drafter's KV
+        (task-namespaced prefix keys guarantee the same drafter weights
+        produced it)."""
+        repl = dict(caches=transformer.copy_cache_block(state.caches,
+                                                        src, dst))
+        if self._spec_on:
+            repl["dcaches"] = transformer.copy_cache_block(state.dcaches,
+                                                           src, dst)
+        return state._replace(**repl)
 
-    def _paged_decode_impl(self, base, bc, pl, state: PagedState,
-                           tables) -> PagedState:
+    def _paged_decode_impl(self, base, bc, pl, *rest) -> PagedState:
         """One jitted while_loop co-batching chunked prefill and decode:
         every step runs a fixed (B, C) token block — prefilling slots
         consume up to C prompt tokens, decoding slots one sampled token
         (pad columns' cache writes are overwritten by the step that owns
         those positions; sentinel table entries drop out-of-allocation
-        writes). Compiles ONCE for all prompt lengths."""
+        writes). Compiles ONCE for all prompt lengths.
+
+        With speculation the drafter weights arrive as three extra args
+        and decoding slots commit up to spec_k+1 tokens per iteration.
+        The verifier's multi-column pass IS the chunked-prefill (B, C)
+        pass — prefilling rows keep consuming prompt chunks through it
+        while decoding rows score [committed tok, d_1..d_k] in columns
+        0..k. The drafter runs against parallel KV pools addressed by the
+        SAME block tables; per-row position routing keeps the two row
+        classes from clobbering each other's drafter KV: during the k+1
+        single-token drafter steps, prefilling rows write at
+        out-of-table positions (sentinel drop), and during the one
+        prompt-sync pass, decoding rows do."""
+        if self._spec_on:
+            dbase, dbc, dpl, state, tables = rest
+        else:
+            state, tables = rest
         self._decode_traces += 1        # python side effect: runs per trace
         active0 = state.active
         C = self._chunk
+        K = self.spec.spec_k
+        V = self.cfg.padded_vocab
+        rp_on = self.sampling.repetition_penalty != 1.0
         rows = jnp.arange(self.max_batch)
+        # any position >= p_tab * page indexes past the block table ->
+        # the sentinel row -> writes drop, reads return garbage the mask
+        # already excludes
+        oob = jnp.int32(self._p_tab * self._page)
 
         def cond(s):
             return jnp.any(s.active) & jnp.all(s.active == active0)
@@ -553,7 +778,10 @@ class Engine:
                 base, self.cfg, self.rt.spec, bc, pl, toks, s.caches,
                 tables, s.done, ntok - 1, task=task, policy=self.policy)
             key, sub = jax.random.split(s.key)
-            nxt = sampling_lib.sample(logits, sub, self.sampling)
+            pm = (sampling_lib.history_mask(s.out, s.widx, V)
+                  if rp_on else None)
+            nxt = sampling_lib.sample(logits, sub, self.sampling,
+                                      penalty_mask=pm)
             new_done = s.done + ntok
             # a slot emits a token when its step reached the last prompt
             # position (prefill -> first token) or is decoding
@@ -567,9 +795,107 @@ class Engine:
                 remaining=s.remaining - adv,
                 active=s.active & ((s.remaining > 1) | ~produced),
                 widx=s.widx + adv, out=out, task=s.task, key=key,
-                caches=caches)
+                caches=caches, dcaches=s.dcaches, steps=s.steps + 1,
+                drafted=s.drafted, accepted=s.accepted)
 
-        return jax.lax.while_loop(cond, body, state)
+        def spec_body(s):
+            is_pf = s.done < s.plen
+            start = jnp.where(is_pf, s.done, 0)
+            chunk = jax.vmap(
+                lambda p, st: jax.lax.dynamic_slice(p, (st,), (C,)))(
+                    s.prompt, start)
+            ntok_pf = jnp.minimum(C, s.plen - s.done)
+            task = s.task if self.rt.tasked else None
+            keys = jax.random.split(s.key, K + 3)
+            base_mask = (sampling_lib.history_mask(s.out, s.widx, V)
+                         if rp_on else None)
+            zero = jnp.zeros_like(s.done)
+            # --- drafter phase: K proposals + 1 write-only step landing
+            # the last draft's KV (needed next round when all K are
+            # accepted). Prefilling rows route their writes out of table.
+            dc = s.dcaches
+            tok_j = s.tok
+            drafts, qs = [], []
+            mask_j = base_mask
+            for j in range(K + 1):
+                dpos = jnp.where(is_pf, oob, s.done + j)
+                lg, dc = transformer.paged_step(
+                    dbase, self.cfg, self.rt.spec, dbc, dpl, tok_j, dc,
+                    tables, dpos, zero, task=task, policy=self.policy)
+                if j == K:
+                    break
+                d_j, q_j = self._propose(lg, mask_j, keys[1 + j])
+                drafts.append(d_j)
+                if q_j is not None:
+                    qs.append(q_j)
+                if rp_on:
+                    oh = jax.nn.one_hot(d_j, V, dtype=jnp.bool_)
+                    mask_j = oh if mask_j is None else (mask_j | oh)
+                tok_j = d_j[:, None]
+            d = jnp.stack(drafts, axis=1)                   # (B, K)
+            # prefilling rows also feed the prompt chunk through the
+            # DRAFTER so its cache tracks the prompt; decoding rows'
+            # pad columns route out of table (protecting d_1..d_K).
+            # cond-gated: pure decode iterations skip the whole pass.
+            dec_pad = jnp.pad(s.tok, ((0, 0), (0, C - 1)))
+
+            def sync(dcc):
+                toks0 = jnp.where(is_pf[:, None], chunk, dec_pad)
+                spos = jnp.where(is_pf, s.done, oob)
+                _, dcc = transformer.paged_step(
+                    dbase, self.cfg, self.rt.spec, dbc, dpl, toks0, dcc,
+                    tables, spos, zero, task=task, policy=self.policy)
+                return dcc
+
+            dc = jax.lax.cond(jnp.any(is_pf), sync, lambda dcc: dcc, dc)
+            # --- verify: ONE (B, C) pass — prompt chunk for prefilling
+            # rows, [committed tok, drafts] for decoding rows
+            dv = jnp.pad(jnp.concatenate([s.tok, d], axis=1),
+                         ((0, 0), (0, C - (K + 1))))
+            toks_v = jnp.where(is_pf[:, None], chunk, dv)
+            L, caches = transformer.paged_step(
+                base, self.cfg, self.rt.spec, bc, pl, toks_v, s.caches,
+                tables, s.done, zero, task=task, policy=self.policy,
+                all_logits=True)
+            # prefilling rows: baseline single-token emission off the
+            # last real prompt column
+            sel = jnp.clip(jnp.where(is_pf, ntok_pf - 1, 0), 0, C - 1)
+            Lsel = L[rows, sel]
+            nxt_pf = sampling_lib.sample(Lsel, keys[K + 2], self.sampling,
+                                         penalty_mask=base_mask)
+            # decoding rows: accept/reject over the first K+1 columns
+            q = jnp.stack(qs, axis=1) if qs else None
+            emitted, n = self._spec_accept(L[:, :K + 1], d, q, base_mask,
+                                           keys[K + 1])
+            new_done_pf = s.done + ntok_pf
+            produced_pf = s.active & (new_done_pf >= s.plen)
+            m = jnp.where(is_pf, produced_pf.astype(jnp.int32),
+                          jnp.where(s.active,
+                                    jnp.minimum(n + 1, s.remaining), 0))
+            em = jnp.where(is_pf[:, None],
+                           jnp.broadcast_to(nxt_pf[:, None],
+                                            emitted.shape), emitted)
+            cols = jnp.arange(K + 1)[None, :]
+            outcol = jnp.where(cols < m[:, None], s.widx[:, None] + cols,
+                               self.out_cap)
+            out = s.out.at[rows[:, None], outcol].set(em, mode="drop")
+            last = jnp.take_along_axis(
+                em, jnp.maximum(m - 1, 0)[:, None], axis=1)
+            tok = jnp.where((m > 0)[:, None], last, s.tok)
+            new_done = jnp.where(is_pf, new_done_pf, s.done + m)
+            dec_act = s.active & ~is_pf
+            nact = jnp.sum(dec_act.astype(jnp.int32))
+            return PagedState(
+                tok=tok, prompt=s.prompt, plen=s.plen, done=new_done,
+                remaining=s.remaining - m,
+                active=s.active & ((s.remaining > m) | (m == 0)),
+                widx=s.widx + m, out=out, task=s.task, key=keys[0],
+                caches=caches, dcaches=dc, steps=s.steps + 1,
+                drafted=s.drafted + K * nact,
+                accepted=s.accepted + jnp.sum(jnp.where(dec_act, n, 0)))
+
+        return jax.lax.while_loop(
+            cond, spec_body if self._spec_on else body, state)
 
     # ------------------------------------------------------------------
     # base-weight snapshot (quantized serving restarts, DESIGN.md §8)
@@ -606,7 +932,13 @@ class Engine:
             active=jnp.zeros((b,), bool), widx=z((b,)), out=z((b, cap)),
             task=z((b,)), key=key,
             caches=transformer.init_caches(self.cfg, b, self.cache_len,
-                                           self.cfg.compute_dtype))
+                                           self.cfg.compute_dtype),
+            dcaches=(transformer.init_caches(
+                self.cfg, b, self.cache_len, self.cfg.compute_dtype,
+                num_super_blocks=self._nb_draft)
+                if self._spec_on else None),
+            steps=jnp.int32(0), drafted=jnp.int32(0),
+            accepted=jnp.int32(0))
 
     def init_paged_state(self, key) -> PagedState:
         """Fresh per-slot state over the engine's PERSISTENT block pools
@@ -615,11 +947,16 @@ class Engine:
         b, cap = self.max_batch, self.out_cap
         z = functools.partial(jnp.zeros, dtype=jnp.int32)
         caches, self._paged_caches = self._paged_caches, None
+        dcaches = None
+        if self._spec_on:
+            dcaches, self._draft_pools = self._draft_pools, None
         return PagedState(
             tok=z((b, 1)), prompt=z((b, self._lp)), plen=z((b,)),
             done=z((b,)), remaining=z((b,)),
             active=jnp.zeros((b,), bool), widx=z((b,)), out=z((b, cap)),
-            task=z((b,)), key=key, caches=caches)
+            task=z((b,)), key=key, caches=caches, dcaches=dcaches,
+            steps=jnp.int32(0), drafted=jnp.int32(0),
+            accepted=jnp.int32(0))
 
     def _bucket(self, plen: int) -> int:
         for bkt in self.prompt_buckets:
@@ -684,8 +1021,14 @@ class Engine:
         task = jnp.int32(req.task) if self.rt.tasked else None
         last, caches1 = self._prefill(*self._weights, padded,
                                       jnp.int32(plen - 1), task)
+        dcaches1 = jnp.int32(0)         # placeholder leaf when spec is off
+        if self._spec_on:
+            # drafter prefill through the SAME jitted fn (its own trace —
+            # the drafter's cache template has nb_draft super-blocks)
+            _, dcaches1 = self._prefill(*self._draft_weights, padded,
+                                        jnp.int32(plen - 1), task)
         self.last_stats.admitted += 1
-        return self._admit(state, jnp.int32(slot), caches1, last,
+        return self._admit(state, jnp.int32(slot), caches1, dcaches1, last,
                            jnp.int32(plen), jnp.int32(req.max_new_tokens),
                            jnp.int32(req.task))
 
@@ -694,6 +1037,9 @@ class Engine:
         st.page_size = self.cache_len
         st.num_blocks = self.max_batch
         st.block_bytes = self._kv_bytes(self.cache_len)
+        if self._spec_on:
+            st.block_bytes += self._kv_bytes(
+                self.cache_len, num_super_blocks=self._nb_draft)
         # dense reserves the whole max_batch × cache_len cache up front
         st.kv_blocks_peak = self.max_batch
         state = self.init_state(key)
@@ -710,7 +1056,7 @@ class Engine:
                     meta[slot] = idx
             # decode every active slot until one finishes
             if bool(np.any(np.asarray(state.active))):
-                state = self._decode(*self._weights, state)
+                state = self._decode(*self._step_weights, state)
                 st.decode_calls += 1
             # evict finished slots (also catches max_new_tokens == 1)
             active = np.asarray(state.active)
@@ -721,7 +1067,15 @@ class Engine:
                     results[meta[slot]] = out[slot, : int(widx[slot])].copy()
                     meta[slot] = None
                     st.evicted += 1
+        self._read_spec_stats(state, st)
         return results  # type: ignore[return-value]
+
+    def _read_spec_stats(self, state, st) -> None:
+        """Fold the loop-carried speculation counters into EngineStats."""
+        st.spec_k = self.spec.spec_k
+        st.spec_steps = int(np.asarray(state.steps))
+        st.draft_tokens = int(np.asarray(state.drafted))
+        st.accepted_tokens = int(np.asarray(state.accepted))
 
     # -- paged ---------------------------------------------------------
 
@@ -742,6 +1096,9 @@ class Engine:
             self._reset_paged_pool()    # slot refs / donated pool are gone
             raise
         self._paged_caches = state.caches
+        if self._spec_on:
+            self._draft_pools = state.dcaches
+        self._read_spec_stats(state, st)
         return results  # type: ignore[return-value]
 
     def _paged_loop(self, state, pending, results, meta,
@@ -782,7 +1139,7 @@ class Engine:
                     "blocks than the pool can ever free")
             # run the co-batched prefill/decode loop until a slot finishes
             if bool(np.any(np.asarray(state.active))):
-                state = self._pdecode(*self._weights, state,
+                state = self._pdecode(*self._step_weights, state,
                                       jnp.asarray(self._tables))
                 st.decode_calls += 1
             active = np.asarray(state.active)

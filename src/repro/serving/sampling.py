@@ -2,8 +2,15 @@
 
 Every sampler is a pure jnp function of (logits, key) so it lives INSIDE the
 jitted ``lax.while_loop`` decode body (repro/serving/engine.py) — the loop
-never leaves the device to pick a token. The method/temperature/top_k knobs
-are static (baked into the trace); the PRNG key is loop-carried state.
+never leaves the device to pick a token. The method/temperature/top_k/top_p/
+repetition_penalty knobs are static (baked into the trace); the PRNG key is
+loop-carried state.
+
+The logits transform is factored into ``process_logits`` so that ``sample``
+(the decode loop), ``token_probs`` (the speculative accept rule —
+serving/speculative.py needs the exact distribution the sampler draws from,
+or rejection sampling would not preserve the output distribution) and the
+property tests all share ONE implementation of the masking/penalty math.
 
 Under tensor-parallel serving (DESIGN.md §9) sampling runs REPLICATED:
 every shard holds the all-gathered (B, V) logits and the same loop-carried
@@ -13,6 +20,7 @@ lockstep across the mesh with no extra collective.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,31 +30,104 @@ from repro.models.attention import NEG_INF
 
 @dataclasses.dataclass(frozen=True)
 class SamplingConfig:
-    """method: "greedy" | "temperature" | "top_k".
+    """method: "greedy" | "temperature" | "top_k" | "top_p".
 
-    greedy ignores temperature/top_k; top_k masks to the k highest logits
-    before the temperature-scaled categorical draw.
+    greedy ignores temperature/top_k/top_p; top_k masks to the k highest
+    logits and top_p (nucleus) to the smallest set whose cumulative
+    probability reaches p, both before the temperature-scaled categorical
+    draw. ``repetition_penalty`` (CTRL-style) composes with EVERY method,
+    greedy included: logits of already-emitted token ids are divided by
+    the penalty when positive and multiplied when negative, so emitted
+    ids can only be demoted, never promoted. 1.0 disables it.
     """
     method: str = "greedy"
     temperature: float = 1.0
     top_k: int = 0
+    top_p: float = 1.0
+    repetition_penalty: float = 1.0
 
     def validate(self) -> "SamplingConfig":
-        if self.method not in ("greedy", "temperature", "top_k"):
+        if self.method not in ("greedy", "temperature", "top_k", "top_p"):
             raise ValueError(f"unknown sampling method {self.method!r}")
         if self.method == "top_k" and self.top_k <= 0:
             raise ValueError("top_k sampling needs top_k >= 1")
+        if self.method == "top_p" and not 0.0 < self.top_p <= 1.0:
+            raise ValueError(
+                f"top_p sampling needs 0 < top_p <= 1 (got {self.top_p})")
         if self.method != "greedy" and self.temperature <= 0:
             raise ValueError("temperature must be > 0")
+        if self.repetition_penalty <= 0:
+            raise ValueError(
+                f"repetition_penalty={self.repetition_penalty} must be > 0 "
+                "(1.0 disables it)")
         return self
 
 
-def sample(logits: jnp.ndarray, key, cfg: SamplingConfig) -> jnp.ndarray:
-    """logits (B, V) -> sampled token ids (B,) int32."""
+def _top_p_mask(lg: jnp.ndarray, p: float) -> jnp.ndarray:
+    """Nucleus mask: keep the highest-probability tokens whose cumulative
+    mass BEFORE each token is < p — the top-1 token always survives, so
+    the mask never empties at any p in (0, 1]."""
+    srt = jnp.sort(lg, axis=-1)[..., ::-1]
+    probs = jax.nn.softmax(srt, axis=-1)
+    csum = jnp.cumsum(probs, axis=-1)
+    keep = (csum - probs) < p
+    nkeep = jnp.maximum(keep.sum(axis=-1, keepdims=True), 1)
+    thresh = jnp.take_along_axis(srt, nkeep - 1, axis=-1)
+    return jnp.where(lg >= thresh, lg, NEG_INF)
+
+
+def process_logits(logits: jnp.ndarray, cfg: SamplingConfig, *,
+                   penalty_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """The full static logits transform the sampler draws from:
+    repetition penalty (where ``penalty_mask`` marks already-emitted ids)
+    -> temperature -> top-k / top-p masking. Works on any (..., V) shape.
+    Greedy returns penalty-adjusted logits only (argmax is scale-free)."""
+    lg = logits.astype(jnp.float32)
+    if penalty_mask is not None and cfg.repetition_penalty != 1.0:
+        rp = cfg.repetition_penalty
+        pen = jnp.where(lg > 0, lg / rp, lg * rp)
+        lg = jnp.where(penalty_mask, pen, lg)
     if cfg.method == "greedy":
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    lg = logits.astype(jnp.float32) / cfg.temperature
+        return lg
+    lg = lg / cfg.temperature
     if cfg.method == "top_k":
         kth = jax.lax.top_k(lg, cfg.top_k)[0][..., -1:]
         lg = jnp.where(lg < kth, NEG_INF, lg)
+    elif cfg.method == "top_p":
+        lg = _top_p_mask(lg, cfg.top_p)
+    return lg
+
+
+def sample(logits: jnp.ndarray, key, cfg: SamplingConfig, *,
+           penalty_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """logits (..., V) -> sampled token ids (...,) int32."""
+    lg = process_logits(logits, cfg, penalty_mask=penalty_mask)
+    if cfg.method == "greedy":
+        return jnp.argmax(lg, axis=-1).astype(jnp.int32)
     return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+
+
+def token_probs(logits: jnp.ndarray, cfg: SamplingConfig, *,
+                penalty_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """The exact (..., V) distribution ``sample`` draws from — the
+    speculative accept rule's p and q (greedy degenerates to a one-hot
+    at the argmax, which makes rejection sampling collapse to exact
+    argmax matching)."""
+    lg = process_logits(logits, cfg, penalty_mask=penalty_mask)
+    if cfg.method == "greedy":
+        return jax.nn.one_hot(jnp.argmax(lg, axis=-1), lg.shape[-1],
+                              dtype=jnp.float32)
+    return jax.nn.softmax(lg, axis=-1)
+
+
+def history_mask(out: jnp.ndarray, widx: jnp.ndarray,
+                 vocab: int) -> jnp.ndarray:
+    """(B, cap) emitted-token buffer + (B,) valid counts -> (B, V) bool
+    mask of already-emitted ids (the repetition penalty's operand).
+    Columns >= widx[b] are ignored, so stale buffer contents never
+    penalize. Prompt tokens are NOT penalized — only what the engine
+    emitted."""
+    b, cap = out.shape
+    valid = jnp.arange(cap)[None, :] < widx[:, None]
+    oh = jax.nn.one_hot(out, vocab, dtype=jnp.bool_)      # (B, cap, V)
+    return jnp.any(oh & valid[:, :, None], axis=1)

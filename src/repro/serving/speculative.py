@@ -1,0 +1,204 @@
+"""Speculative multi-token decode with a rank-truncated TT self-drafter
+(DESIGN.md §10).
+
+MetaTT gives the serving engine a drafter for free: TT bond ranks NEST —
+the rank-r' adapter obtained by slicing the leading r' bond columns of the
+shared cores (``g1[:, :r']``, ``c[..., :r', :r']``, ``g4[:r', :]``) is
+exactly the truncation the paper's DMRG rank adaptation optimizes over,
+and the ultra-low-rank regime is where TT-LoRA / LoRETTA show adapted
+models stay surprisingly close to their full-rank versions. The drafter
+therefore shares the frozen base weights (optionally every stride-th
+super-block of them), the paged KV block tables, the task routing and the
+sampling configuration with the target model — only the adapter factors
+(and optionally the layer count) shrink.
+
+This module is pure function-of-arrays: drafter construction happens once
+at engine build (host-side slicing of concrete arrays), and the accept
+rules are jnp functions living inside the engine's jitted while_loop.
+
+Accept rules (serving/engine.py wires them in):
+
+  * greedy   — commit the longest draft prefix matching the verifier's
+    per-column argmax, plus the verifier's own next token ("bonus").
+    Because attention is causal, column i of the one-pass verification
+    depends only on tokens <= i, so the committed stream is IDENTICAL to
+    non-speculative greedy decode for ANY drafter — quality only moves
+    throughput, never tokens.
+  * sampling — Leviathan-style rejection sampling: accept draft d_j with
+    probability min(1, p_{j-1}(d_j) / q_j(d_j)); on the first rejection
+    emit a token from the residual norm(max(p - q, 0)); if every draft
+    survives, emit a bonus token from p_k. The marginal of the committed
+    stream equals sampling from p directly — the output DISTRIBUTION is
+    provably unchanged by speculation.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import SpecConfig
+
+# ---------------------------------------------------------------------------
+# drafter construction (host-side, once per engine)
+# ---------------------------------------------------------------------------
+
+
+def truncate_factors(kind: str, broadcast, per_layer, draft_rank: int):
+    """Rank-truncate an AdapterRuntime's (broadcast, per_layer) factor
+    bundle to TT bond rank ``draft_rank`` (0 = keep full rank).
+
+    Handles the layouts the serving runtimes produce:
+      * metatt live:      broadcast {"g1": (Din, r), "g4": (r, Dout)},
+                          per_layer {"c": (L, [T,] M, r, r)}
+      * metatt lora-form: broadcast {"g4": (r, Dout)},
+                          per_layer {"a": (L, [T,] M, Din, r)}
+      * plain lora:       per_layer {"a": (L, M, Din, r),
+                                     "b": (L, M, r, Dout)}
+    Other kinds (vera / lotr / merged / none) return unchanged — the
+    drafter then equals the target adapter and speculation still works
+    (it just cannot be cheaper on the adapter side).
+    """
+    if draft_rank <= 0:
+        return broadcast, per_layer
+    rd = draft_rank
+    bc = dict(broadcast) if broadcast else {}
+    pl = dict(per_layer) if per_layer else None
+    if kind == "metatt" and pl is not None:
+        if "g1" in bc:
+            bc["g1"] = bc["g1"][:, :rd]
+        if "g4" in bc:
+            bc["g4"] = bc["g4"][:rd, :]
+        if "c" in pl:
+            pl["c"] = pl["c"][..., :rd, :rd]
+        if "a" in pl:
+            pl["a"] = pl["a"][..., :rd]
+        return bc, pl
+    if kind == "lora" and pl is not None and "a" in pl and "b" in pl:
+        return bc, {"a": pl["a"][..., :rd], "b": pl["b"][..., :rd, :]}
+    return broadcast, per_layer
+
+
+def stride_base(base, stride: int) -> Tuple[Any, int]:
+    """Keep every ``stride``-th super-block of the frozen base. Returns
+    (draft_base, nb_draft). Leaves of ``base["blocks"]`` are stacked on a
+    leading nb axis (int8-packed {"q8","scale"} leaves included), so one
+    tree_map slices them all; embed / final_norm are SHARED with the
+    target (same arrays — no extra memory)."""
+    nb = jax.tree_util.tree_leaves(base["blocks"])[0].shape[0]
+    if stride <= 1:
+        return base, nb
+    blocks = jax.tree_util.tree_map(lambda a: a[::stride], base["blocks"])
+    nb_draft = len(range(0, nb, stride))
+    draft = dict(base)
+    draft["blocks"] = blocks
+    return draft, nb_draft
+
+
+def stride_per_layer(per_layer, nb: int, p: int, stride: int):
+    """Slice the adapter's per-layer factors (leading axis L = nb * p) to
+    the drafter's layer subset: reshape L -> (nb, p), keep every
+    stride-th super-block, flatten back."""
+    if per_layer is None or stride <= 1:
+        return per_layer
+
+    def one(a):
+        g = a.reshape((nb, p) + a.shape[1:])[::stride]
+        return g.reshape((-1,) + a.shape[1:])
+
+    return jax.tree_util.tree_map(one, per_layer)
+
+
+def build_drafter(spec_cfg: SpecConfig, adapter_kind: str, base, broadcast,
+                  per_layer, pattern_len: int) -> Tuple[Any, Any, Any, int]:
+    """(draft_base, draft_broadcast, draft_per_layer, nb_draft) — the
+    weight bundle the engine passes to the drafter's step graphs. Called
+    once at engine construction on concrete (possibly int8-packed)
+    arrays; the jitted loop never slices."""
+    bc, pl = truncate_factors(adapter_kind, broadcast, per_layer,
+                              spec_cfg.draft_rank)
+    dbase, nb = stride_base(base, spec_cfg.draft_layer_stride)
+    full_nb = jax.tree_util.tree_leaves(base["blocks"])[0].shape[0]
+    pl = stride_per_layer(pl, full_nb, pattern_len,
+                          spec_cfg.draft_layer_stride)
+    return dbase, bc, pl, nb
+
+
+# ---------------------------------------------------------------------------
+# in-graph accept rules (inside the engine's jitted while_loop)
+# ---------------------------------------------------------------------------
+
+
+def greedy_verify(draft: jnp.ndarray,
+                  verify_argmax: jnp.ndarray) -> Tuple[jnp.ndarray,
+                                                       jnp.ndarray]:
+    """draft: (B, k) drafter proposals; verify_argmax: (B, k+1) per-column
+    argmax of the one-pass verification logits (column i scored after
+    consuming token i of [committed, d_1..d_k]).
+
+    Returns (emitted (B, k+1), n_accepted (B,)). Under acceptance
+    d_j == verify_argmax[:, j-1], so the emitted stream IS the verifier's
+    argmax stream — token-identical to non-speculative greedy decode."""
+    acc = (draft == verify_argmax[:, :-1]).astype(jnp.int32)
+    n = jnp.cumprod(acc, axis=1).sum(axis=1)
+    return verify_argmax, n
+
+
+def rejection_verify(key, draft: jnp.ndarray, draft_probs: jnp.ndarray,
+                     target_probs: jnp.ndarray) -> Tuple[jnp.ndarray,
+                                                         jnp.ndarray]:
+    """Rejection-sampling accept (temperature / top-k / top-p decoding).
+
+    draft: (B, k) tokens drawn d_j ~ q_j; draft_probs: (B, k, V) the q_j;
+    target_probs: (B, k+1, V) the target distributions p_0..p_k (p_{j-1}
+    is the target's distribution for the token draft d_j proposed).
+    Accept d_j with prob min(1, p_{j-1}(d_j)/q_j(d_j)); at the first
+    rejection emit from the residual norm(max(p_n - q_{n+1}, 0)); if all
+    k survive, emit a bonus token from p_k. Returns
+    (emitted (B, k+1), n_accepted (B,)): emitted[:, :n] == accepted
+    drafts, emitted[:, n] the correction/bonus draw. The marginal law of
+    the committed tokens equals autoregressive sampling from p."""
+    b, k = draft.shape
+    ku, kr = jax.random.split(key)
+    u = jax.random.uniform(ku, (b, k))
+    p_at_d = jnp.take_along_axis(target_probs[:, :k], draft[..., None],
+                                 axis=-1)[..., 0]
+    q_at_d = jnp.take_along_axis(draft_probs, draft[..., None],
+                                 axis=-1)[..., 0]
+    acc = u < jnp.minimum(p_at_d / jnp.maximum(q_at_d, 1e-20), 1.0)
+    n = jnp.cumprod(acc.astype(jnp.int32), axis=1).sum(axis=1)   # (B,)
+    # distribution at the correction position: residual when a draft was
+    # rejected (n < k), the plain target p_k for the bonus token
+    p_n = jnp.take_along_axis(target_probs, n[:, None, None],
+                              axis=1)[:, 0]                       # (B, V)
+    q_n = jnp.take_along_axis(draft_probs,
+                              jnp.clip(n, 0, k - 1)[:, None, None],
+                              axis=1)[:, 0]
+    res = jnp.maximum(p_n - jnp.where((n < k)[:, None], q_n, 0.0), 0.0)
+    z = res.sum(axis=-1, keepdims=True)
+    res = jnp.where(z > 0, res / jnp.maximum(z, 1e-20), p_n)
+    corr = jax.random.categorical(
+        kr, jnp.log(jnp.maximum(res, 1e-38)), axis=-1).astype(jnp.int32)
+    cols = jnp.arange(k + 1)[None, :]
+    dpad = jnp.pad(draft, ((0, 0), (0, 1)))
+    emitted = jnp.where(cols < n[:, None], dpad, corr[:, None])
+    return emitted, n
+
+
+def column_penalty_masks(base_mask: Optional[jnp.ndarray],
+                         draft: jnp.ndarray, vocab: int):
+    """Per-column repetition-penalty masks for the one-pass verification.
+
+    Column i's distribution governs the token emitted AFTER d_1..d_i, so
+    its penalty set is the emitted history plus the in-chunk prefix
+    {d_1..d_i} — exactly what the non-speculative engine would have
+    accumulated token by token (under acceptance d_j equals the committed
+    stream). base_mask: (B, V) or None; draft: (B, k). Returns
+    (B, k+1, V) or None when no penalty is active."""
+    if base_mask is None:
+        return None
+    oh = jax.nn.one_hot(draft, vocab, dtype=jnp.bool_)        # (B, k, V)
+    cum = jnp.cumsum(oh, axis=1).astype(bool)
+    cum = jnp.pad(cum, ((0, 0), (1, 0), (0, 0)))              # col 0: none
+    return base_mask[:, None, :] | cum

@@ -50,6 +50,11 @@ class EngineStats:
     cache_evictions: int = 0     # prefix blocks reclaimed under pressure
     # --- scheduler ---
     backpressure_waits: int = 0  # admissions deferred for lack of blocks
+    # --- speculative decode (DESIGN.md §10) ---
+    spec_k: int = 0              # drafts per engine step (0 = spec off)
+    spec_steps: int = 0          # decode-loop iterations (engine steps)
+    draft_tokens: int = 0        # drafter proposals (active decode rows)
+    accepted_tokens: int = 0     # proposals the verifier accepted
 
     @property
     def tokens_per_s(self) -> float:
@@ -85,6 +90,23 @@ class EngineStats:
         mesh of 1; ≈ global / |model| under TP)."""
         return self.kv_blocks_peak * self.block_bytes_per_shard
 
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of drafter proposals the verifier accepted (0.0 when
+        speculation is off or no decode steps ran)."""
+        if not self.draft_tokens:
+            return 0.0
+        return self.accepted_tokens / self.draft_tokens
+
+    @property
+    def tokens_per_step(self) -> float:
+        """Committed tokens per decode-loop iteration — speculation's
+        whole point is pushing this above 1.0 (chunked prefill steps
+        count too, so long prompts dilute it slightly)."""
+        if not self.spec_steps:
+            return 0.0
+        return self.tokens_generated / self.spec_steps
+
     def summary(self) -> str:
         """One-line human-readable digest (printed by examples/serve.py
         and bench_serving)."""
@@ -100,4 +122,8 @@ class EngineStats:
                 f"cow={self.cow_copies} admits={self.admitted} "
                 f"evicts={self.evicted} waits={self.backpressure_waits} "
                 f"decode_traces={self.decode_traces} "
-                f"prefill_traces={self.prefill_traces}")
+                f"prefill_traces={self.prefill_traces}"
+                + (f" spec_k={self.spec_k} "
+                   f"accept={self.acceptance_rate:.2f} "
+                   f"tok/step={self.tokens_per_step:.2f}"
+                   if self.spec_k else ""))

@@ -134,3 +134,72 @@ def test_dmrg_preserves_function_within_truncation_bound(seed, r_hi):
         np.testing.assert_allclose(
             metatt.apply(p, cfg, x, l, "q"),
             metatt.apply(swept, cfg, x, l, "q"), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# in-graph sampling invariants (serving/sampling.py)
+# ---------------------------------------------------------------------------
+
+from repro.serving import sampling as sampling_lib  # noqa: E402
+from repro.serving.sampling import SamplingConfig  # noqa: E402
+
+_vocab = st.integers(min_value=4, max_value=32)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=_seed, vocab=_vocab, k=st.integers(min_value=1, max_value=8))
+def test_top_k_never_selects_masked_token(seed, vocab, k):
+    """A top-k draw always lands in the k highest logits."""
+    key = jax.random.PRNGKey(seed)
+    lg = jax.random.normal(key, (3, vocab)) * 5
+    cfg = SamplingConfig(method="top_k", top_k=min(k, vocab),
+                         temperature=0.7)
+    tok = sampling_lib.sample(lg, jax.random.fold_in(key, 1), cfg)
+    kth = jnp.sort(lg, axis=-1)[:, -min(k, vocab)]
+    assert bool(jnp.all(jnp.take_along_axis(lg, tok[:, None], 1)[:, 0]
+                        >= kth))
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=_seed, vocab=_vocab,
+       p=st.floats(min_value=0.05, max_value=1.0))
+def test_top_p_never_selects_masked_token_and_keeps_one(seed, vocab, p):
+    """The nucleus never empties (>= 1 token survives at ANY p) and the
+    draw always comes from inside it."""
+    key = jax.random.PRNGKey(seed)
+    lg = jax.random.normal(key, (2, vocab)) * 8
+    cfg = SamplingConfig(method="top_p", top_p=p, temperature=1.0)
+    masked = sampling_lib.process_logits(lg, cfg)
+    nkeep = jnp.sum(jnp.isfinite(masked) & (masked > -1e30), axis=-1)
+    assert bool(jnp.all(nkeep >= 1))
+    tok = sampling_lib.sample(lg, jax.random.fold_in(key, 1), cfg)
+    picked = jnp.take_along_axis(masked, tok[:, None], 1)[:, 0]
+    assert bool(jnp.all(picked > -1e30))
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=_seed, vocab=_vocab)
+def test_temperature_to_zero_recovers_greedy(seed, vocab):
+    """As temperature -> 0 the temperature sampler concentrates on the
+    argmax: a draw at T=1e-4 equals the greedy token."""
+    key = jax.random.PRNGKey(seed)
+    lg = jax.random.normal(key, (4, vocab)) * 3
+    cold = SamplingConfig(method="temperature", temperature=1e-4)
+    tok = sampling_lib.sample(lg, jax.random.fold_in(key, 1), cold)
+    assert tok.tolist() == jnp.argmax(lg, axis=-1).tolist()
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=_seed, vocab=_vocab,
+       rp=st.floats(min_value=1.01, max_value=3.0))
+def test_repetition_penalty_only_demotes_emitted_ids(seed, vocab, rp):
+    """With penalty > 1, masked (already-emitted) ids never gain logit
+    mass and unmasked ids are untouched."""
+    key = jax.random.PRNGKey(seed)
+    lg = jax.random.normal(key, (2, vocab)) * 4
+    mask = jax.random.bernoulli(jax.random.fold_in(key, 2), 0.4,
+                                (2, vocab))
+    cfg = SamplingConfig(method="greedy", repetition_penalty=rp)
+    out = sampling_lib.process_logits(lg, cfg, penalty_mask=mask)
+    lg32 = lg.astype(jnp.float32)
+    assert bool(jnp.all(jnp.where(mask, out <= lg32 + 1e-6, out == lg32)))
