@@ -22,6 +22,17 @@
    Needs 4 devices: run under
    ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the
    scripts/ci.sh sharded-parity job does).
+6. ``--fleet``: data-striped (dp2 x tp4) vs single-replica (dp1 x tp4)
+   serving (DESIGN.md §11) — token identity and per-replica block
+   accounting are asserted and the ``serving/dp2_vs_dp1`` row is merged
+   into ``BENCH_serving.json``. Needs 8 devices (the scripts/ci.sh
+   fleet-parity job forces them).
+
+Throughput figures always come from a SECOND ``generate`` call — the
+first, traced call pays jit compilation and is excluded from every
+``tokens_per_s`` wall. Paged rows also report the latency phase split
+(``ttft_ms`` time-to-first-token vs ``tpot_ms`` per-token decode
+latency) straight from engine.last_stats.
 
 Engine stats of every engine run land in ``ENGINE_STATS`` (reset per
 ``run()``) so ``benchmarks/run.py --json`` can emit them machine-readably.
@@ -277,6 +288,8 @@ def _paged_rows(rows, *, smoke: bool) -> None:
             f"serving/engine_{mode}_shared_prefix", dt / max(
                 st.tokens_generated, 1) * 1e6,
             f"tok_per_s={st.tokens_per_s:.1f},"
+            f"ttft_ms={st.ttft_s * 1e3:.1f},"
+            f"tpot_ms={st.tpot_s * 1e3:.2f},"
             f"kv_bytes_peak={st.kv_bytes_peak},"
             f"kv_blocks_peak={st.kv_blocks_peak}/{st.num_blocks},"
             f"prefix_hit_rate={st.prefix_hit_rate:.2f},"
@@ -461,6 +474,108 @@ def _mesh_rows(rows, *, smoke: bool, mesh_shape=(1, 4)) -> None:
         raise AssertionError("per-shard KV bytes do not sum to global")
 
 
+def _fleet_rows(rows, *, smoke: bool, mesh_shape=(2, 4)) -> None:
+    """Data-striped vs single-replica paged serving at fixed TP width
+    (DESIGN.md §11) on the shared-prefix mixed-task workload.
+
+    Both engines serve identical requests through the same tp-wide
+    shard groups; the dp2 engine stripes requests over two decode
+    replicas (deterministic least-loaded routing), each owning a
+    private stripe of the slots and the block pool. Asserted from the
+    engines' own stats: token identity, per-replica block accounting
+    (every replica's peak stays inside its private ``num_blocks / dp``
+    budget and the striped pool leaves physically hold 1/dp of the
+    global blocks per data shard), and unchanged global KV accounting.
+    The compile (first traced) call is excluded from every wall.
+    """
+    dp, tp = int(mesh_shape[0]), int(mesh_shape[1])
+    if jax.device_count() < dp * tp:
+        raise SystemExit(
+            f"--fleet needs {dp * tp} devices; on CPU run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={dp * tp}")
+    n_req, n_new, slots = (6, 6, 3) if smoke else (16, 16, 4)
+    cfg = registry.get_smoke_config("stablelm-1.6b")
+    run_cfg = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                        adapter_kind="metatt", adapter_variant="4+1d",
+                        num_tasks=2, adapter_rank=8)
+    spec = M.build_adapter_spec(run_cfg)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, spec, key)
+    params["adapter"] = {"cores": ttlib.random_tt(key, spec.cfg.mode_sizes,
+                                                  8, scale=0.5)}
+    rt = AdapterRuntime.build("lora", params["base"], spec,
+                              params["adapter"], params["frozen"])
+    cache_len = 32 + n_new
+    sys_prompt = np.asarray(jax.random.randint(key, (18,), 0,
+                                               cfg.vocab_size))
+    keys = jax.random.split(key, n_req)
+    reqs = []
+    for i in range(n_req):
+        tail = np.asarray(jax.random.randint(keys[i], (2 + i % 4,), 0,
+                                             cfg.vocab_size))
+        prompt = (np.concatenate([sys_prompt, tail])
+                  if i % 2 == 0 else tail)
+        reqs.append(Request(prompt, n_new, task=i % 2))
+
+    outs, stats, pools = {}, {}, {}
+    for label, mesh in (("dp1", (1, tp)), (f"dp{dp}", (dp, tp))):
+        eng = Engine(cfg, rt, serve=ServeConfig(
+            max_batch=slots, cache_len=cache_len, out_cap=n_new,
+            page_size=8, prefill_chunk=8, mesh_shape=mesh))
+        eng.generate(reqs)      # compile — excluded from the timed wall
+        t0 = time.perf_counter()
+        outs[label] = eng.generate(reqs)
+        dt = time.perf_counter() - t0
+        st = eng.last_stats
+        stats[label] = st
+        pools[label] = eng._paged_caches
+        rows.append(emit(
+            f"serving/engine_fleet_{label}",
+            dt / max(st.tokens_generated, 1) * 1e6,
+            f"tok_per_s={st.tokens_per_s:.1f},dp={st.data_shards},"
+            f"shards={st.shards},ttft_ms={st.ttft_s * 1e3:.1f},"
+            f"tpot_ms={st.tpot_s * 1e3:.2f},"
+            f"kv_bytes_peak={st.kv_bytes_peak},"
+            f"kv_blocks_peak={st.kv_blocks_peak}/{st.num_blocks}"))
+        _record_stats(f"engine_fleet_{label}", st)
+        print(f"# engine stats [{label}]: {st.summary()}")
+    d1, d2 = stats["dp1"], stats[f"dp{dp}"]
+    parity = all(a.tolist() == b.tolist() for a, b in
+                 zip(outs["dp1"], outs[f"dp{dp}"]))
+    reps = [r for r in d2.replica_stats if r["replica"] >= 0]
+    per_replica_blocks = d2.num_blocks // dp
+    rep_peak_bytes = [r["kv_blocks_peak"] * d2.block_bytes for r in reps]
+    rows.append(emit(
+        f"serving/dp{dp}_vs_dp1", 0.0,
+        f"identical_tokens={parity},dp={d2.data_shards},"
+        f"replica_kv_bytes_peak={'|'.join(map(str, rep_peak_bytes))},"
+        f"replica_block_budget={per_replica_blocks},"
+        f"tok_per_s_dp1={d1.tokens_per_s:.1f},"
+        f"tok_per_s_dp{dp}={d2.tokens_per_s:.1f},"
+        f"ttft_ms_dp{dp}={d2.ttft_s * 1e3:.1f},"
+        f"tpot_ms_dp{dp}={d2.tpot_s * 1e3:.2f}"))
+    if not parity:
+        raise AssertionError("dp-striped engine diverged from dp1")
+    if len(reps) != dp or sorted(r["replica"] for r in reps) != list(
+            range(dp)):
+        raise AssertionError(f"expected {dp} replica stats, got {reps}")
+    if sum(r["admitted"] for r in reps) != len(reqs):
+        raise AssertionError("replica admissions do not cover the batch")
+    for r in reps:
+        if not 0 < r["kv_blocks_peak"] <= per_replica_blocks:
+            raise AssertionError(
+                f"replica {r['replica']} peak {r['kv_blocks_peak']} "
+                f"outside its private budget {per_replica_blocks}")
+    if d2.block_bytes != d1.block_bytes:
+        raise AssertionError("per-block bytes changed under dp striping")
+    for leaf in jax.tree_util.tree_leaves(pools[f"dp{dp}"]):
+        if leaf.addressable_shards[0].data.shape[1] * dp != leaf.shape[1]:
+            raise AssertionError(
+                "pool leaves are not physically striped 1/dp per data "
+                f"shard: {leaf.addressable_shards[0].data.shape} of "
+                f"{leaf.shape}")
+
+
 def _decaying_tt(key, mode_sizes, rank, scale, decay):
     """Random TT whose bond strength decays geometrically — the spectrum
     shape DMRG rank adaptation produces on trained adapters (and the
@@ -613,6 +728,17 @@ def run_mesh(*, smoke: bool = False) -> list:
     return rows
 
 
+def run_fleet(*, smoke: bool = False) -> list:
+    """The ``--fleet`` entry point: only the dp2-vs-dp1 rows (the
+    scripts/ci.sh fleet-parity job runs this with --smoke under 8
+    forced fake devices)."""
+    ENGINE_STATS.clear()
+    rows = []
+    _fleet_rows(rows, smoke=smoke)
+    _merge_rows_into_json(rows)
+    return rows
+
+
 def run_spec(*, smoke: bool = False) -> list:
     """The ``--spec`` entry point: only the speculative-vs-baseline rows,
     merged into BENCH_serving.json (the scripts/ci.sh spec-parity job)."""
@@ -647,10 +773,17 @@ if __name__ == "__main__":
                     help="speculative-vs-baseline rows only (merges "
                          "serving/spec_vs_base into BENCH_serving.json; "
                          "honors --smoke)")
+    ap.add_argument("--fleet", action="store_true",
+                    help="data-striped dp2 vs dp1 rows only (needs 8 "
+                         "devices; merges serving/dp2_vs_dp1 into "
+                         "BENCH_serving.json; honors --smoke)")
     args = ap.parse_args()
     if args.mesh:
         print("name,us_per_call,derived")
         run_mesh(smoke=args.smoke)
+    elif args.fleet:
+        print("name,us_per_call,derived")
+        run_fleet(smoke=args.smoke)
     elif args.spec:
         print("name,us_per_call,derived")
         run_spec(smoke=args.smoke)

@@ -24,6 +24,14 @@ per engine step and one verifier pass accepts a prefix — greedy output
 stays token-identical to the non-speculative run, which the example
 checks.
 
+Fleet serving (DESIGN.md §11): ``--dp N`` stripes requests over N decode
+replicas on the "data" mesh axis (composes with ``--tp``; needs dp*tp
+devices) and prints per-replica admission/eviction/peak-block stats;
+``--disagg`` splits prefill onto a dedicated worker pool that hands
+paged KV blocks to the decode replicas; ``--row-parallel`` shards the
+second matmul of each pair (wo/wd) row-parallel with an all-reduce
+epilogue instead of all-gathering activations.
+
     PYTHONPATH=src python examples/serve.py [--tokens 16] [--requests 8]
 """
 import argparse
@@ -39,10 +47,11 @@ from repro.serving import AdapterRuntime, Engine, Request, SpecConfig
 
 
 def serve(cfg, runtime, reqs, *, max_batch, cache_len, out_cap, tp=0,
-          spec=None):
+          dp=0, disagg=False, row_parallel=False, spec=None):
+    mesh = (dp or 1, tp or 1) if (tp or dp or row_parallel) else ()
     sv = ServeConfig(max_batch=max_batch, cache_len=cache_len,
-                     out_cap=out_cap,
-                     mesh_shape=(1, tp) if tp else (),
+                     out_cap=out_cap, mesh_shape=mesh, disagg=disagg,
+                     row_parallel=row_parallel,
                      spec=spec or SpecConfig())
     eng = Engine(cfg, runtime, serve=sv)
     eng.generate(reqs)   # warm-up: compile once + populate the prefix cache
@@ -52,7 +61,18 @@ def serve(cfg, runtime, reqs, *, max_batch, cache_len, out_cap, tp=0,
     toks = sum(len(o) for o in outs)
     # per-generate observability: KV blocks in use, prefix-cache hit rate,
     # admit/evict/COW counts (serving/stats.py)
-    print(f"  stats: {eng.last_stats.summary()}")
+    st = eng.last_stats
+    print(f"  stats: {st.summary()}")
+    if st.data_shards > 1 or disagg:
+        # per-replica placement/pressure figures (replica -1 is the
+        # dedicated prefill worker under --disagg)
+        for r in st.replica_stats:
+            print(f"    replica {r['replica']:>2}: "
+                  f"admitted={r['admitted']} evicted={r['evicted']} "
+                  f"kv_blocks_peak={r['kv_blocks_peak']} "
+                  f"waits={r['backpressure_waits']}"
+                  + (f" handoffs={r['handoffs']}" if "handoffs" in r
+                     else ""))
     return outs, dt, toks
 
 
@@ -65,6 +85,16 @@ def main():
     ap.add_argument("--tp", type=int, default=0,
                     help="tensor-parallel shards on the 'model' mesh "
                          "axis (0 = single device)")
+    ap.add_argument("--dp", type=int, default=0,
+                    help="decode replicas on the 'data' mesh axis — "
+                         "requests are striped by the deterministic "
+                         "router (0 = no data axis; needs dp*tp devices)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregate prefill onto a dedicated worker "
+                         "pool with paged-KV block handoff to decode")
+    ap.add_argument("--row-parallel", action="store_true",
+                    help="row-parallel wo/wd with a psum epilogue "
+                         "instead of the all-gather (needs --tp/--dp)")
     ap.add_argument("--spec-k", type=int, default=0,
                     help="draft tokens per engine step (0 = speculative "
                          "decode off)")
@@ -94,7 +124,8 @@ def main():
             for i in range(args.requests)]
     cache_len = 16 + args.tokens
     kw = dict(max_batch=args.batch, cache_len=cache_len,
-              out_cap=args.tokens, tp=args.tp)
+              out_cap=args.tokens, tp=args.tp, dp=args.dp,
+              disagg=args.disagg, row_parallel=args.row_parallel)
 
     rt_live = AdapterRuntime.build("live", base, spec, adapter, frozen)
     live, t_live, toks = serve(cfg, rt_live, reqs, **kw)

@@ -57,3 +57,14 @@ python benchmarks/run.py --smoke --json
 # serving/tp4_vs_tp1 row into the BENCH_serving.json written above
 XLA_FLAGS=--xla_force_host_platform_device_count=4 \
     python benchmarks/bench_serving.py --mesh --smoke
+
+# fleet-parity job (DESIGN.md §11): data-axis request striping, the
+# disaggregated prefill/decode handoff and the row-parallel TP variant
+# must be token-identical to the single-replica column-parallel engine;
+# an 8-device mesh runs the dp2 x tp4 bench which asserts token identity
+# plus per-replica block accounting and merges the serving/dp2_vs_dp1
+# row into BENCH_serving.json
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m pytest -x -q tests/test_fleet_engine.py
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python benchmarks/bench_serving.py --fleet --smoke

@@ -338,10 +338,36 @@ class ServeConfig:
         by the "model" axis size.
     tp_axis: mesh axis name the KV/head/vocab sharding applies to
         (default "model"; must be one of the serve-mesh axes).
+    router: data-axis request placement policy (serving/router.py,
+        DESIGN.md §11) — "least_loaded" (deterministic: fewest queued
+        tokens, replica index breaks ties) or "round_robin". Only
+        consulted when the mesh's data axis is > 1.
+    disagg: split prefill from decode (DESIGN.md §11): a dedicated
+        prefill worker pool fills paged KV and hands finished sequences
+        to the decode replicas — a host-side block-table transfer plus a
+        batched pool-to-pool block copy (BlockManager.migrate_to), no
+        retrace. Paged mode only.
+    row_parallel: shard the SECOND matmul of each pair — attention
+        ``wo``, FFN ``wd`` (with ``wg``/``wu`` column-parallel) —
+        row-parallel with a psum epilogue instead of all-gathering the
+        activations (DESIGN.md §11). Partial-sum order differs per
+        shard, so this trades the column-only mode's bit-exactness for
+        one fewer all-gather: near-parity (~1e-3), asserted against the
+        default mode as oracle. Needs a serve mesh; incompatible with
+        grouped weight quantization (group_size > 0 — scale groups tile
+        the K axis the row slice cuts).
     spec: SpecConfig — speculative multi-token decode with the
         rank-truncated TT self-drafter (spec.spec_k > 0 enables it;
         DESIGN.md §10). Works in both cache modes, composes with
         quantization and the serve mesh.
+
+    Data parallelism (DESIGN.md §11): ``mesh_shape=(data, model)`` with
+    data > 1 stripes decode slots AND paged-pool blocks across data
+    replicas — max_batch and num_blocks are PER-REPLICA figures, each
+    replica runs its own Scheduler/BlockManager over its local pool, and
+    a front-end Router places requests deterministically, so dp=N greedy
+    decode is token-identical to dp=1 on the same request set. Paged
+    mode only (the dense layout has no block pool to stripe).
     """
     max_batch: int = 4
     cache_len: int = 64
@@ -355,6 +381,9 @@ class ServeConfig:
     quant: QuantConfig = QuantConfig()
     mesh_shape: tuple = ()         # () | (data, model)
     tp_axis: str = "model"
+    router: str = "least_loaded"   # least_loaded | round_robin
+    disagg: bool = False
+    row_parallel: bool = False
     spec: SpecConfig = SpecConfig()
 
     @property
@@ -397,6 +426,29 @@ class ServeConfig:
                 raise ValueError(
                     f"ServeConfig.tp_axis={self.tp_axis!r} must name a "
                     "serve-mesh axis (data | model)")
+            if int(self.mesh_shape[0]) > 1 and self.cache_mode != "paged":
+                raise ValueError(
+                    "data-parallel serving (mesh_shape data axis > 1) "
+                    "stripes the paged block pool across replicas; use "
+                    "cache_mode='paged'")
+        if self.router not in ("least_loaded", "round_robin"):
+            raise ValueError(
+                f"ServeConfig.router={self.router!r}; want "
+                "least_loaded | round_robin")
+        if self.disagg and self.cache_mode != "paged":
+            raise ValueError(
+                "disaggregated prefill/decode hands off paged KV blocks; "
+                "use cache_mode='paged'")
+        if self.row_parallel:
+            if not self.mesh_shape:
+                raise ValueError(
+                    "row_parallel is a serve-TP variant; set mesh_shape")
+            if self.quant.group_size:
+                raise ValueError(
+                    "row_parallel row-slices the K axis of wo/wd, which "
+                    f"grouped quant scales (group_size="
+                    f"{self.quant.group_size}) tile; use per-channel "
+                    "scales (group_size=0)")
         if self.cache_mode == "paged" and self.page_size % 8 != 0:
             raise ValueError(
                 f"page_size={self.page_size} must be a multiple of the "

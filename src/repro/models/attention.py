@@ -26,9 +26,10 @@ import jax.numpy as jnp
 from repro.config.base import ModelConfig
 from repro.kernels import dispatch
 from repro.kernels import quant as quant_lib
-from repro.models.layers import AdapterCtx, adapted_linear, apply_rope
-from repro.sharding import (BATCH, SEQ, current_mesh, maybe_shard,
-                            serve_tp_gather, serve_tp_slice)
+from repro.models.layers import (AdapterCtx, adapted_linear, apply_rope,
+                                 serve_rp_linear)
+from repro.sharding import (BATCH, SEQ, current_mesh, get_serve_rp,
+                            maybe_shard, serve_tp_gather, serve_tp_slice)
 
 NEG_INF = -1e30
 
@@ -204,7 +205,12 @@ def attention(x: jnp.ndarray, w: dict, ctx: AdapterCtx, cfg: ModelConfig, *,
                 cols.append(_softmax_attend(qh, ck, cv, mask, scale))
         out = cols[0] if t == 1 else jnp.concatenate(
             [c.reshape(b, 1, kv_l, g, hd) for c in cols], axis=1)
-        out = serve_tp_gather(out.reshape(b, t, h_l, hd), 2)
+        out = out.reshape(b, t, h_l, hd)
+        # row-parallel serve TP (DESIGN.md §11): keep the local head
+        # group — the wo epilogue below row-slices and psums instead of
+        # all-gathering the per-head outputs here
+        if not get_serve_rp():
+            out = serve_tp_gather(out, 2)
         new_cache = {"k": ck, "v": cv}
     else:
         # ---- train / prefill / cross
@@ -254,8 +260,14 @@ def attention(x: jnp.ndarray, w: dict, ctx: AdapterCtx, cfg: ModelConfig, *,
         elif kv_x is None and cache is None and new_cache is None:
             new_cache = {"k": k, "v": v}     # prefill returns cache to caller
 
-    out = out.reshape(b, t, n_h * hd)
-    y = adapted_linear(out, w["wo"], ctx, f"{prefix}_o")
+    # row-parallel: out still carries only this shard's head group —
+    # contiguous head slices align with contiguous wo rows, so the
+    # row-sliced projection + psum reconstructs the full epilogue
+    out = out.reshape(b, t, -1)
+    if get_serve_rp():
+        y = serve_rp_linear(out, w["wo"], ctx, f"{prefix}_o")
+    else:
+        y = adapted_linear(out, w["wo"], ctx, f"{prefix}_o")
     return maybe_shard(y, BATCH, SEQ, None), new_cache
 
 
@@ -322,6 +334,12 @@ def _paged_attend(x, q, k, v, w, ctx: AdapterCtx, cache: dict,
     out = dispatch.paged_decode_attention(q, ck, cv, block_tables,
                                           positions[:, 0], policy=pol,
                                           **scales)
+    if get_serve_rp():
+        # row-parallel (DESIGN.md §11): skip the head all-gather — wo
+        # row-slices against the local head group and psums partials
+        out = out.reshape(b, t, -1)
+        y = serve_rp_linear(out, w["wo"], ctx, "attn_o")
+        return maybe_shard(y, BATCH, SEQ, None), new_cache
     out = serve_tp_gather(out, 2)
     out = out.reshape(b, t, n_h * hd)
     y = adapted_linear(out, w["wo"], ctx, "attn_o")

@@ -10,7 +10,8 @@ import jax.numpy as jnp
 from repro.kernels import dispatch
 from repro.kernels import quant as quant_lib
 from repro.peft import api as peft_api
-from repro.sharding import BATCH, SEQ, maybe_shard
+from repro.sharding import (BATCH, SEQ, get_serve_rp, get_serve_tp,
+                            maybe_shard, serve_psum, serve_tp_slice)
 
 
 @dataclasses.dataclass
@@ -90,6 +91,109 @@ def adapted_linear(x: jnp.ndarray, w: jnp.ndarray, ctx: AdapterCtx, m: str,
     return y
 
 
+# --------------------------------------------------------------------------
+# row-/column-parallel serve-TP linears (DESIGN.md §11). The default serve
+# TP keeps every matmul full-width and replicated, paying an all-gather of
+# the attention-head outputs instead; behind ServeConfig(row_parallel=True)
+# the engine traces these variants: the FIRST matmul of a pair splits its
+# OUTPUT columns per shard (exact — no reduction order changes) and the
+# SECOND splits its INPUT rows, producing per-shard partial sums that one
+# psum reduces. The psum reorders the K-axis reduction, which is why this
+# mode is near-parity (~1e-3 in bf16) rather than bit-exact — the
+# column-only mode stays the oracle.
+# --------------------------------------------------------------------------
+
+
+def _slice_w(w, axis: int):
+    """This shard's stripe of a (possibly int8-packed) weight leaf along
+    ``axis`` (negative, from the end). Packed leaves slice the int8 cells;
+    per-output-channel scales slice with N (axis -1) and are K-independent
+    under a row slice (axis -2) — grouped scales tile K, so ServeConfig
+    forbids row_parallel with group_size > 0."""
+    if quant_lib.is_quantized(w):
+        q = serve_tp_slice(w["q8"], w["q8"].ndim + axis)
+        s = w["scale"]
+        if axis == -1:
+            s = serve_tp_slice(s, s.ndim - 1)
+        return {"q8": q, "scale": s}
+    return serve_tp_slice(w, w.ndim + axis)
+
+
+def _apply_linear(x, w, form, pol):
+    """base matmul + optional lora-form (A, B, alpha) delta, routed
+    through the fused kernels when the policy allows (the sliced-operand
+    twin of adapted_linear's fused branch; no bias — rp adds it once
+    after the psum)."""
+    wq = quant_lib.is_quantized(w)
+    if form is not None:
+        fa, fb, alpha = form
+        fa, fb = fa.astype(x.dtype), fb.astype(x.dtype)
+        if pol is not None and pol.fused_linear:
+            if fa.ndim == 3:
+                return (dispatch.tt_linear_batched_a_q(
+                    x, w, fa, fb, alpha=alpha, policy=pol) if wq else
+                    dispatch.tt_linear_batched_a(
+                        x, w.astype(x.dtype), fa, fb, alpha=alpha,
+                        policy=pol))
+            return (dispatch.tt_linear_q(x, w, fa, fb, alpha=alpha,
+                                         policy=pol) if wq else
+                    dispatch.tt_linear(x, w.astype(x.dtype), fa, fb,
+                                       alpha=alpha, policy=pol))
+        wd = quant_lib.dequantize(w, x.dtype) if wq else w.astype(x.dtype)
+        y = x @ wd
+        if fa.ndim == 3:        # (B,) task vector: per-slot A operand
+            p = jnp.einsum("btk,bkr->btr", x, fa)
+        else:
+            p = x @ fa
+        return y + alpha * (p @ fb)
+    wd = quant_lib.dequantize(w, x.dtype) if wq else w.astype(x.dtype)
+    return x @ wd
+
+
+def _lora_form(ctx: AdapterCtx, m: str):
+    return (peft_api.lora_form_factors(ctx.spec, ctx.broadcast, ctx.layer,
+                                       m, task=ctx.task)
+            if ctx.spec.adapts(m) else None)
+
+
+def serve_cp_linear(x: jnp.ndarray, w, ctx: AdapterCtx, m: str,
+                    b=None) -> jnp.ndarray:
+    """Column-parallel adapted linear: this shard computes its contiguous
+    N/tp output stripe (weight columns, lora-form B columns and the bias
+    slice with it). Bitwise-exact per column. Falls back to
+    adapted_linear outside a serve-TP trace context."""
+    if get_serve_tp() is None:
+        return adapted_linear(x, w, ctx, m, b)
+    form = _lora_form(ctx, m)
+    if form is not None:
+        fa, fb, alpha = form
+        form = (fa, serve_tp_slice(fb, fb.ndim - 1), alpha)
+    y = _apply_linear(x, _slice_w(w, -1), form, ctx.policy)
+    if b is not None:
+        y = y + serve_tp_slice(b, b.ndim - 1).astype(y.dtype)
+    return y
+
+
+def serve_rp_linear(x: jnp.ndarray, w, ctx: AdapterCtx, m: str,
+                    b=None) -> jnp.ndarray:
+    """Row-parallel adapted linear: ``x`` arrives SHARDED on its last dim
+    (this shard's K/tp contraction rows — attention's local head group,
+    the FFN's local d_ff stripe), the weight's K rows and the lora-form A
+    rows slice to match, and ONE psum reduces the partial outputs; the
+    bias adds once after. Falls back to adapted_linear outside a serve-TP
+    trace context (x is then full-width)."""
+    if get_serve_tp() is None:
+        return adapted_linear(x, w, ctx, m, b)
+    form = _lora_form(ctx, m)
+    if form is not None:
+        fa, fb, alpha = form
+        form = (serve_tp_slice(fa, fa.ndim - 2), fb, alpha)
+    y = serve_psum(_apply_linear(x, _slice_w(w, -2), form, ctx.policy))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
 def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
     h = x.astype(jnp.float32)
     h = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)
@@ -140,7 +244,24 @@ def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
 
 def dense_ffn(x: jnp.ndarray, w: dict, ctx: AdapterCtx, kind: str) -> jnp.ndarray:
     """kind: swiglu | geglu | gelu. Adapted matrix types ffn_up / ffn_down
-    (off by default — paper adapts attention q/v only, App. A.2)."""
+    (off by default — paper adapts attention q/v only, App. A.2).
+
+    Under row-parallel serve TP (DESIGN.md §11) the whole FFN runs
+    megatron-style: wg/wu column-parallel (each shard activates its own
+    d_ff/tp stripe), wd row-parallel with the psum epilogue — the one
+    place the default serve TP leaves real decode FLOPs fully replicated."""
+    if get_serve_rp():
+        if kind in ("swiglu", "geglu"):
+            act = jax.nn.silu if kind == "swiglu" else (
+                lambda v: jax.nn.gelu(v, approximate=True))
+            h = act(serve_cp_linear(x, w["wg"], ctx, "ffn_gate")) \
+                * serve_cp_linear(x, w["wu"], ctx, "ffn_up")
+        elif kind == "gelu":
+            h = jax.nn.gelu(serve_cp_linear(x, w["wu"], ctx, "ffn_up"),
+                            approximate=True)
+        else:
+            raise ValueError(kind)
+        return serve_rp_linear(h, w["wd"], ctx, "ffn_down")
     if kind in ("swiglu", "geglu"):
         act = jax.nn.silu if kind == "swiglu" else (
             lambda v: jax.nn.gelu(v, approximate=True))

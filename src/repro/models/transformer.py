@@ -428,10 +428,28 @@ def copy_cache_block(caches, src, dst):
     ``dst`` across every layer of a paged cache pytree (leaves stacked
     (nb, N, page, KV, hd)). ``src``/``dst`` may be traced scalars; the
     host-side BlockManager decides when a copy is needed
-    (serving/block_manager.py)."""
+    (serving/block_manager.py). A ``dst`` >= N drops the write — the
+    data-striped engine passes the sentinel on replicas that do not own
+    the copy (block ids are replica-local, DESIGN.md §11)."""
     def one(c):
-        return c.at[:, dst].set(c[:, src])
+        return c.at[:, dst].set(c[:, src], mode="drop")
     return jax.tree_util.tree_map(one, caches)
+
+
+def migrate_cache_blocks(dst_caches, src_caches, src_ids, dst_ids):
+    """Batched pool-to-pool block copy: ``dst_caches[:, dst_ids[i]] =
+    src_caches[:, src_ids[i]]`` across every layer — the device half of
+    the disaggregated prefill→decode handoff (DESIGN.md §11; the host
+    half is BlockManager.migrate_to). ``src_ids``/``dst_ids`` are
+    fixed-width (P,) int32 vectors so one trace serves every handoff
+    size: pad entries (and, under data striping, every entry on replicas
+    that do not own the handoff) carry the out-of-pool sentinel and drop
+    via ``mode="drop"`` — their clamped source reads are garbage the
+    dropped write never lands."""
+    def one(d, s):
+        return d.at[:, dst_ids].set(s[:, src_ids].astype(d.dtype),
+                                    mode="drop")
+    return jax.tree_util.tree_map(one, dst_caches, src_caches)
 
 
 def _serve_logits(h, embed):

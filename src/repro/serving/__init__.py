@@ -12,9 +12,12 @@ ServeConfig.mesh_shape — DESIGN.md §9).
                     penalty), applied in-graph
   SpecConfig      — speculative decode with a rank-truncated TT
                     self-drafter (DESIGN.md §10)
-  BlockManager    — host-side KV block pool: free list, refcounts, COW
+  BlockManager    — host-side KV block pool: free list, refcounts, COW,
+                    cross-pool migration (disaggregated handoff)
   PrefixCache     — hash-chained prompt-prefix -> KV-block index
   Scheduler       — FIFO admission gated on free blocks, not free slots
+  Router          — deterministic request placement over data replicas
+                    (least-loaded / round-robin, DESIGN.md §11)
   EngineStats     — per-generate observability (engine.last_stats)
 """
 from repro.config.base import ServeConfig, SpecConfig  # noqa: F401
@@ -24,6 +27,7 @@ from repro.serving.block_manager import (BlockManager,  # noqa: F401
 from repro.serving.engine import (DecodeState, Engine,  # noqa: F401
                                   PagedState, Request, make_prefill,
                                   make_serve_step)
+from repro.serving.router import Router  # noqa: F401
 from repro.serving.sampling import SamplingConfig, sample  # noqa: F401
 from repro.serving.scheduler import Scheduler  # noqa: F401
 from repro.serving.stats import EngineStats  # noqa: F401

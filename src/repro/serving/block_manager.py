@@ -111,6 +111,33 @@ class BlockManager:
         prefix cache) also holds it — otherwise copy-on-write first."""
         return self._ref[bid] == 1
 
+    # -- cross-pool migration (disaggregated prefill, DESIGN.md §11) ---
+    def migrate_to(self, dst: "BlockManager",
+                   blocks: List[int]) -> Optional[List[Tuple[int, int]]]:
+        """Transfer ownership of ``blocks`` from this pool to ``dst``:
+        allocate one twin per block in ``dst`` (refcount 1) and drop this
+        pool's reference. Returns the ``(src, dst)`` id pairs — the
+        device-side batched block copy the engine runs between the two
+        physical pools — or None (nothing moved, no refs touched) when
+        ``dst`` cannot supply enough blocks; the caller retries after
+        decode-side evictions.
+
+        This is the prefill→decode handoff's host half: block ids are
+        pool-local, so the transfer is pure bookkeeping — refcounts move,
+        page order is preserved, and the prefill-side blocks return to
+        their free list (or stay pinned by the prefill prefix cache if it
+        also holds a ref)."""
+        if dst.free_blocks < len(blocks):
+            return None
+        pairs = []
+        for bid in blocks:
+            if self._ref[bid] <= 0:
+                raise ValueError(f"migrate of free block {bid}")
+            pairs.append((bid, dst.alloc()))
+        for bid in blocks:
+            self.deref(bid)
+        return pairs
+
 
 @dataclasses.dataclass
 class _Entry:

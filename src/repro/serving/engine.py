@@ -59,6 +59,25 @@ Architecture (README §Serving, DESIGN.md §7):
     pool), so sharded greedy decode is token-identical to the
     single-device engine and per-shard peak KV bytes are 1/|model| of
     the global figure (``EngineStats.kv_bytes_peak_per_shard``).
+  * FLEET SERVING (DESIGN.md §11): the second mesh axis stripes the
+    engine data-parallel — a host-side ``Router`` places each request on
+    one of |data| decode REPLICAS (deterministic least-loaded or
+    round-robin), each replica owning its own ``max_batch`` slot stripe,
+    its own ``num_blocks`` stripe of the paged pools (block ids are
+    replica-local) and its own Scheduler/BlockManager/PrefixCache. The
+    jitted step graphs shard_map over BOTH axes, so each data shard
+    decodes only its own slot stripe — admit/COW writes on the other
+    replicas drop via out-of-bounds sentinels. ``ServeConfig(disagg=
+    True)`` additionally splits prefill from decode: a prefill WORKER
+    (a second state+pool pair with identical geometry, so it reuses the
+    same compiled graphs — decode_traces stays 1) chunk-prefills
+    prompts and emits the first token, then the host hands the sequence
+    to a decode replica by migrating its prompt blocks pool-to-pool
+    (BlockManager.migrate_to + transformer.migrate_cache_blocks); the
+    prefix cache lives with the prefill pool. ``row_parallel=True``
+    switches wo/wd to row-sharded weights with a psum epilogue
+    (models/layers.py::serve_rp_linear) — near-parity (~1e-3) against
+    the column-only mode, which stays the bit-exact parity oracle.
 
 The engine requires attention-pattern models (stateful mixers — mamba /
 xlstm — have no position-indexed cache to page).
@@ -87,10 +106,12 @@ from repro.serving import sampling as sampling_lib
 from repro.serving import speculative as spec_lib
 from repro.serving.adapter_runtime import AdapterRuntime
 from repro.serving.block_manager import BlockManager, PrefixCache
+from repro.serving.router import Router
 from repro.serving.scheduler import Scheduler
 from repro.serving.stats import EngineStats
 from repro.sharding import (serve_cache_pspec, serve_cache_sharding,
-                            serve_mesh, serve_tp_slice, set_serve_tp)
+                            serve_dp_index, serve_mesh, serve_tp_slice,
+                            set_serve_dp, set_serve_rp, set_serve_tp)
 from repro.sharding.compat import shard_map
 
 
@@ -240,9 +261,20 @@ class Engine:
         # the KV-pool memory claim would quietly evaporate).
         self.mesh = None
         self._tp = 1
+        self._dp = 1                    # data replicas (DESIGN.md §11)
+        self._dp_axis = "data"
         if self.sv.mesh_shape:
             self.mesh = serve_mesh(self.sv.mesh_shape)
             self._tp = int(self.mesh.shape[self.sv.tp_axis])
+            # whichever mesh axis is NOT tensor-parallel stripes the
+            # engine data-parallel: replica slot stripes + pool stripes
+            self._dp_axis = ("data" if self.sv.tp_axis == "model"
+                             else "model")
+            self._dp = int(self.mesh.shape[self._dp_axis])
+            if self._dp > 1 and self.sv.cache_mode != "paged":
+                raise ValueError(
+                    "data-axis request striping needs cache_mode='paged' "
+                    "(replica pool stripes are paged block stripes)")
             for dim, name in ((model_cfg.num_heads, "num_heads"),
                               (model_cfg.num_kv_heads, "num_kv_heads"),
                               (model_cfg.padded_vocab, "padded_vocab")):
@@ -252,6 +284,11 @@ class Engine:
                         f"{self.sv.tp_axis}-axis size {self._tp}; the "
                         "sharded engine slices contiguous head / vocab "
                         "groups per shard")
+            if self.sv.row_parallel and model_cfg.d_ff % self._tp:
+                raise ValueError(
+                    f"row_parallel serving row-slices the ffn-down "
+                    f"weight: d_ff={model_cfg.d_ff} must be divisible by "
+                    f"the {self.sv.tp_axis}-axis size {self._tp}")
         # resolved once; static inside the jitted step graphs. With a
         # (4+1)d adapter the fused decode route is the batched-A kernel
         # (kernels/tt_linear.py::tt_linear_batched_a); paged attention
@@ -274,6 +311,13 @@ class Engine:
                 "kv=int8 quantization needs cache_mode='paged' (the int8 "
                 "cells and their scale pools live in the paged block "
                 "layout)")
+        if self.sv.row_parallel and self.quant.group_size:
+            # config.base catches ServeConfig.quant; the KernelConfig
+            # merge can re-introduce grouped scales, so re-check here
+            raise ValueError(
+                "row_parallel is incompatible with grouped int8 scales "
+                "(group_size > 0): scale groups tile the contraction "
+                "axis the row slices cut; use per-channel group_size=0")
         base = runtime.base
         if self.quant.weights == "int8":
             base = quant_lib.quantize_base(
@@ -324,13 +368,20 @@ class Engine:
         if self.mesh is None:
             return fn
         axis, tp = self.sv.tp_axis, self._tp
+        rp = bool(self.sv.row_parallel)
+        dp = (self._dp_axis, self._dp) if self._dp > 1 else None
 
         def traced(*args):
             set_serve_tp(axis, tp)
+            set_serve_rp(rp)
+            if dp is not None:
+                set_serve_dp(*dp)
             try:
                 return fn(*args)
             finally:
                 set_serve_tp(None)
+                set_serve_rp(False)
+                set_serve_dp(None)
 
         return shard_map(traced, mesh=self.mesh, in_specs=in_specs,
                          out_specs=out_specs, check_vma=False)
@@ -389,16 +440,20 @@ class Engine:
         self._p_tab = (sv.pages_per_request
                        + max(1, -(-self._chunk // self._page)))
         self._lp = sv.cache_len + self._chunk   # prompt buffer width
-        self.bm = BlockManager(self._num_blocks, self._page)
-        self.prefix = PrefixCache(self.bm) if sv.prefix_cache else None
-        self.sched = Scheduler(self.bm, self.prefix, self.last_stats)
+        self._disagg = sv.disagg
+        # data-axis striping (DESIGN.md §11): |data| decode replicas,
+        # each owning max_batch slots and a num_blocks stripe of the
+        # pools; _num_blocks / max_batch are PER-REPLICA figures and all
+        # host-side block ids are replica-local.
+        self._slots = self._dp * self.max_batch
         # any task-adapted matrix (q/v by default) perturbs the residual
         # stream, so layer>=1 prefix KV is task-dependent even where k/v
         # projections are frozen — tasked runtimes key prefix chains per
         # task id; untasked runtimes (one task, merged, none) share one
         # namespace across all requests
         self._kv_tasked = self.rt.tasked
-        self._tables = np.full((self.max_batch, self._p_tab),
+        self._build_host_pools()
+        self._tables = np.full((self._slots, self._p_tab),
                                self._num_blocks, np.int32)
         self._block_bytes = self._kv_bytes(self._page)
         if self._spec_on:
@@ -415,6 +470,17 @@ class Engine:
         self._paged_caches = self._fresh_pools()
         self._draft_pools = (self._fresh_pools(
             num_super_blocks=self._nb_draft) if self._spec_on else None)
+        self._pf_caches = self._pf_draft_pools = None
+        if self._disagg:
+            # the prefill worker's state/pool pair shares every shape
+            # with the decode side, so the jitted graphs below serve
+            # both without retracing (decode_traces stays 1)
+            self._pf_tables = np.full((self._slots, self._p_tab),
+                                      self._num_blocks, np.int32)
+            self._pf_caches = self._fresh_pools()
+            self._pf_draft_pools = (self._fresh_pools(
+                num_super_blocks=self._nb_draft) if self._spec_on
+                else None)
         don = 6 if self._spec_on else 3
         if self.mesh is None:
             self._padmit = jax.jit(self._paged_admit_impl,
@@ -422,41 +488,98 @@ class Engine:
             self._pcow = jax.jit(self._cow_impl, donate_argnums=(0,))
             self._pdecode = jax.jit(self._paged_decode_impl,
                                     donate_argnums=(don,))
+            if self._disagg:
+                self._pmigrate = jax.jit(self._migrate_impl,
+                                         donate_argnums=(0,))
             return
-        # sharded step graphs (DESIGN.md §9): pools shard on the kv-head
-        # axis; every other state leaf — slot scalars, prompt rows, the
-        # PRNG key — and the block tables replicate, so the host-side
-        # admit/evict/COW bookkeeping is identical on every shard.
+        # sharded step graphs (DESIGN.md §9/§11): pools shard on the
+        # kv-head axis over "model" and on the BLOCKS axis over the data
+        # axis; slot-striped state leaves, tables and the loop counters
+        # shard their leading axis over "data" when |data| > 1, so each
+        # replica's while_loop sees only its own slot stripe. On a
+        # single data shard everything below reduces exactly to the §9
+        # layout (replicated slot state, replicated tables).
+        fleet = self._dp > 1
+        dpax = self._dp_axis if fleet else None
+        sl = P(self._dp_axis) if fleet else P()
+        cspec = serve_cache_pspec(self._paged_caches, self.sv.tp_axis,
+                                  dp_axis=dpax)
+        dspec = (serve_cache_pspec(self._draft_pools, self.sv.tp_axis,
+                                   dp_axis=dpax)
+                 if self._spec_on else P())
         sspec = PagedState(
-            tok=P(), prompt=P(), plen=P(), done=P(), remaining=P(),
-            active=P(), widx=P(), out=P(), task=P(), key=P(),
-            caches=serve_cache_pspec(self._paged_caches, self.sv.tp_axis),
-            dcaches=(serve_cache_pspec(self._draft_pools, self.sv.tp_axis)
-                     if self._spec_on else P()),
-            steps=P(), drafted=P(), accepted=P())
+            tok=sl, prompt=sl, plen=sl, done=sl, remaining=sl,
+            active=sl, widx=sl, out=sl, task=sl, key=sl,
+            caches=cspec, dcaches=dspec,
+            steps=sl, drafted=sl, accepted=sl)
         wspec = tuple(self._rep_spec(w) for w in self._step_weights)
         self._padmit = jax.jit(self._shard_mapped(
             self._paged_admit_impl,
-            (sspec, P(), P(), P(), P(), P(), P()), sspec),
+            (sspec, P(), P(), P(), P(), P(), P(), P(), P()), sspec),
             donate_argnums=(0,))
         self._pcow = jax.jit(self._shard_mapped(
-            self._cow_impl, (sspec, P(), P()), sspec), donate_argnums=(0,))
+            self._cow_impl, (sspec, P(), P(), P()), sspec),
+            donate_argnums=(0,))
         self._pdecode = jax.jit(self._shard_mapped(
-            self._paged_decode_impl, (*wspec, sspec, P()), sspec),
+            self._paged_decode_impl, (*wspec, sspec, sl), sspec),
             donate_argnums=(don,))
+        if self._disagg:
+            self._pmigrate = jax.jit(self._shard_mapped(
+                self._migrate_impl,
+                (sspec, cspec, dspec, P(), P(), P()), sspec),
+                donate_argnums=(0,))
+
+    def _build_host_pools(self) -> None:
+        """(Re)build the host-side per-replica admission machinery:
+        request router, block managers, prefix caches and schedulers —
+        one of each per data replica, plus a parallel prefill-worker set
+        under disaggregation (where the prefix cache lives with the
+        PREFILL pool and decode replicas skip registration). ``bm`` /
+        ``prefix`` / ``sched`` stay as replica-0 aliases for callers
+        from the single-replica era."""
+        sv = self.sv
+        self.router = Router(self._dp, sv.router)
+        self.bms = [BlockManager(self._num_blocks, self._page)
+                    for _ in range(self._dp)]
+        if self._disagg:
+            self.prefixes = [None] * self._dp
+            self._pf_bms = [BlockManager(self._num_blocks, self._page)
+                            for _ in range(self._dp)]
+            self._pf_prefixes = [
+                PrefixCache(bm) if sv.prefix_cache else None
+                for bm in self._pf_bms]
+            self._pf_scheds = [
+                Scheduler(bm, px, self.last_stats)
+                for bm, px in zip(self._pf_bms, self._pf_prefixes)]
+        else:
+            self.prefixes = [PrefixCache(bm) if sv.prefix_cache else None
+                             for bm in self.bms]
+            self._pf_bms, self._pf_prefixes, self._pf_scheds = [], [], []
+        self.scheds = [Scheduler(bm, px, self.last_stats)
+                       for bm, px in zip(self.bms, self.prefixes)]
+        self.bm = self.bms[0]
+        self.prefix = (self._pf_prefixes[0] if self._disagg
+                       else self.prefixes[0])
+        self.sched = (self._pf_scheds[0] if self._disagg
+                      else self.scheds[0])
 
     def _fresh_pools(self, num_super_blocks: Optional[int] = None):
         """Zero paged K/V (+ int8 scale) pools, kv-head-sharded over the
         serve mesh when one is configured (the host-side BlockManager is
         shard-agnostic: one block id addresses row ``bid`` of every
-        shard's pool). ``num_super_blocks`` sizes the speculative
-        drafter's parallel pool region."""
+        shard's pool). With |data| > 1 the pool holds dp stripes of
+        ``_num_blocks`` blocks, sharded on the blocks axis — each
+        replica's manager addresses its local stripe with local ids.
+        ``num_super_blocks`` sizes the speculative drafter's parallel
+        pool region."""
         caches = transformer.init_paged_caches(
-            self.cfg, self._num_blocks, self._page, self.cfg.compute_dtype,
-            kv_quant=self._kv_quant, num_super_blocks=num_super_blocks)
+            self.cfg, self._dp * self._num_blocks, self._page,
+            self.cfg.compute_dtype, kv_quant=self._kv_quant,
+            num_super_blocks=num_super_blocks)
         if self.mesh is not None:
             caches = jax.device_put(caches, serve_cache_sharding(
-                caches, self.mesh, self.sv.tp_axis))
+                caches, self.mesh, self.sv.tp_axis,
+                dp_axis=self._dp_axis if self._dp > 1 else None))
         return caches
 
     def _new_stats(self, requests: int = 0) -> EngineStats:
@@ -494,14 +617,18 @@ class Engine:
     def _reset_paged_pool(self) -> None:
         """Drop every block (and the prefix index) — used when a failed
         generate leaves slot refcounts or donated buffers inconsistent."""
-        self.bm = BlockManager(self._num_blocks, self._page)
-        self.prefix = PrefixCache(self.bm) if self.sv.prefix_cache else None
-        self.sched = Scheduler(self.bm, self.prefix, self.last_stats)
+        self._build_host_pools()
         self._tables[:] = self._num_blocks
         self._paged_caches = self._fresh_pools()
         if self._spec_on:
             self._draft_pools = self._fresh_pools(
                 num_super_blocks=self._nb_draft)
+        if self._disagg:
+            self._pf_tables[:] = self._num_blocks
+            self._pf_caches = self._fresh_pools()
+            if self._spec_on:
+                self._pf_draft_pools = self._fresh_pools(
+                    num_super_blocks=self._nb_draft)
 
     # ------------------------------------------------------------------
     # dense mode: jitted pieces (weights passed as args so they are never
@@ -552,6 +679,54 @@ class Engine:
             out=state.out.at[slot].set(0).at[slot, 0].set(t0),
             task=state.task.at[slot].set(task_id),
             key=key, caches=caches)
+
+    # -- fleet helpers (DESIGN.md §11) ---------------------------------
+
+    def _key_of(self, s):
+        """The (2,)-shaped PRNG key for THIS shard's loop: with |data| >
+        1 the state carries one key row per replica (their loops may run
+        different iteration counts, so a replicated key would desync)."""
+        return s.key[0] if self._dp > 1 else s.key
+
+    def _wrap_key(self, k):
+        """Inverse of ``_key_of`` for the loop-carried update."""
+        return k[None] if self._dp > 1 else k
+
+    def _fleet_key(self, key):
+        """Initial state key: per-replica fold_in rows with |data| > 1
+        (distinct sampling streams per replica), the plain key otherwise
+        — the single-replica engines keep their exact historical
+        draws."""
+        if self._dp > 1:
+            return jax.vmap(lambda i: jax.random.fold_in(key, i))(
+                jnp.arange(self._dp))
+        return key
+
+    def _zero_ctr(self):
+        """Loop counter zero: one int32 per data replica (counts diverge
+        across replica loops), a scalar on a single replica."""
+        return (jnp.zeros((self._dp,), jnp.int32) if self._dp > 1
+                else jnp.int32(0))
+
+    def _loop_cond(self, active0):
+        """while_loop predicate: run until some slot's active set changes.
+        With |data| > 1 the predicate is made GLOBAL via psums over the
+        data axis, so every replica executes the same iteration count —
+        divergent per-replica trip counts around the in-loop "model"
+        collectives are never relied on. A replica whose stripe is idle
+        spins harmlessly: its rows are inactive, so every write drops."""
+        if self._dp == 1:
+            def cond(s):
+                return jnp.any(s.active) & jnp.all(s.active == active0)
+            return cond
+
+        def cond(s):
+            alive = jnp.any(s.active).astype(jnp.int32)
+            changed = jnp.any(s.active != active0).astype(jnp.int32)
+            alive = jax.lax.psum(alive, self._dp_axis)
+            changed = jax.lax.psum(changed, self._dp_axis)
+            return (alive > 0) & (changed == 0)
+        return cond
 
     # -- speculative building blocks (shared by both cache modes) ------
 
@@ -695,35 +870,66 @@ class Engine:
     # ------------------------------------------------------------------
 
     def _paged_admit_impl(self, state: PagedState, slot, prompt_row, plen,
-                          done0, n_new, task_id) -> PagedState:
-        """Place request metadata into slot ``slot``. No prefill here —
-        the decode loop's chunked-prefill path consumes the prompt
-        starting at ``done0`` (tokens [0, done0) came from the prefix
-        cache; the scheduler guarantees done0 <= plen - 1 so the last
-        prompt token always runs through the model for its logits)."""
+                          done0, n_new, task_id, tok0, w0) -> PagedState:
+        """Place request metadata into slot ``slot`` (a GLOBAL slot id —
+        each data replica rewrites it to a local row and non-owners drop
+        the writes via the out-of-bounds sentinel). No prefill here — the
+        decode loop's chunked-prefill path consumes the prompt starting
+        at ``done0`` (tokens [0, done0) came from the prefix cache; the
+        scheduler guarantees done0 <= plen - 1 so the last prompt token
+        always runs through the model for its logits). The disaggregated
+        handoff re-admits a prefilled sequence with ``done0 == plen``,
+        its already-emitted first token as ``tok0`` and ``w0 = 1`` so
+        the slot decodes immediately; plain admissions pass
+        ``tok0 = w0 = 0``."""
+        b = self.max_batch
+        ls = slot - serve_dp_index() * b
+        ls = jnp.where((ls >= 0) & (ls < b), ls, b)     # non-owner: drop
         return state._replace(
-            prompt=jax.lax.dynamic_update_slice(
-                state.prompt, prompt_row[None], (slot, 0)),
-            plen=state.plen.at[slot].set(plen),
-            done=state.done.at[slot].set(done0),
-            remaining=state.remaining.at[slot].set(n_new),
-            active=state.active.at[slot].set(True),
-            widx=state.widx.at[slot].set(0),
-            out=state.out.at[slot].set(0),
-            task=state.task.at[slot].set(task_id))
+            prompt=state.prompt.at[ls].set(prompt_row, mode="drop"),
+            plen=state.plen.at[ls].set(plen, mode="drop"),
+            done=state.done.at[ls].set(done0, mode="drop"),
+            remaining=state.remaining.at[ls].set(n_new, mode="drop"),
+            active=state.active.at[ls].set(True, mode="drop"),
+            widx=state.widx.at[ls].set(w0, mode="drop"),
+            out=state.out.at[ls].set(0, mode="drop")
+                     .at[ls, 0].set(jnp.where(w0 > 0, tok0, 0),
+                                    mode="drop"),
+            tok=state.tok.at[ls, 0].set(tok0, mode="drop"),
+            task=state.task.at[ls].set(task_id, mode="drop"))
 
-    def _cow_impl(self, state: PagedState, src, dst) -> PagedState:
+    def _cow_impl(self, state: PagedState, src, dst, rep) -> PagedState:
         """Copy-on-write one physical block (all layers) — scheduled at
         admit time so the decode loop never writes a shared block. The
+        block ids are LOCAL to replica ``rep``'s pool stripe; the other
+        replicas redirect the write to the sentinel row and drop it. The
         drafter pools are indexed by the SAME block tables, so the copy
         covers them too: shared prefix blocks carry the drafter's KV
         (task-namespaced prefix keys guarantee the same drafter weights
         produced it)."""
+        dst = jnp.where(rep == serve_dp_index(), dst, self._num_blocks)
         repl = dict(caches=transformer.copy_cache_block(state.caches,
                                                         src, dst))
         if self._spec_on:
             repl["dcaches"] = transformer.copy_cache_block(state.dcaches,
                                                            src, dst)
+        return state._replace(**repl)
+
+    def _migrate_impl(self, state: PagedState, src_caches, src_dcaches,
+                      src_ids, dst_ids, rep) -> PagedState:
+        """Disaggregated handoff, device half: batched copy of a finished
+        prefill's prompt blocks from the prefill worker's pools into the
+        decode pools (DESIGN.md §11). ``src_ids``/``dst_ids`` are
+        fixed-width (p_tab,) local-id vectors padded with the sentinel;
+        replicas other than ``rep`` sentinel the whole destination
+        vector, so only the owning stripe lands writes."""
+        dst_ids = jnp.where(rep == serve_dp_index(), dst_ids,
+                            self._num_blocks)
+        repl = dict(caches=transformer.migrate_cache_blocks(
+            state.caches, src_caches, src_ids, dst_ids))
+        if self._spec_on:
+            repl["dcaches"] = transformer.migrate_cache_blocks(
+                state.dcaches, src_dcaches, src_ids, dst_ids)
         return state._replace(**repl)
 
     def _paged_decode_impl(self, base, bc, pl, *rest) -> PagedState:
@@ -760,9 +966,7 @@ class Engine:
         # the sentinel row -> writes drop, reads return garbage the mask
         # already excludes
         oob = jnp.int32(self._p_tab * self._page)
-
-        def cond(s):
-            return jnp.any(s.active) & jnp.all(s.active == active0)
+        cond = self._loop_cond(active0)
 
         def body(s):
             is_pf = s.done < s.plen
@@ -777,7 +981,7 @@ class Engine:
             logits, caches = transformer.paged_step(
                 base, self.cfg, self.rt.spec, bc, pl, toks, s.caches,
                 tables, s.done, ntok - 1, task=task, policy=self.policy)
-            key, sub = jax.random.split(s.key)
+            key, sub = jax.random.split(self._key_of(s))
             pm = (sampling_lib.history_mask(s.out, s.widx, V)
                   if rp_on else None)
             nxt = sampling_lib.sample(logits, sub, self.sampling,
@@ -794,8 +998,9 @@ class Engine:
                 tok=tok, prompt=s.prompt, plen=s.plen, done=new_done,
                 remaining=s.remaining - adv,
                 active=s.active & ((s.remaining > 1) | ~produced),
-                widx=s.widx + adv, out=out, task=s.task, key=key,
-                caches=caches, dcaches=s.dcaches, steps=s.steps + 1,
+                widx=s.widx + adv, out=out, task=s.task,
+                key=self._wrap_key(key), caches=caches,
+                dcaches=s.dcaches, steps=s.steps + 1,
                 drafted=s.drafted, accepted=s.accepted)
 
         def spec_body(s):
@@ -806,7 +1011,7 @@ class Engine:
                     s.prompt, start)
             ntok_pf = jnp.minimum(C, s.plen - s.done)
             task = s.task if self.rt.tasked else None
-            keys = jax.random.split(s.key, K + 3)
+            keys = jax.random.split(self._key_of(s), K + 3)
             base_mask = (sampling_lib.history_mask(s.out, s.widx, V)
                          if rp_on else None)
             zero = jnp.zeros_like(s.done)
@@ -889,9 +1094,9 @@ class Engine:
                 tok=tok, prompt=s.prompt, plen=s.plen, done=new_done,
                 remaining=s.remaining - m,
                 active=s.active & ((s.remaining > m) | (m == 0)),
-                widx=s.widx + m, out=out, task=s.task, key=keys[0],
-                caches=caches, dcaches=dc, steps=s.steps + 1,
-                drafted=s.drafted + K * nact,
+                widx=s.widx + m, out=out, task=s.task,
+                key=self._wrap_key(keys[0]), caches=caches, dcaches=dc,
+                steps=s.steps + 1, drafted=s.drafted + K * nact,
                 accepted=s.accepted + jnp.sum(jnp.where(dec_act, n, 0)))
 
         return jax.lax.while_loop(
@@ -940,23 +1145,39 @@ class Engine:
             steps=jnp.int32(0), drafted=jnp.int32(0),
             accepted=jnp.int32(0))
 
-    def init_paged_state(self, key) -> PagedState:
-        """Fresh per-slot state over the engine's PERSISTENT block pools
-        (ownership of the pool buffers moves into the donated state; the
-        host loop hands them back at the end of generate)."""
-        b, cap = self.max_batch, self.out_cap
+    def _blank_paged_state(self, key, caches, dcaches) -> PagedState:
+        """Zeroed slot state over ``caches`` — the slot axis spans ALL
+        data replicas (``_slots = |data| * max_batch``); the PRNG key and
+        loop counters gain a per-replica leading axis with |data| > 1."""
+        b, cap = self._slots, self.out_cap
         z = functools.partial(jnp.zeros, dtype=jnp.int32)
-        caches, self._paged_caches = self._paged_caches, None
-        dcaches = None
-        if self._spec_on:
-            dcaches, self._draft_pools = self._draft_pools, None
         return PagedState(
             tok=z((b, 1)), prompt=z((b, self._lp)), plen=z((b,)),
             done=z((b,)), remaining=z((b,)),
             active=jnp.zeros((b,), bool), widx=z((b,)), out=z((b, cap)),
-            task=z((b,)), key=key, caches=caches, dcaches=dcaches,
-            steps=jnp.int32(0), drafted=jnp.int32(0),
-            accepted=jnp.int32(0))
+            task=z((b,)), key=self._fleet_key(key), caches=caches,
+            dcaches=dcaches, steps=self._zero_ctr(),
+            drafted=self._zero_ctr(), accepted=self._zero_ctr())
+
+    def init_paged_state(self, key) -> PagedState:
+        """Fresh per-slot state over the engine's PERSISTENT block pools
+        (ownership of the pool buffers moves into the donated state; the
+        host loop hands them back at the end of generate)."""
+        caches, self._paged_caches = self._paged_caches, None
+        dcaches = None
+        if self._spec_on:
+            dcaches, self._draft_pools = self._draft_pools, None
+        return self._blank_paged_state(key, caches, dcaches)
+
+    def _init_pf_state(self, key) -> PagedState:
+        """Fresh PREFILL-WORKER slot state over the prefill pools
+        (DESIGN.md §11) — structurally identical to the decode state, so
+        every jitted step graph serves both workers from one trace."""
+        caches, self._pf_caches = self._pf_caches, None
+        dcaches = None
+        if self._spec_on:
+            dcaches, self._pf_draft_pools = self._pf_draft_pools, None
+        return self._blank_paged_state(key, caches, dcaches)
 
     def _bucket(self, plen: int) -> int:
         for bkt in self.prompt_buckets:
@@ -1071,91 +1292,308 @@ class Engine:
         return results  # type: ignore[return-value]
 
     def _read_spec_stats(self, state, st) -> None:
-        """Fold the loop-carried speculation counters into EngineStats."""
+        """Fold the loop-carried speculation counters into EngineStats.
+        With |data| > 1 the counters are per-replica rows: the lockstep
+        global loop predicate makes steps identical across replicas
+        (max == any row), while drafted/accepted count each replica's
+        own rows and sum."""
         st.spec_k = self.spec.spec_k
-        st.spec_steps = int(np.asarray(state.steps))
-        st.draft_tokens = int(np.asarray(state.drafted))
-        st.accepted_tokens = int(np.asarray(state.accepted))
+        st.spec_steps = int(np.asarray(state.steps).max())
+        st.draft_tokens = int(np.asarray(state.drafted).sum())
+        st.accepted_tokens = int(np.asarray(state.accepted).sum())
 
     # -- paged ---------------------------------------------------------
 
     def _generate_paged(self, requests, key) -> List[np.ndarray]:
         st = self.last_stats
         st.page_size = self._page
-        st.num_blocks = self._num_blocks
+        st.num_blocks = (self._num_blocks * self._dp
+                         * (2 if self._disagg else 1))
         st.block_bytes = self._block_bytes
-        self.sched.stats = st           # block/prefix counters land here
+        st.data_shards = self._dp
+        for sc in self.scheds + self._pf_scheds:
+            sc.stats = st               # block/prefix counters land here
         state = self.init_paged_state(key)
         self._tables[:] = self._num_blocks
-        pending = collections.deque(enumerate(requests))
+        pf_state = None
+        if self._disagg:
+            pf_state = self._init_pf_state(jax.random.fold_in(key, 1))
+            self._pf_tables[:] = self._num_blocks
+        # deterministic placement: the router stripes every request over
+        # the data replicas up front (per-replica FIFO order = arrival
+        # order), so dp decode is reproducible run to run
+        pendings = [collections.deque() for _ in range(self._dp)]
+        rcost = {}
+        for idx, req in enumerate(requests):
+            prompt, plen = self._validate_request(req)
+            cost = plen + req.max_new_tokens
+            r = self.router.route(cost)
+            rcost[idx] = (r, cost)
+            pendings[r].append((idx, req, prompt, plen))
         results: List[Optional[np.ndarray]] = [None] * len(requests)
-        meta: List[Optional[dict]] = [None] * self.max_batch
         try:
-            state = self._paged_loop(state, pending, results, meta, st)
+            state, pf_state = self._paged_loop(state, pf_state, pendings,
+                                               rcost, results, st)
         except BaseException:
             self._reset_paged_pool()    # slot refs / donated pool are gone
             raise
         self._paged_caches = state.caches
         if self._spec_on:
             self._draft_pools = state.dcaches
+        if self._disagg:
+            self._pf_caches = pf_state.caches
+            if self._spec_on:
+                self._pf_draft_pools = pf_state.dcaches
         self._read_spec_stats(state, st)
         return results  # type: ignore[return-value]
 
-    def _paged_loop(self, state, pending, results, meta,
-                    st) -> PagedState:
-        while pending or any(m is not None for m in meta):
-            # admit while blocks AND slots allow (strict FIFO: a blocked
-            # head waits for evictions rather than being overtaken)
-            for slot in range(self.max_batch):
-                if meta[slot] is not None or not pending:
-                    continue
-                idx, req = pending[0]
-                prompt, plen = self._validate_request(req)
-                ns = req.task if self._kv_tasked else None
-                plan = self.sched.plan(prompt.tolist(),
-                                       req.max_new_tokens, namespace=ns)
-                if plan is None:
-                    break               # backpressure: out of KV blocks
-                pending.popleft()
-                if plan.cow is not None:
-                    state = self._pcow(state, jnp.int32(plan.cow[0]),
-                                       jnp.int32(plan.cow[1]))
-                row = np.full((self._p_tab,), self._num_blocks, np.int32)
-                row[:len(plan.blocks)] = plan.blocks
-                self._tables[slot] = row
-                prow = np.zeros((self._lp,), np.int32)
-                prow[:plen] = prompt
-                state = self._padmit(
-                    state, jnp.int32(slot), jnp.asarray(prow),
-                    jnp.int32(plen), jnp.int32(plan.n_cached),
-                    jnp.int32(req.max_new_tokens), jnp.int32(req.task))
-                meta[slot] = dict(idx=idx, prompt=prompt,
-                                  blocks=plan.blocks, ns=ns)
-            if not any(m is not None for m in meta):
-                # no slot busy and the head still does not fit: the pool
-                # (even fully drained of cached blocks) cannot hold it
-                raise RuntimeError(
-                    "paged admission deadlock: request needs more KV "
-                    "blocks than the pool can ever free")
-            # run the co-batched prefill/decode loop until a slot finishes
+    def _paged_loop(self, state, pf_state, pendings, rcost, results, st):
+        """Host half of fleet serving: per-replica admission (straight
+        into decode slots, or into the prefill worker under
+        disaggregation), the prefill→decode block handoff, stepping the
+        worker loops, and harvesting finished slots. Returns the final
+        (decode, prefill) states so generate can hand the pool buffers
+        back."""
+        R, B = self._dp, self.max_batch
+        meta: List[Optional[dict]] = [None] * self._slots
+        pf_meta: List[Optional[dict]] = [None] * self._slots
+        handoffs = [collections.deque() for _ in range(R)]
+        rstat = [dict(replica=r, admitted=0, evicted=0, queue_depth=0,
+                      backpressure_waits=0, kv_blocks_peak=0)
+                 for r in range(R)]
+        pf_stat = (dict(replica=-1, admitted=0, evicted=0, queue_depth=0,
+                        backpressure_waits=0, kv_blocks_peak=0,
+                        handoffs=0) if self._disagg else None)
+        ttft, tpot = [], []
+
+        def note_peaks(r):
+            """Per-replica and global peak-block accounting (manual here
+            because handoff allocations bypass Scheduler.plan)."""
+            rstat[r]["kv_blocks_peak"] = max(
+                rstat[r]["kv_blocks_peak"], self.bms[r].used_blocks)
+            if pf_stat is not None:
+                pf_stat["kv_blocks_peak"] = max(
+                    pf_stat["kv_blocks_peak"],
+                    max(bm.used_blocks for bm in self._pf_bms))
+            used = sum(bm.used_blocks
+                       for bm in self.bms + self._pf_bms)
+            st.kv_blocks_peak = max(st.kv_blocks_peak, used)
+
+        while (any(pendings) or any(handoffs)
+               or any(m is not None for m in meta)
+               or any(m is not None for m in pf_meta)):
+            progressed = False
+            # ---- admission: pending -> prefill worker (disagg) or
+            # straight into this replica's decode slots. Strict FIFO per
+            # replica: a blocked head waits for evictions rather than
+            # being overtaken.
+            for r in range(R):
+                scheds = self._pf_scheds if self._disagg else self.scheds
+                for slot in range(r * B, (r + 1) * B):
+                    mrow = pf_meta if self._disagg else meta
+                    if mrow[slot] is not None or not pendings[r]:
+                        continue
+                    idx, req, prompt, plen = pendings[r][0]
+                    ns = req.task if self._kv_tasked else None
+                    # the prefill worker computes prompt KV only (its one
+                    # emission needs no extra page), so plan with 0 new
+                    # tokens there; decode-side pages come at handoff
+                    plan = scheds[r].plan(
+                        prompt.tolist(),
+                        0 if self._disagg else req.max_new_tokens,
+                        namespace=ns)
+                    if plan is None:    # backpressure: out of KV blocks
+                        (pf_stat if self._disagg
+                         else rstat[r])["backpressure_waits"] += 1
+                        break
+                    pendings[r].popleft()
+                    progressed = True
+                    target = pf_state if self._disagg else state
+                    if plan.cow is not None:
+                        target = self._pcow(
+                            target, jnp.int32(plan.cow[0]),
+                            jnp.int32(plan.cow[1]), jnp.int32(r))
+                    tab = (self._pf_tables if self._disagg
+                           else self._tables)
+                    row = np.full((self._p_tab,), self._num_blocks,
+                                  np.int32)
+                    row[:len(plan.blocks)] = plan.blocks
+                    tab[slot] = row
+                    prow = np.zeros((self._lp,), np.int32)
+                    prow[:plen] = prompt
+                    target = self._padmit(
+                        target, jnp.int32(slot), jnp.asarray(prow),
+                        jnp.int32(plen), jnp.int32(plan.n_cached),
+                        jnp.int32(1 if self._disagg
+                                  else req.max_new_tokens),
+                        jnp.int32(req.task), jnp.int32(0), jnp.int32(0))
+                    mrow[slot] = dict(idx=idx, req=req, prompt=prompt,
+                                      plen=plen, blocks=plan.blocks,
+                                      ns=ns, t_admit=time.perf_counter(),
+                                      t_first=None)
+                    if self._disagg:
+                        pf_state = target
+                        pf_stat["admitted"] += 1
+                    else:
+                        state = target
+                        rstat[r]["admitted"] += 1
+                note_peaks(r)
+            # ---- handoff: finished prefills -> decode slots ----
+            if self._disagg:
+                for r in range(R):
+                    while handoffs[r]:
+                        h = handoffs[r][0]
+                        slot = next(
+                            (s for s in range(r * B, (r + 1) * B)
+                             if meta[s] is None), None)
+                        total = -(-(h["plen"] + h["max_new"])
+                                  // self._page)
+                        if (slot is None
+                                or self.bms[r].free_blocks < total):
+                            rstat[r]["backpressure_waits"] += 1
+                            st.backpressure_waits += 1
+                            break       # retried after the next eviction
+                        handoffs[r].popleft()
+                        progressed = True
+                        npf = len(h["blocks"])
+                        pairs = self._pf_bms[r].migrate_to(
+                            self.bms[r], h["blocks"])
+                        assert pairs is not None    # free checked above
+                        dst = ([d for _, d in pairs]
+                               + [self.bms[r].alloc()
+                                  for _ in range(total - npf)])
+                        src_ids = np.full((self._p_tab,),
+                                          self._num_blocks, np.int32)
+                        dst_ids = src_ids.copy()
+                        src_ids[:npf] = h["blocks"]
+                        dst_ids[:npf] = dst[:npf]
+                        state = self._pmigrate(
+                            state, pf_state.caches,
+                            (pf_state.dcaches if self._spec_on
+                             else jnp.int32(0)),
+                            jnp.asarray(src_ids), jnp.asarray(dst_ids),
+                            jnp.int32(r))
+                        row = np.full((self._p_tab,), self._num_blocks,
+                                      np.int32)
+                        row[:total] = dst
+                        self._tables[slot] = row
+                        prow = np.zeros((self._lp,), np.int32)
+                        prow[:h["plen"]] = h["prompt"]
+                        # done0 == plen and w0 = 1: the slot decodes
+                        # immediately from the migrated prompt KV, with
+                        # the prefill-emitted t0 already in the output
+                        state = self._padmit(
+                            state, jnp.int32(slot), jnp.asarray(prow),
+                            jnp.int32(h["plen"]), jnp.int32(h["plen"]),
+                            jnp.int32(h["max_new"] - 1),
+                            jnp.int32(h["task"]), jnp.int32(h["t0"]),
+                            jnp.int32(1))
+                        rstat[r]["admitted"] += 1
+                        pf_stat["handoffs"] += 1
+                        meta[slot] = dict(
+                            idx=h["idx"], prompt=h["prompt"],
+                            blocks=dst, ns=h["ns"],
+                            t_admit=h["t_admit"], t_first=h["t_first"])
+                    note_peaks(r)
+            # ---- step the worker loops until some slot finishes ----
+            stepped = False
+            if (self._disagg
+                    and bool(np.any(np.asarray(pf_state.active)))):
+                pf_state = self._pdecode(*self._step_weights, pf_state,
+                                         jnp.asarray(self._pf_tables))
+                st.decode_calls += 1
+                stepped = True
             if bool(np.any(np.asarray(state.active))):
                 state = self._pdecode(*self._step_weights, state,
                                       jnp.asarray(self._tables))
                 st.decode_calls += 1
+                stepped = True
+            # ---- harvest prefill completions -> handoff queue ----
+            if self._disagg:
+                pactive = np.asarray(pf_state.active)
+                pout = np.asarray(pf_state.out)
+                t = time.perf_counter()
+                for slot in range(self._slots):
+                    m = pf_meta[slot]
+                    if m is None or pactive[slot]:
+                        continue
+                    progressed = True
+                    r = slot // B
+                    req = m["req"]
+                    t0 = int(pout[slot, 0])
+                    # prompt KV is complete: index it for prefix reuse
+                    # BEFORE the handoff derefs the slot's refs, so the
+                    # cached entries stay pinned in the prefill pool
+                    if self._pf_prefixes[r] is not None:
+                        self._pf_prefixes[r].register(
+                            m["prompt"], m["blocks"], namespace=m["ns"])
+                    self._pf_tables[slot] = self._num_blocks
+                    pf_meta[slot] = None
+                    pf_stat["evicted"] += 1
+                    ttft.append(t - m["t_admit"])
+                    if req.max_new_tokens == 1:
+                        # the prefill emission IS the whole output
+                        results[m["idx"]] = np.asarray([t0], np.int32)
+                        self._pf_scheds[r].release(
+                            m["prompt"], m["blocks"], namespace=m["ns"],
+                            register=False)
+                        rr, cost = rcost[m["idx"]]
+                        self.router.complete(rr, cost)
+                        continue
+                    handoffs[r].append(dict(
+                        idx=m["idx"], prompt=m["prompt"],
+                        plen=m["plen"], blocks=m["blocks"], ns=m["ns"],
+                        task=req.task, max_new=req.max_new_tokens,
+                        t0=t0, t_admit=m["t_admit"], t_first=t))
+            # ---- harvest decode completions ----
             active = np.asarray(state.active)
             out = np.asarray(state.out)
             widx = np.asarray(state.widx)
-            for slot in range(self.max_batch):
+            t = time.perf_counter()
+            for slot in range(self._slots):
                 m = meta[slot]
-                if m is not None and not active[slot]:
-                    results[m["idx"]] = out[slot, : int(widx[slot])].copy()
-                    # prompt pages are fully computed now: index them for
-                    # prefix reuse, return the rest to the free list
-                    self.sched.release(m["prompt"], m["blocks"],
-                                       namespace=m["ns"])
-                    self._tables[slot] = self._num_blocks
-                    meta[slot] = None
-        return state
+                if m is None:
+                    continue
+                if m["t_first"] is None and widx[slot] > 0:
+                    m["t_first"] = t
+                    ttft.append(t - m["t_admit"])
+                if active[slot]:
+                    continue
+                progressed = True
+                r = slot // B
+                ntok = int(widx[slot])
+                results[m["idx"]] = out[slot, :ntok].copy()
+                # prompt pages are fully computed now: index them for
+                # prefix reuse (unless the prefill pool's cache already
+                # did), return the rest to the free list
+                self.scheds[r].release(m["prompt"], m["blocks"],
+                                       namespace=m["ns"],
+                                       register=not self._disagg)
+                self._tables[slot] = self._num_blocks
+                rstat[r]["evicted"] += 1
+                # phase split is resolvable only when the first token was
+                # observed at an earlier loop exit than the completion
+                if (m["t_first"] is not None and ntok > 1
+                        and m["t_first"] < t):
+                    tpot.append((t - m["t_first"]) / (ntok - 1))
+                rr, cost = rcost[m["idx"]]
+                self.router.complete(rr, cost)
+                meta[slot] = None
+            if not (progressed or stepped):
+                # nothing decoded, admitted, handed off or harvested:
+                # the queued work can never fit (classic case: a request
+                # needing more KV blocks than the pool can ever free)
+                raise RuntimeError(
+                    "paged admission deadlock: request needs more KV "
+                    "blocks than the pool can ever free")
+        for r in range(R):
+            rstat[r]["queue_depth"] = len(pendings[r])
+        if ttft:
+            st.ttft_s = sum(ttft) / len(ttft)
+        if tpot:
+            st.tpot_s = sum(tpot) / len(tpot)
+        st.replica_stats = rstat + ([pf_stat] if pf_stat else [])
+        return state, pf_state
 
 
 # ---------------------------------------------------------------------------

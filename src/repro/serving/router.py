@@ -1,0 +1,78 @@
+"""Front-end request router for data-parallel serving (DESIGN.md §11).
+
+With ``ServeConfig(mesh_shape=(data, model))`` and data > 1 the engine
+runs one DECODE REPLICA per data shard: each replica owns a private
+stripe of the decode slots, its own Scheduler/BlockManager over its own
+block-pool stripe, and its own admission queue. The Router is the seam
+in front of those queues: it places every incoming request on exactly
+one replica, deterministically, so a replayed request set routes — and
+therefore schedules, prefix-shares and decodes — identically every time
+(the dp2-vs-dp1 token-identity tests lean on this).
+
+Policies (ServeConfig.router):
+
+  * ``least_loaded`` (default) — place on the replica with the fewest
+    OUTSTANDING TOKENS (sum of prompt + max_new of its unfinished
+    requests); ties break toward the lowest replica index. Pure
+    host-side counting: ``route`` charges the request's token cost,
+    ``complete`` refunds it at eviction.
+  * ``round_robin`` — request i goes to replica i mod n, load ignored.
+
+The router never touches device state and never reorders requests
+within a replica (per-replica admission stays strict FIFO — the
+Scheduler's no-starvation policy is preserved per stripe). The exemplar
+seam is NeMo's deploy-time router/worker split; here both sides live in
+one process and the "network" is a pair of host deques.
+"""
+from __future__ import annotations
+
+from typing import List
+
+POLICIES = ("least_loaded", "round_robin")
+
+
+class Router:
+    """Deterministic request placement over ``replicas`` decode replicas.
+
+    Pure host state, no jax. One Router lives on the engine for its
+    lifetime; load drains back to zero as requests complete, so
+    successive ``generate`` calls start from a clean (but, under
+    least_loaded, history-independent — load is zero again) state.
+    """
+
+    def __init__(self, replicas: int, policy: str = "least_loaded"):
+        if replicas < 1:
+            raise ValueError(f"need >= 1 replica, got {replicas}")
+        if policy not in POLICIES:
+            raise ValueError(f"unknown router policy {policy!r}; "
+                             f"want one of {POLICIES}")
+        self.replicas = replicas
+        self.policy = policy
+        self._load = [0] * replicas     # outstanding tokens per replica
+        self._rr = 0                    # round-robin cursor
+
+    # -- placement -----------------------------------------------------
+    def route(self, cost: int) -> int:
+        """Place one request of ``cost`` outstanding tokens (prompt +
+        max_new); returns the replica index and charges the cost."""
+        if self.policy == "round_robin":
+            r = self._rr % self.replicas
+            self._rr += 1
+        else:
+            r = min(range(self.replicas), key=lambda i: (self._load[i], i))
+        self._load[r] += cost
+        return r
+
+    def complete(self, replica: int, cost: int) -> None:
+        """Refund a finished request's cost (engine calls at eviction)."""
+        self._load[replica] -= cost
+        assert self._load[replica] >= 0, (replica, self._load)
+
+    # -- introspection -------------------------------------------------
+    def load(self, replica: int) -> int:
+        """Outstanding tokens currently charged to ``replica``."""
+        return self._load[replica]
+
+    def loads(self) -> List[int]:
+        """Per-replica outstanding-token snapshot (copy)."""
+        return list(self._load)

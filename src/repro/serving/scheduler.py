@@ -133,12 +133,16 @@ class Scheduler:
         return AdmitPlan(blocks=blocks, n_cached=n_cached, cow=cow,
                          total_pages=total_pages)
 
-    def release(self, prompt, blocks: List[int], *, namespace=None) -> None:
+    def release(self, prompt, blocks: List[int], *, namespace=None,
+                register: bool = True) -> None:
         """Finished request: index its prompt pages into the prefix cache
         (their KV is now fully computed), then drop the slot's refs —
         pages holding only generated tokens go straight back to the free
-        list."""
-        if self.prefix is not None and len(prompt) > 0:
+        list. ``register=False`` skips the prefix indexing (disaggregated
+        decode replicas skip it — the prefix cache lives with the PREFILL
+        pool, whose scheduler already registered the prompt pages there;
+        DESIGN.md §11)."""
+        if register and self.prefix is not None and len(prompt) > 0:
             self.prefix.register(prompt, blocks, namespace=namespace)
         for bid in blocks:
             self.bm.deref(bid)

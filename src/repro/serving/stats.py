@@ -42,6 +42,19 @@ class EngineStats:
     #                              mode; every shard holds 1/shards of it)
     shards: int = 1              # kv-head shards ("model" axis size; 1 =
     #                              single device, DESIGN.md §9)
+    # --- fleet serving (DESIGN.md §11) ---
+    data_shards: int = 1         # decode replicas ("data" axis size)
+    replica_stats: list = dataclasses.field(default_factory=list)
+    #   one dict per data replica: {"replica", "admitted", "evicted",
+    #   "queue_depth" (requests still pending at the end of generate —
+    #   0 unless generate aborted), "backpressure_waits",
+    #   "kv_blocks_peak"}. Populated for every paged generate (one entry
+    #   on a mesh of 1); under disaggregation the prefill worker reports
+    #   as replica -1 with an extra "handoffs" count.
+    # --- latency phase split (host-measured, wall-clock) ---
+    ttft_s: float = 0.0          # mean time-to-first-token over requests
+    tpot_s: float = 0.0          # mean per-token decode latency after the
+    #                              first token (time-per-output-token)
     # --- prefix cache ---
     prefix_lookups: int = 0      # admissions that consulted the cache
     prefix_hit_tokens: int = 0   # prompt tokens served from cached blocks
@@ -112,10 +125,15 @@ class EngineStats:
         and bench_serving)."""
         return (f"mode={self.cache_mode} w={self.weights_dtype} "
                 f"kv={self.kv_dtype} shards={self.shards} "
-                f"reqs={self.requests} "
+                + (f"dp={self.data_shards} " if self.data_shards > 1
+                   else "")
+                + f"reqs={self.requests} "
                 f"toks={self.tokens_generated} "
                 f"tok/s={self.tokens_per_s:.1f} "
-                f"kv_blocks_peak={self.kv_blocks_peak}/{self.num_blocks} "
+                + (f"ttft={self.ttft_s * 1e3:.1f}ms "
+                   f"tpot={self.tpot_s * 1e3:.2f}ms "
+                   if self.ttft_s else "")
+                + f"kv_blocks_peak={self.kv_blocks_peak}/{self.num_blocks} "
                 f"kv_bytes_peak={self.kv_bytes_peak} "
                 f"(per_shard={self.kv_bytes_peak_per_shard}) "
                 f"prefix_hit_rate={self.prefix_hit_rate:.2f} "

@@ -22,6 +22,7 @@ from __future__ import annotations
 import math
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.interpreters import pxla
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -109,6 +110,70 @@ def serve_tp_gather(x, axis: int):
     return jax.lax.all_gather(x, tp[0], axis=axis, tiled=True)
 
 
+# Row-parallel serve TP (DESIGN.md §11): when on, the second matmul of
+# each attention / FFN pair keeps its input SHARDED (local head group /
+# local d_ff stripe), row-slices the weight, and all-reduces the partial
+# outputs — one psum of (B, d) instead of an all-gather of the (B, h·hd)
+# activations. Partial sums change the reduction order, so this mode is
+# near-parity (~1e-3), not bit-exact; the column-only default stays the
+# parity oracle. Same trace-time lifecycle as the serve-TP context.
+_serve_rp: list = [False]
+
+
+def set_serve_rp(on: bool) -> None:
+    """Enable/disable the row-parallel serve-TP variant for the step
+    graph currently being traced (engine sets it alongside serve_tp)."""
+    _serve_rp[0] = bool(on)
+
+
+def get_serve_rp() -> bool:
+    """True when the row-parallel serve-TP variant is being traced (only
+    meaningful while a serve-TP context is installed)."""
+    return _serve_rp[0] and _serve_tp[0] is not None
+
+
+def serve_psum(x):
+    """All-reduce partial outputs over the serve-TP axis (row-parallel
+    epilogue). Identity when no serve-TP context is active."""
+    tp = get_serve_tp()
+    if tp is None:
+        return x
+    return jax.lax.psum(x, tp[0])
+
+
+# --------------------------------------------------------------------------
+# Serve-time data parallelism (DESIGN.md §11): the engine stripes decode
+# SLOTS and paged-pool BLOCKS across the "data" mesh axis — each data
+# shard owns max_batch/|data| slots and num_blocks/|data| pool blocks
+# with LOCAL ids, so the whole per-replica step body runs unchanged on
+# local shapes. The context mirrors the serve-TP one: installed around
+# tracing a dp-sharded step, cleared after.
+# --------------------------------------------------------------------------
+_serve_dp: list = [None]
+
+
+def set_serve_dp(axis: str | None, size: int = 0) -> None:
+    """Install (or clear, with ``axis=None``) the serve-DP trace context:
+    ``axis`` is the shard_map data-axis name, ``size`` its length."""
+    _serve_dp[0] = (axis, size) if axis is not None else None
+
+
+def get_serve_dp() -> tuple | None:
+    """Current serve-DP context as ``(axis_name, size)``, or None when no
+    data-striped serving step is being traced."""
+    return _serve_dp[0]
+
+
+def serve_dp_index():
+    """This replica's index on the serve-DP axis (0 without a context) —
+    the host addresses per-replica work by global slot/replica id and the
+    step graphs gate on this to act only on their own stripe."""
+    dp = get_serve_dp()
+    if dp is None:
+        return jnp.int32(0)
+    return jax.lax.axis_index(dp[0])
+
+
 def serve_mesh(shape, axes: tuple = ("data", "model")) -> Mesh:
     """Serving mesh over the local devices: ``shape`` is (data, model) —
     "model" is the tensor-parallel axis the engine shards kv-heads /
@@ -132,7 +197,8 @@ def serve_mesh(shape, axes: tuple = ("data", "model")) -> Mesh:
     return jax.make_mesh(shape, axes)
 
 
-def serve_cache_pspec(caches, axis: str = "model"):
+def serve_cache_pspec(caches, axis: str = "model",
+                      dp_axis: str | None = None):
     """PartitionSpec pytree sharding serving KV caches on the KV-HEAD
     axis — axis 3 of every leaf in both cache layouts:
 
@@ -142,19 +208,27 @@ def serve_cache_pspec(caches, axis: str = "model"):
 
     Page/block/sequence dims stay whole, so one host-side block id
     indexes every shard's pool identically (the BlockManager never needs
-    to know about the mesh)."""
+    to know about the mesh). ``dp_axis`` additionally stripes the BLOCKS
+    axis (axis 1, paged pools only) across data replicas (DESIGN.md
+    §11): each replica then owns a private num_blocks/|data| pool whose
+    LOCAL block ids its per-replica BlockManager hands out."""
     def one(leaf):
         spec = [None] * leaf.ndim
         spec[3] = axis
+        if dp_axis is not None:
+            spec[1] = dp_axis
         return P(*spec)
     return jax.tree_util.tree_map(one, caches)
 
 
-def serve_cache_sharding(caches, mesh: Mesh, axis: str = "model"):
+def serve_cache_sharding(caches, mesh: Mesh, axis: str = "model",
+                         dp_axis: str | None = None):
     """NamedSharding pytree for ``device_put``-placing serving KV caches
-    kv-head-sharded on ``axis`` (see serve_cache_pspec)."""
+    kv-head-sharded on ``axis`` (and block-striped on ``dp_axis``, see
+    serve_cache_pspec)."""
     return jax.tree_util.tree_map(
-        lambda s: NamedSharding(mesh, s), serve_cache_pspec(caches, axis))
+        lambda s: NamedSharding(mesh, s),
+        serve_cache_pspec(caches, axis, dp_axis))
 
 
 def _resolve(entry):
