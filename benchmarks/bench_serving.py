@@ -51,8 +51,8 @@ import numpy as np
 
 from benchmarks.common import emit, time_call
 from repro import configs as registry
-from repro.config.base import (KernelConfig, QuantConfig, RunConfig, SHAPES,
-                               ServeConfig)
+from repro.config.base import (KernelConfig, QuantConfig, RegistryConfig,
+                               RunConfig, SHAPES, ServeConfig)
 from repro.core import tt as ttlib
 from repro.core.merge import fold_transformer
 from repro.kernels import dispatch
@@ -576,6 +576,99 @@ def _fleet_rows(rows, *, smoke: bool, mesh_shape=(2, 4)) -> None:
                 f"{leaf.shape}")
 
 
+def _multitask_rows(rows, *, smoke: bool) -> None:
+    """Paged adapter registry (DESIGN.md §12): a zipf(1.1) stream over
+    256 distinct tasks served through an 8-slot device pool vs the
+    all-resident engine.
+
+    The workload is the registry's design point — a long-tailed task
+    popularity where a handful of hot tasks cover most admissions (high
+    hit rate) while the cold tail still faults through the pool. Token
+    identity against the all-resident engine is asserted outright;
+    ``decode_traces`` must stay 1 (fault-ins are one pre-jitted donated
+    scatter, never a retrace). Throughput of the pooled engine must stay
+    within 15% of all-resident (asserted in the full run only — smoke
+    shapes on CPU are timing noise).
+    """
+    n_tasks, n_slots = 256, 8
+    n_req, n_new = (48, 4) if smoke else (192, 8)
+    cfg = registry.get_smoke_config("stablelm-1.6b")
+    run_cfg = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                        adapter_kind="metatt", adapter_variant="4+1d",
+                        num_tasks=n_tasks, adapter_rank=8)
+    spec = M.build_adapter_spec(run_cfg)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, spec, key)
+    params["adapter"] = {"cores": ttlib.random_tt(key, spec.cfg.mode_sizes,
+                                                  8, scale=0.5)}
+    rt = AdapterRuntime.build("live", params["base"], spec,
+                              params["adapter"], params["frozen"])
+    # zipf(1.1) by explicit rank probabilities (bounded support, unlike
+    # rng.zipf): task id == popularity rank
+    rng = np.random.default_rng(0)
+    p = 1.0 / np.arange(1, n_tasks + 1) ** 1.1
+    tasks = rng.choice(n_tasks, size=n_req, p=p / p.sum())
+    keys = jax.random.split(key, n_req)
+    reqs = [Request(np.asarray(jax.random.randint(
+        keys[i], (4 + i % 4,), 0, cfg.vocab_size)), n_new,
+        task=int(tasks[i])) for i in range(n_req)]
+
+    outs, stats = {}, {}
+    for label, reg in (("all_resident", RegistryConfig()),
+                       (f"pool{n_slots}",
+                        RegistryConfig(max_resident_tasks=n_slots))):
+        eng = Engine(cfg, rt, serve=ServeConfig(
+            max_batch=4, cache_len=16 + n_new, out_cap=n_new, page_size=8,
+            prefill_chunk=8, registry=reg))
+        eng.generate(reqs)      # compile — excluded from the timed wall
+        t0 = time.perf_counter()
+        outs[label] = eng.generate(reqs)
+        dt = time.perf_counter() - t0
+        st = eng.last_stats
+        stats[label] = st
+        rows.append(emit(
+            f"serving/engine_multitask_{label}",
+            dt / max(st.tokens_generated, 1) * 1e6,
+            f"tok_per_s={st.tokens_per_s:.1f},"
+            f"tasks={n_tasks},slots={st.max_resident_tasks},"
+            f"adapter_hit_rate={st.adapter_hit_rate:.2f},"
+            f"adapter_faults={st.adapter_faults},"
+            f"adapter_evictions={st.adapter_evictions},"
+            f"decode_traces={st.decode_traces}"))
+        _record_stats(f"engine_multitask_{label}", st)
+        print(f"# engine stats [{label}]: {st.summary()}")
+    full, pool = stats["all_resident"], stats[f"pool{n_slots}"]
+    parity = all(a.tolist() == b.tolist() for a, b in
+                 zip(outs["all_resident"], outs[f"pool{n_slots}"]))
+    ratio = pool.tokens_per_s / max(full.tokens_per_s, 1e-9)
+    rows.append(emit(
+        "serving/zipf_256tasks", 0.0,
+        f"identical_tokens={parity},tasks={n_tasks},slots={n_slots},"
+        f"zipf_a=1.1,requests={n_req},"
+        f"adapter_hit_rate={pool.adapter_hit_rate:.2f},"
+        f"adapter_faults={pool.adapter_faults},"
+        f"adapter_evictions={pool.adapter_evictions},"
+        f"adapter_waits={pool.adapter_waits},"
+        f"tok_per_s_all={full.tokens_per_s:.1f},"
+        f"tok_per_s_pool={pool.tokens_per_s:.1f},"
+        f"tok_per_s_ratio={ratio:.2f}"))
+    if not parity:
+        raise AssertionError(
+            "pooled-registry engine diverged from all-resident")
+    if pool.decode_traces != 1:
+        raise AssertionError(
+            f"adapter fault-ins retraced the decode graph: "
+            f"decode_traces={pool.decode_traces}")
+    if pool.adapter_faults == 0 or pool.adapter_hits == 0:
+        raise AssertionError(
+            "zipf workload should both fault (cold tail) and hit (hot "
+            f"head): faults={pool.adapter_faults} hits={pool.adapter_hits}")
+    if not smoke and ratio < 0.85:
+        raise AssertionError(
+            f"pooled throughput {ratio:.2f}x all-resident — outside the "
+            "15% budget")
+
+
 def _decaying_tt(key, mode_sizes, rank, scale, decay):
     """Random TT whose bond strength decays geometrically — the spectrum
     shape DMRG rank adaptation produces on trained adapters (and the
@@ -749,6 +842,18 @@ def run_spec(*, smoke: bool = False) -> list:
     return rows
 
 
+def run_multitask(*, smoke: bool = False) -> list:
+    """The ``--multitask`` entry point: zipf-over-256-tasks adapter
+    paging rows only (the scripts/ci.sh adapter-paging job runs this
+    with --smoke; merges serving/zipf_256tasks into
+    BENCH_serving.json)."""
+    ENGINE_STATS.clear()
+    rows = []
+    _multitask_rows(rows, smoke=smoke)
+    _merge_rows_into_json(rows)
+    return rows
+
+
 def run(*, smoke: bool = False) -> list:
     ENGINE_STATS.clear()
     rows = []
@@ -777,6 +882,11 @@ if __name__ == "__main__":
                     help="data-striped dp2 vs dp1 rows only (needs 8 "
                          "devices; merges serving/dp2_vs_dp1 into "
                          "BENCH_serving.json; honors --smoke)")
+    ap.add_argument("--multitask", action="store_true",
+                    help="zipf(1.1) over 256 tasks through an 8-slot "
+                         "adapter pool vs all-resident (merges "
+                         "serving/zipf_256tasks into BENCH_serving.json; "
+                         "honors --smoke)")
     args = ap.parse_args()
     if args.mesh:
         print("name,us_per_call,derived")
@@ -784,6 +894,9 @@ if __name__ == "__main__":
     elif args.fleet:
         print("name,us_per_call,derived")
         run_fleet(smoke=args.smoke)
+    elif args.multitask:
+        print("name,us_per_call,derived")
+        run_multitask(smoke=args.smoke)
     elif args.spec:
         print("name,us_per_call,derived")
         run_spec(smoke=args.smoke)

@@ -40,19 +40,21 @@ import time
 import jax
 
 from repro import configs as registry
-from repro.config.base import RunConfig, SHAPES, ServeConfig
+from repro.config.base import (RegistryConfig, RunConfig, SHAPES,
+                               ServeConfig)
 from repro.core import tt as ttlib
 from repro.models import model as M
 from repro.serving import AdapterRuntime, Engine, Request, SpecConfig
 
 
 def serve(cfg, runtime, reqs, *, max_batch, cache_len, out_cap, tp=0,
-          dp=0, disagg=False, row_parallel=False, spec=None):
+          dp=0, disagg=False, row_parallel=False, spec=None, slots=0):
     mesh = (dp or 1, tp or 1) if (tp or dp or row_parallel) else ()
     sv = ServeConfig(max_batch=max_batch, cache_len=cache_len,
                      out_cap=out_cap, mesh_shape=mesh, disagg=disagg,
                      row_parallel=row_parallel,
-                     spec=spec or SpecConfig())
+                     spec=spec or SpecConfig(),
+                     registry=RegistryConfig(max_resident_tasks=slots))
     eng = Engine(cfg, runtime, serve=sv)
     eng.generate(reqs)   # warm-up: compile once + populate the prefix cache
     t0 = time.perf_counter()
@@ -95,6 +97,13 @@ def main():
     ap.add_argument("--row-parallel", action="store_true",
                     help="row-parallel wo/wd with a psum epilogue "
                          "instead of the all-gather (needs --tp/--dp)")
+    ap.add_argument("--max-resident-tasks", type=int, default=0,
+                    help="adapter pool slots per replica (DESIGN.md "
+                         "§12): serve --tasks tasks through a fixed "
+                         "K-slot device pool with LRU paging (0 = whole "
+                         "task axis resident). Applies to the live and "
+                         "lora runtimes; merged folds one task into the "
+                         "weights and has no task axis to page")
     ap.add_argument("--spec-k", type=int, default=0,
                     help="draft tokens per engine step (0 = speculative "
                          "decode off)")
@@ -126,21 +135,24 @@ def main():
     kw = dict(max_batch=args.batch, cache_len=cache_len,
               out_cap=args.tokens, tp=args.tp, dp=args.dp,
               disagg=args.disagg, row_parallel=args.row_parallel)
+    # adapter paging applies to the TASKED runtimes only (see --help)
+    tasked_kw = dict(kw, slots=args.max_resident_tasks)
 
     rt_live = AdapterRuntime.build("live", base, spec, adapter, frozen)
-    live, t_live, toks = serve(cfg, rt_live, reqs, **kw)
+    live, t_live, toks = serve(cfg, rt_live, reqs, **tasked_kw)
 
     spec_cfg = None
     if args.spec_k:
         spec_cfg = SpecConfig(spec_k=args.spec_k,
                               draft_rank=args.draft_rank,
                               draft_layer_stride=args.draft_layer_stride)
-        speced, t_spec, _ = serve(cfg, rt_live, reqs, spec=spec_cfg, **kw)
+        speced, t_spec, _ = serve(cfg, rt_live, reqs, spec=spec_cfg,
+                                  **tasked_kw)
         same_spec = all(a.tolist() == b.tolist()
                         for a, b in zip(live, speced))
 
     rt_lora = AdapterRuntime.build("lora", base, spec, adapter, frozen)
-    lora, t_lora, _ = serve(cfg, rt_lora, reqs, **kw)
+    lora, t_lora, _ = serve(cfg, rt_lora, reqs, **tasked_kw)
 
     # merged: one task's ΔW folded into the weights -> zero-overhead stream
     # for that task (mixed-task streams need live/lora)

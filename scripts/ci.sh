@@ -68,3 +68,14 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python -m pytest -x -q tests/test_fleet_engine.py
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python benchmarks/bench_serving.py --fleet --smoke
+
+# adapter-paging parity job (DESIGN.md §12): an 8-slot device pool
+# serving 256 distinct tasks must be token-identical to the all-resident
+# engine with a single decode trace (fault-ins are one pre-jitted
+# donated scatter) and zero leaked slot pins; the forced 4-device mesh
+# run covers the replicated-pool TP path and per-replica dp registries,
+# and the zipf(1.1) bench merges the serving/zipf_256tasks row into
+# BENCH_serving.json
+XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    python -m pytest -x -q tests/test_adapter_registry.py
+python benchmarks/bench_serving.py --multitask --smoke

@@ -294,6 +294,52 @@ class SpecConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class RegistryConfig:
+    """Paged adapter registry (serving/adapter_registry.py, DESIGN.md
+    §12). MetaTT's task mode makes each task's marginal footprint one
+    core slice, so the engine can serve an open-ended task population
+    from a fixed device pool of ``max_resident_tasks`` slots, faulting
+    task slices in host→device on demand (one jitted donated scatter, no
+    retrace) and evicting idle residents — S-LoRA-style paging, but the
+    unit is a TT core column instead of a whole adapter stack.
+
+    max_resident_tasks: device task-slot pool size K per decode replica.
+        0 (default) keeps the whole ``num_tasks`` axis device-resident —
+        registry off, the pre-registry engine byte-for-byte. K may be
+        smaller than the in-flight batch's distinct-task count only at
+        the price of admission backpressure: a request whose task cannot
+        get a slot waits until a harvest unpins one.
+    eviction: idle-resident replacement policy — "lru" (default;
+        recency refreshed on every admission hit) or "fifo" (load order
+        only — cheaper bookkeeping, worse under skewed reuse).
+
+    Requires a task-routed runtime (metatt 4+1d); the engine rejects the
+    combination otherwise. Works in both cache modes and composes with
+    quantization, the serve mesh (pool replicated; swaps happen outside
+    shard_map), dp replicas (one registry per replica) and speculative
+    decode (drafter slices page together with their target slices).
+    """
+    max_resident_tasks: int = 0
+    eviction: str = "lru"          # lru | fifo
+
+    @property
+    def enabled(self) -> bool:
+        return self.max_resident_tasks > 0
+
+    def validate(self) -> "RegistryConfig":
+        if self.max_resident_tasks < 0:
+            raise ValueError(
+                f"RegistryConfig.max_resident_tasks="
+                f"{self.max_resident_tasks} must be >= 0 (0 = all tasks "
+                "device-resident)")
+        if self.eviction not in ("lru", "fifo"):
+            raise ValueError(
+                f"RegistryConfig.eviction={self.eviction!r}; want "
+                "lru | fifo")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
 class ServeConfig:
     """Serving-engine knobs (repro/serving/engine.py).
 
@@ -360,6 +406,10 @@ class ServeConfig:
         rank-truncated TT self-drafter (spec.spec_k > 0 enables it;
         DESIGN.md §10). Works in both cache modes, composes with
         quantization and the serve mesh.
+    registry: RegistryConfig — paged adapter registry (DESIGN.md §12).
+        ``registry.max_resident_tasks=K`` serves any number of tasks
+        from a K-slot device pool per replica, paging task slices on
+        demand; 0 keeps every task resident (off).
 
     Data parallelism (DESIGN.md §11): ``mesh_shape=(data, model)`` with
     data > 1 stripes decode slots AND paged-pool blocks across data
@@ -385,6 +435,7 @@ class ServeConfig:
     disagg: bool = False
     row_parallel: bool = False
     spec: SpecConfig = SpecConfig()
+    registry: RegistryConfig = RegistryConfig()
 
     @property
     def pages_per_request(self) -> int:
@@ -401,6 +452,7 @@ class ServeConfig:
                              "want paged | dense")
         self.quant.validate()
         self.spec.validate()
+        self.registry.validate()
         if self.spec.enabled and self.spec.spec_k + 1 > self.cache_len:
             raise ValueError(
                 f"SpecConfig.spec_k={self.spec.spec_k}: the verifier "

@@ -67,6 +67,24 @@ def lora_form_delta(a_l: jnp.ndarray, b: jnp.ndarray, cfg: MetaTTConfig,
     return p @ bb
 
 
+def lora_task_slice(a: jnp.ndarray, task) -> jnp.ndarray:
+    """One task's column of the merged lora-form ``LoRAForm.a``.
+
+    Task-routed (4+1d) lora factors are (L, T, M, d_in_max, r) — the task
+    mode is AXIS 1, same layout contract as the live factor
+    (core/metatt.py ``take_task_slice``). The serving adapter registry
+    pages these (L, M, d_in_max, r) slices; ``LoRAForm.b`` is task-shared
+    and never moves.
+    """
+    return a[:, task]
+
+
+def lora_task_put(pool: jnp.ndarray, slot, col: jnp.ndarray) -> jnp.ndarray:
+    """Scatter one lora-form task slice into pool slot ``slot`` — inverse
+    of ``lora_task_slice`` over a (L, K, M, d_in_max, r) pooled factor."""
+    return pool.at[:, slot].set(col.astype(pool.dtype))
+
+
 def fold_into_dense(params: Params, cfg: MetaTTConfig,
                     weights: dict, *, task: int | None = None,
                     layers=None) -> dict:

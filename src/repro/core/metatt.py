@@ -271,6 +271,26 @@ def delta_out(f: StepFactors, cfg: MetaTTConfig, p: jnp.ndarray,
     return cfg.alpha * (q @ g4.astype(p.dtype))
 
 
+def take_task_slice(c: jnp.ndarray, task) -> jnp.ndarray:
+    """One task's column of the merged live factor ``StepFactors.c``.
+
+    The task mode is AXIS 1 of the (L, T, M, r, r) factor — the paper's
+    Eq. (4)/(6) marginal cost made literal: everything a single task adds
+    to the shared TT is this (L, M, r, r) slice. The serving adapter
+    registry (serving/adapter_registry.py) pages exactly these columns
+    between host and a fixed device slot pool.
+    """
+    return c[:, task]
+
+
+def put_task_slice(pool: jnp.ndarray, slot, col: jnp.ndarray) -> jnp.ndarray:
+    """Scatter one task column into slot ``slot`` of a pooled factor —
+    inverse of ``take_task_slice``; ``pool`` is (L, K, M, r, r) with K the
+    pool width. Functional (`.at[...]`), so it jits and donates cleanly.
+    """
+    return pool.at[:, slot].set(col.astype(pool.dtype))
+
+
 def apply(params: Params, cfg: MetaTTConfig, x: jnp.ndarray, layer: int,
           m: str, *, task: int | None = None) -> jnp.ndarray:
     """Reference single-call path: α · x·G1·G2[l](·G3[t])·G3[m]·G4 (Eq. (5)).

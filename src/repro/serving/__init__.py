@@ -16,12 +16,22 @@ ServeConfig.mesh_shape — DESIGN.md §9).
                     cross-pool migration (disaggregated handoff)
   PrefixCache     — hash-chained prompt-prefix -> KV-block index
   Scheduler       — FIFO admission gated on free blocks, not free slots
+                    (and, with a registry, on adapter-slot residency)
+  AdapterRegistry — task -> device pool-slot residency: pins, LRU/FIFO
+                    eviction, fault-in bookkeeping (RegistryConfig.
+                    max_resident_tasks serves thousands of tasks from a
+                    K-slot pool — DESIGN.md §12)
+  LRUClock        — shared recency ordering (PrefixCache + registry)
   Router          — deterministic request placement over data replicas
                     (least-loaded / round-robin, DESIGN.md §11)
   EngineStats     — per-generate observability (engine.last_stats)
 """
-from repro.config.base import ServeConfig, SpecConfig  # noqa: F401
+from repro.config.base import (RegistryConfig, ServeConfig,  # noqa: F401
+                               SpecConfig)
+from repro.serving.adapter_registry import (AcquireResult,  # noqa: F401
+                                            AdapterRegistry)
 from repro.serving.adapter_runtime import AdapterRuntime  # noqa: F401
+from repro.serving.lru import LRUClock  # noqa: F401
 from repro.serving.block_manager import (BlockManager,  # noqa: F401
                                          PrefixCache)
 from repro.serving.engine import (DecodeState, Engine,  # noqa: F401

@@ -1,0 +1,246 @@
+"""Host-side adapter residency for multi-task serving (DESIGN.md §12).
+
+MetaTT's task mode makes the per-task marginal cost ONE core slice
+(paper Eq. (4)/(6)): a live runtime adds ``C[:, t]`` (L, M, r, r), a
+lora runtime adds ``A[:, t]`` (L, M, d_in, r). The engine therefore does
+not need the whole ``num_tasks`` axis device-resident — it keeps a
+fixed-shape POOL of ``K`` task slots on device and pages task slices in
+on demand, exactly like the paged KV cache treats token pages:
+
+  * ``AdapterRegistry`` (this module) is the host half — task_id → pool
+    slot mapping, per-slot pins held by in-flight requests, LRU (or
+    FIFO) eviction of idle residents. Pure Python, mirror of
+    BlockManager/PrefixCache; the shared ``LRUClock`` provides the
+    recency ordering.
+  * The device half is one jitted donated scatter per fault
+    (``pool.at[:, slot].set(host_slice)``, engine ``_afault``): the pool
+    shape and the traced slot index never change, so ``decode_traces``
+    stays pinned at 1 no matter how many thousand tasks flow through.
+  * In the decode state the per-slot ``(B,)`` task vector simply carries
+    POOL-SLOT indices instead of task ids — the traced gather in
+    core/metatt.py ``delta_out`` / core/merge.py ``lora_form_delta`` is
+    unchanged; only its index space shrank from ``num_tasks`` to ``K``.
+
+Slot lifecycle (one slot, over time)::
+
+      free ──acquire(miss)──> mapped+pinned ──release──> mapped+idle
+       ^                          ^                          │
+       │                          └────acquire(hit)──────────┤
+       └────────── (clear) ───────────evict (new task faults)┘
+
+``acquire`` is transactional against the DEVICE scatter: a slot reports
+``fault=True`` until the engine confirms the scatter ran
+(``mark_loaded``), so an admission that acquires a slot but then fails
+KV-block allocation (and releases the pin) leaves the slot
+mapped-but-unloaded — the retry faults again instead of decoding a
+stale or zero column.
+
+Pytree helpers at the bottom (``task_slice`` / ``scatter_slot`` /
+``pool_factors``) implement the host↔pool data motion over whole
+per-layer factor dicts, dispatching per adapter form ("c" live, "a"
+lora, anything else — e.g. quantized ``{"q8","scale"}`` leaf dicts —
+generically on the shared task-axis-1 layout).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+
+from repro.core import merge as merge_lib
+from repro.core import metatt as metatt_lib
+from repro.serving.lru import LRUClock
+
+POLICIES = ("lru", "fifo")
+
+
+@dataclasses.dataclass
+class AcquireResult:
+    """Outcome of one ``acquire``: the pool slot the task maps to (the
+    index the decode state carries), whether the engine must run the
+    fault-in scatter before using it, and — on an evicting fault — which
+    resident task was displaced."""
+    slot: int
+    fault: bool
+    evicted: Optional[int] = None
+
+
+class AdapterRegistry:
+    """task_id → device pool slot, with pins and LRU/FIFO eviction.
+
+    Pure host state, no jax (mirror of BlockManager). ``num_slots`` is
+    ``RegistryConfig.max_resident_tasks``; under data-parallel serving
+    each decode replica owns a private registry over its own pool stripe
+    (slots here are replica-local; the engine offsets by ``r * K`` when
+    writing device state).
+
+    Pin discipline: one pin per in-flight request (taken at admission
+    via ``acquire``, dropped at harvest via ``release``). A pinned slot
+    is never evicted — when every slot is pinned by distinct in-flight
+    tasks, ``acquire`` returns None and admission backpressures exactly
+    like a dry KV-block pool.
+    """
+
+    def __init__(self, num_slots: int, policy: str = "lru"):
+        if num_slots < 1:
+            raise ValueError(f"need >= 1 adapter slot, got {num_slots}")
+        if policy not in POLICIES:
+            raise ValueError(f"unknown eviction policy {policy!r}; "
+                             f"want one of {POLICIES}")
+        self.num_slots = num_slots
+        self.policy = policy
+        self._slot_of: Dict[int, int] = {}      # task id -> slot
+        self._task_of: Dict[int, int] = {}      # slot -> task id
+        self._pins = [0] * num_slots            # in-flight requests per slot
+        self._loaded = [False] * num_slots      # device scatter confirmed
+        self._free: List[int] = list(range(num_slots - 1, -1, -1))
+        self._clock = LRUClock()                # recency over slot indices
+
+    # -- introspection -------------------------------------------------
+    def __len__(self) -> int:
+        """Number of resident (mapped) tasks."""
+        return len(self._slot_of)
+
+    @property
+    def resident_tasks(self) -> List[int]:
+        """Task ids currently mapped to a slot (loaded or not)."""
+        return sorted(self._slot_of)
+
+    @property
+    def pinned_slots(self) -> int:
+        """Slots pinned by at least one in-flight request."""
+        return sum(1 for p in self._pins if p > 0)
+
+    def pin_count(self, task: int) -> int:
+        """In-flight requests currently pinning ``task`` (0 if absent)."""
+        slot = self._slot_of.get(task)
+        return 0 if slot is None else self._pins[slot]
+
+    def slot_of(self, task: int) -> Optional[int]:
+        """Pool slot ``task`` is mapped to, or None."""
+        return self._slot_of.get(task)
+
+    # -- acquire / load / release --------------------------------------
+    def acquire(self, task: int) -> Optional[AcquireResult]:
+        """Pin ``task`` into a slot for one admission.
+
+        Hit (mapped and loaded): pin + recency touch, no device work.
+        Miss: take a free slot, else evict the least-recently-used
+        UNPINNED resident; either way the result says ``fault=True`` and
+        the engine must scatter the slice and ``mark_loaded`` before the
+        slot's column is read. None ⇒ every slot is pinned (admission
+        backpressure; the caller retries after a harvest releases pins).
+        """
+        slot = self._slot_of.get(task)
+        evicted = None
+        if slot is None:
+            if self._free:
+                slot = self._free.pop()
+            else:
+                slot = self._clock.oldest(
+                    s for s in range(self.num_slots) if self._pins[s] == 0)
+                if slot is None:
+                    return None
+                evicted = self._task_of.pop(slot)
+                del self._slot_of[evicted]
+                self._loaded[slot] = False
+            self._slot_of[task] = slot
+            self._task_of[slot] = task
+        self._pins[slot] += 1
+        # fifo ranks by load order only; lru also refreshes on every hit
+        if self.policy == "lru" or not self._loaded[slot]:
+            self._clock.touch(slot)
+        return AcquireResult(slot=slot, fault=not self._loaded[slot],
+                             evicted=evicted)
+
+    def mark_loaded(self, task: int) -> None:
+        """Engine confirmation that the device scatter for ``task``'s
+        slot ran — until then every ``acquire`` keeps reporting a fault."""
+        slot = self._slot_of.get(task)
+        if slot is None:
+            raise ValueError(f"mark_loaded of unmapped task {task}")
+        self._loaded[slot] = True
+
+    def release(self, task: int) -> None:
+        """Drop one pin (request finished / admission rolled back). The
+        slot stays mapped — an idle resident is a future hit — until an
+        eviction reclaims it."""
+        slot = self._slot_of.get(task)
+        if slot is None or self._pins[slot] <= 0:
+            raise ValueError(f"release of unpinned task {task}")
+        self._pins[slot] -= 1
+
+    def clear(self) -> None:
+        """Forget every mapping and pin (engine pool reset)."""
+        self._slot_of.clear()
+        self._task_of.clear()
+        self._pins = [0] * self.num_slots
+        self._loaded = [False] * self.num_slots
+        self._free = list(range(self.num_slots - 1, -1, -1))
+        self._clock = LRUClock()
+
+
+# --------------------------------------------------------------------------
+# pool data motion (device half's pytree plumbing)
+# --------------------------------------------------------------------------
+#
+# Per-layer factor dicts map adapter-form keys to arrays (or to
+# quantized {"q8","scale"} sub-dicts) whose TASK MODE IS AXIS 1:
+# live "c" (L, T, M, r, r), lora "a" (L, T, M, d_in, r). The named
+# core helpers document that contract; unknown keys fall through to the
+# same axis-1 slice/scatter generically, so int8-quantized or future
+# leaves page without new code here.
+
+def _take_fn(key):
+    if key == "c":
+        return metatt_lib.take_task_slice
+    if key == "a":
+        return merge_lib.lora_task_slice
+    return lambda x, task: x[:, task]
+
+
+def _put_fn(key):
+    if key == "c":
+        return metatt_lib.put_task_slice
+    if key == "a":
+        return merge_lib.lora_task_put
+    return lambda pool, slot, col: pool.at[:, slot].set(
+        col.astype(pool.dtype))
+
+
+def task_slice(per_layer: dict, task) -> dict:
+    """Extract ONE task's column from every per-task factor leaf —
+    the host-side slice the fault-in scatter ships to the device."""
+    out = {}
+    for key, leaf in per_layer.items():
+        take = _take_fn(key)
+        out[key] = jax.tree_util.tree_map(lambda x: take(x, task), leaf)
+    return out
+
+
+def scatter_slot(per_layer: dict, slot, col: dict) -> dict:
+    """Write one task column (``task_slice`` output) into pool slot
+    ``slot`` of every leaf. Functional and shape-preserving, so the
+    engine jits it ONCE with the pool donated and a traced slot index —
+    faults never retrace."""
+    out = {}
+    for key, leaf in per_layer.items():
+        put = _put_fn(key)
+        out[key] = jax.tree_util.tree_map(
+            lambda pool, c: put(pool, slot, c), leaf, col[key])
+    return out
+
+
+def pool_factors(per_layer: dict, num_slots: int) -> dict:
+    """A zeroed pool with the task axis (axis 1) resized to
+    ``num_slots`` — the fixed device geometry the jitted step sees.
+    Slot contents are all-zero (ΔW == 0, a valid no-op adapter) until a
+    fault loads them; the registry's loaded-flags guarantee no request
+    decodes against an unloaded slot."""
+    import jax.numpy as jnp
+
+    def widen(x):
+        return jnp.zeros(x.shape[:1] + (num_slots,) + x.shape[2:], x.dtype)
+
+    return jax.tree_util.tree_map(widen, per_layer)

@@ -20,7 +20,12 @@ Task routing: runtimes whose mode keeps the task axis (live/lora on a 4+1d
 adapter) report ``tasked=True``; the engine then threads a per-slot (B,)
 task-id vector into every adapter delta, which gathers per-row C[l, t_b, m]
 slices from the SHARED tensor train — one decode batch mixes tasks with no
-per-task adapter stacks (contrast LoRETTA / TT-LoRA deployments).
+per-task adapter stacks (contrast LoRETTA / TT-LoRA deployments). Tasked
+runtimes are also the ones the adapter registry can page
+(``RegistryConfig(max_resident_tasks=K)``, DESIGN.md §12): the engine
+swaps ``per_layer``'s task axis for a K-slot device pool and the (B,)
+vector carries pool-slot indices instead — the runtime bundle itself is
+unchanged, which is why the registry composes with every tasked mode.
 
 Kernel fusion: under ``Engine(..., kernels=KernelConfig(...))`` both the
 live and lora runtimes serve through the fused Pallas seam — paged-cache

@@ -34,6 +34,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
+from repro.serving.lru import LRUClock
+
 
 class BlockManager:
     """Free list + refcounts over ``num_blocks`` KV blocks of ``page_size``
@@ -147,7 +149,6 @@ class _Entry:
     tokens: Tuple[int, ...]    # tokens stored in this page (may be partial)
     full: bool                 # len(tokens) == page_size
     children: int = 0
-    tick: int = 0              # LRU clock
 
 
 #: chain root sentinel (start of every prompt)
@@ -178,7 +179,9 @@ class PrefixCache:
         self.bm = bm
         self._entries: Dict[tuple, _Entry] = {}
         self._partials: Dict[tuple, List[tuple]] = {}  # parent -> entry keys
-        self._tick = 0
+        # recency over entry keys — same helper the AdapterRegistry uses
+        # over pool slots, so both caches share one eviction ordering
+        self._clock = LRUClock()
 
     def __len__(self) -> int:
         """Number of cached page entries (== pinned blocks)."""
@@ -190,8 +193,7 @@ class PrefixCache:
         return len(self._entries)
 
     def _touch(self, e: _Entry) -> None:
-        self._tick += 1
-        e.tick = self._tick
+        self._clock.touch(e.key)
 
     @staticmethod
     def _root(namespace) -> tuple:
@@ -305,13 +307,14 @@ class PrefixCache:
             cands = self._evictable()
             if not cands:
                 break
-            e = min(cands, key=lambda c: c.tick)
+            e = self._entries[self._clock.oldest(c.key for c in cands)]
             self._drop(e)
             freed += 1
         return freed
 
     def _drop(self, e: _Entry) -> None:
         del self._entries[e.key]
+        self._clock.forget(e.key)
         if e.parent in self._entries:
             self._entries[e.parent].children -= 1
         if not e.full:

@@ -36,6 +36,18 @@ Architecture (README §Serving, DESIGN.md §7):
     the live/lora runtime the (B,) slot task vector gathers per-row
     C[l, t_b, m] slices from the one shared tensor train (paper
     Eq. (4)/(6)) — a single decode batch mixes tasks.
+  * ADAPTER PAGING (DESIGN.md §12): with
+    ``ServeConfig(registry=RegistryConfig(max_resident_tasks=K))`` the
+    per-task factor axis on device shrinks to a fixed K-slot pool per
+    replica; the full factors stay host-side and a host AdapterRegistry
+    (task → slot, pins, LRU eviction — the BlockManager pattern applied
+    to adapters) pages task slices in via one jitted donated scatter
+    per fault. The slot task vector then carries POOL-SLOT indices, the
+    Scheduler gates admission on slot availability exactly like block
+    availability, and prefix-cache namespaces stay keyed on the TASK ID
+    so an evicted-and-readmitted task still warm-hits its cached
+    prompts. One engine serves an open-ended task population (paper
+    Eq. (4)/(6): per-task marginal cost = one core slice).
   * QUANTIZED SERVING (DESIGN.md §8): MetaTT's base is frozen by
     construction, so base weights + KV cache are pure read-only
     bandwidth. ``QuantConfig(weights="int8")`` packs the base matmul
@@ -102,8 +114,10 @@ from repro.kernels import dispatch as kernel_dispatch
 from repro.kernels import quant as quant_lib
 from repro.models import transformer
 from repro.peft import api as peft_api
+from repro.serving import adapter_registry
 from repro.serving import sampling as sampling_lib
 from repro.serving import speculative as spec_lib
+from repro.serving.adapter_registry import AdapterRegistry
 from repro.serving.adapter_runtime import AdapterRuntime
 from repro.serving.block_manager import BlockManager, PrefixCache
 from repro.serving.router import Router
@@ -322,8 +336,30 @@ class Engine:
         if self.quant.weights == "int8":
             base = quant_lib.quantize_base(
                 base, group_size=self.quant.group_size)
+        # paged adapter registry (DESIGN.md §12): with
+        # registry.max_resident_tasks=K the engine keeps a fixed K-slot
+        # device pool per replica instead of the whole num_tasks axis —
+        # the full factors stay HOST-side and admission faults task
+        # slices in on demand. The per-slot (B,) task vector then carries
+        # POOL-SLOT indices, so the traced task gather (and with it
+        # decode_traces == 1) is untouched; only its index space shrinks.
+        self.reg_cfg = self.sv.registry
+        self._reg_on = self.reg_cfg.enabled
+        if self._reg_on and not runtime.tasked:
+            raise ValueError(
+                f"RegistryConfig.max_resident_tasks="
+                f"{self.reg_cfg.max_resident_tasks} needs a task-routed "
+                "runtime (metatt 4+1d live/lora with num_tasks set); "
+                "untasked/merged runtimes have no per-task slices to page")
+        self._host_per_layer = None
+        per_layer = runtime.per_layer
+        if self._reg_on:
+            self._host_per_layer = jax.device_get(runtime.per_layer)
+            per_layer = self._commit_pool(adapter_registry.pool_factors(
+                runtime.per_layer,
+                self._dp * self.reg_cfg.max_resident_tasks))
         self._key = jax.random.PRNGKey(seed)
-        self._weights = (base, runtime.broadcast, runtime.per_layer)
+        self._weights = (base, runtime.broadcast, per_layer)
         # speculative decode (DESIGN.md §10): the drafter is a
         # rank-truncated / layer-strided slice of the SAME weight bundle
         # (sliced here once, on the possibly int8-packed base), proposing
@@ -333,18 +369,50 @@ class Engine:
         self._spec_on = self.spec.enabled
         self._draft_weights = ()
         self._nb_draft = self.cfg.num_super_blocks
+        self._host_draft_pl = None
         if self._spec_on:
             dbase, dbc, dpl, self._nb_draft = spec_lib.build_drafter(
                 self.spec, self.rt.spec.kind, base, runtime.broadcast,
                 runtime.per_layer, len(self.cfg.block_pattern))
+            if self._reg_on:
+                # the drafter factors are leading bond columns of the
+                # SAME task slices (speculative.truncate_factors keeps
+                # the task axis), so they page with their target slice:
+                # one fault scatters both pools at the same slot
+                self._host_draft_pl = jax.device_get(dpl)
+                dpl = self._commit_pool(adapter_registry.pool_factors(
+                    dpl, self._dp * self.reg_cfg.max_resident_tasks))
             self._draft_weights = (dbase, dbc, dpl)
         # the step graphs take target weights (+ drafter weights when
         # speculating) as leading args so none bake in as constants
         self._step_weights = self._weights + self._draft_weights
+        if self._reg_on:
+            # ONE jitted donated scatter per fault: the pool keeps its
+            # shape and the slot index is traced, so every fault reuses
+            # the same compile; donation makes it an in-place slot write.
+            # Plain jit OUTSIDE shard_map — the pool is committed
+            # replicated on the serve mesh (_commit_pool), so a replicated
+            # update between loop exits is valid on every shard without
+            # touching the sharded step graphs.
+            if self._spec_on:
+                self._afault = jax.jit(
+                    lambda pl, dpl, slot, col, dcol: (
+                        adapter_registry.scatter_slot(pl, slot, col),
+                        adapter_registry.scatter_slot(dpl, slot, dcol)),
+                    donate_argnums=(0, 1))
+            else:
+                self._afault = jax.jit(adapter_registry.scatter_slot,
+                                       donate_argnums=(0,))
         self._decode_traces = 0
         self._prefill_traces = 0
         self.last_stats = self._new_stats()
         if self.sv.cache_mode == "dense":
+            # dense mode has no Scheduler; the engine drives its (single)
+            # registry directly in the dense admission/harvest loop.
+            # _build_host_pools recreates the paged-mode registries.
+            self.registries = ([AdapterRegistry(
+                self.reg_cfg.max_resident_tasks,
+                policy=self.reg_cfg.eviction)] if self._reg_on else [])
             self._prefill = jax.jit(self._prefill_impl)
             self._init_dense()
         else:
@@ -358,6 +426,17 @@ class Engine:
     def _rep_spec(self, tree):
         """Fully-replicated PartitionSpec pytree matching ``tree``."""
         return jax.tree_util.tree_map(lambda _: P(), tree)
+
+    def _commit_pool(self, tree):
+        """Commit an adapter slot pool replicated onto the serve mesh
+        (identity without one). Faulting runs through a plain jit, so
+        the pool must carry an explicit replicated sharding — otherwise
+        the fault output lands single-device and the shard_mapped step
+        would reject it."""
+        if self.mesh is None:
+            return tree
+        return jax.device_put(
+            tree, jax.sharding.NamedSharding(self.mesh, P()))
 
     def _shard_mapped(self, fn, in_specs, out_specs):
         """Wrap a step impl in ``shard_map`` over the serve mesh (identity
@@ -541,6 +620,16 @@ class Engine:
         self.router = Router(self._dp, sv.router)
         self.bms = [BlockManager(self._num_blocks, self._page)
                     for _ in range(self._dp)]
+        # adapter registries (DESIGN.md §12): one per data replica —
+        # replica r owns the global pool-slot stripe [r*K, (r+1)*K).
+        # Under disaggregation the prefill worker and the decode replica
+        # SHARE one registry: the pin taken at prefill admission carries
+        # through the handoff and is released once, at decode harvest.
+        self.registries = ([AdapterRegistry(self.reg_cfg.max_resident_tasks,
+                                            policy=self.reg_cfg.eviction)
+                            for _ in range(self._dp)]
+                           if self._reg_on else [])
+        regs = self.registries or [None] * self._dp
         if self._disagg:
             self.prefixes = [None] * self._dp
             self._pf_bms = [BlockManager(self._num_blocks, self._page)
@@ -549,14 +638,16 @@ class Engine:
                 PrefixCache(bm) if sv.prefix_cache else None
                 for bm in self._pf_bms]
             self._pf_scheds = [
-                Scheduler(bm, px, self.last_stats)
-                for bm, px in zip(self._pf_bms, self._pf_prefixes)]
+                Scheduler(bm, px, self.last_stats, registry=reg)
+                for bm, px, reg in zip(self._pf_bms, self._pf_prefixes,
+                                       regs)]
         else:
             self.prefixes = [PrefixCache(bm) if sv.prefix_cache else None
                              for bm in self.bms]
             self._pf_bms, self._pf_prefixes, self._pf_scheds = [], [], []
-        self.scheds = [Scheduler(bm, px, self.last_stats)
-                       for bm, px in zip(self.bms, self.prefixes)]
+        self.scheds = [Scheduler(bm, px, self.last_stats, registry=reg)
+                       for bm, px, reg in zip(self.bms, self.prefixes,
+                                              regs)]
         self.bm = self.bms[0]
         self.prefix = (self._pf_prefixes[0] if self._disagg
                        else self.prefixes[0])
@@ -590,7 +681,8 @@ class Engine:
             weights_dtype=("int8" if self.quant.weights == "int8"
                            else "fp"),
             kv_dtype="int8" if self._kv_quant else "fp",
-            shards=self._tp)
+            shards=self._tp,
+            max_resident_tasks=self.reg_cfg.max_resident_tasks)
 
     def _kv_bytes(self, tokens: int,
                   num_super_blocks: Optional[int] = None) -> int:
@@ -613,6 +705,31 @@ class Engine:
             per_cell = (self.cfg.kv_dim
                         * jnp.dtype(self.cfg.compute_dtype).itemsize)
         return 2 * layers * tokens * per_cell
+
+    def _adapter_fault_in(self, r: int, slot: int, task: int) -> None:
+        """Scatter one task's host factor slices into pool slot
+        ``r * K + slot`` — the device half of an adapter fault
+        (DESIGN.md §12). ONE jitted donated scatter covering the live
+        C-column / lora-form A-slice (and, when speculating, the
+        drafter's truncated twin at the same slot); the pool shape and
+        the traced slot index keep the compile cached, so faults never
+        retrace. Runs host-side between decode-loop exits and OUTSIDE
+        shard_map: the pool is committed replicated on the serve mesh,
+        so a replicated functional update is valid on every shard
+        without entering the sharded step graphs."""
+        g = jnp.int32(r * self.reg_cfg.max_resident_tasks + slot)
+        col = adapter_registry.task_slice(self._host_per_layer, task)
+        base, bc, pl = self._weights
+        if self._spec_on:
+            dbase, dbc, dpl = self._draft_weights
+            dcol = adapter_registry.task_slice(self._host_draft_pl, task)
+            pl, dpl = self._afault(pl, dpl, g, col, dcol)
+            self._draft_weights = (dbase, dbc, dpl)
+        else:
+            pl = self._afault(pl, g, col)
+        self._weights = (base, bc, pl)
+        self._step_weights = self._weights + self._draft_weights
+        self.registries[r].mark_loaded(task)
 
     def _reset_paged_pool(self) -> None:
         """Drop every block (and the prefix index) — used when a failed
@@ -1234,12 +1351,16 @@ class Engine:
 
     # -- dense ---------------------------------------------------------
 
-    def _admit_request(self, state: DecodeState, slot: int,
-                       req: Request) -> DecodeState:
+    def _admit_request(self, state: DecodeState, slot: int, req: Request,
+                       task_ref: Optional[int] = None) -> DecodeState:
+        """``task_ref``: the index the device graphs gather the adapter
+        with — the registry's pool slot on paging engines (the pooled
+        factors are indexed by slot), the task id itself otherwise."""
         prompt, plen = self._validate_request(req)
+        t = req.task if task_ref is None else task_ref
         pb = self._bucket(plen)
         padded = jnp.zeros((1, pb), jnp.int32).at[0, :plen].set(prompt)
-        task = jnp.int32(req.task) if self.rt.tasked else None
+        task = jnp.int32(t) if self.rt.tasked else None
         last, caches1 = self._prefill(*self._weights, padded,
                                       jnp.int32(plen - 1), task)
         dcaches1 = jnp.int32(0)         # placeholder leaf when spec is off
@@ -1251,7 +1372,7 @@ class Engine:
         self.last_stats.admitted += 1
         return self._admit(state, jnp.int32(slot), caches1, dcaches1, last,
                            jnp.int32(plen), jnp.int32(req.max_new_tokens),
-                           jnp.int32(req.task))
+                           jnp.int32(t))
 
     def _generate_dense(self, requests, key) -> List[np.ndarray]:
         st = self.last_stats
@@ -1269,11 +1390,30 @@ class Engine:
         meta: List[Optional[int]] = [None] * self.max_batch
 
         while pending or any(m is not None for m in meta):
-            # admit pending requests into free slots
+            # admit pending requests into free slots (dense mode has no
+            # Scheduler, so the engine gates on adapter residency here:
+            # a head whose task cannot get a pool slot waits for a
+            # harvest to unpin one — in-flight slots guarantee progress)
             for slot in range(self.max_batch):
                 if meta[slot] is None and pending:
-                    idx, req = pending.popleft()
-                    state = self._admit_request(state, slot, req)
+                    idx, req = pending[0]
+                    task_ref = None
+                    if self._reg_on:
+                        acq = self.registries[0].acquire(req.task)
+                        if acq is None:
+                            st.adapter_waits += 1
+                            st.backpressure_waits += 1
+                            break
+                        if acq.fault:
+                            st.adapter_faults += 1
+                            if acq.evicted is not None:
+                                st.adapter_evictions += 1
+                            self._adapter_fault_in(0, acq.slot, req.task)
+                        else:
+                            st.adapter_hits += 1
+                        task_ref = acq.slot
+                    pending.popleft()
+                    state = self._admit_request(state, slot, req, task_ref)
                     meta[slot] = idx
             # decode every active slot until one finishes
             if bool(np.any(np.asarray(state.active))):
@@ -1286,6 +1426,9 @@ class Engine:
             for slot in range(self.max_batch):
                 if meta[slot] is not None and not active[slot]:
                     results[meta[slot]] = out[slot, : int(widx[slot])].copy()
+                    if self._reg_on:
+                        self.registries[0].release(
+                            requests[meta[slot]].task)
                     meta[slot] = None
                     st.evicted += 1
         self._read_spec_stats(state, st)
@@ -1401,13 +1544,26 @@ class Engine:
                     plan = scheds[r].plan(
                         prompt.tolist(),
                         0 if self._disagg else req.max_new_tokens,
-                        namespace=ns)
+                        namespace=ns,
+                        task=req.task if self._reg_on else None)
                     if plan is None:    # backpressure: out of KV blocks
+                        #                 or of adapter slots
                         (pf_stat if self._disagg
                          else rstat[r])["backpressure_waits"] += 1
                         break
                     pendings[r].popleft()
                     progressed = True
+                    # adapter paging (DESIGN.md §12): the device state
+                    # carries the POOL-SLOT index (replica-offset into
+                    # the dp-striped pool), never the task id; a cold
+                    # task's slice is scattered in first
+                    task_ref = req.task
+                    if self._reg_on:
+                        if plan.adapter_fault:
+                            self._adapter_fault_in(r, plan.adapter_slot,
+                                                   req.task)
+                        task_ref = (r * self.reg_cfg.max_resident_tasks
+                                    + plan.adapter_slot)
                     target = pf_state if self._disagg else state
                     if plan.cow is not None:
                         target = self._pcow(
@@ -1426,10 +1582,12 @@ class Engine:
                         jnp.int32(plen), jnp.int32(plan.n_cached),
                         jnp.int32(1 if self._disagg
                                   else req.max_new_tokens),
-                        jnp.int32(req.task), jnp.int32(0), jnp.int32(0))
+                        jnp.int32(task_ref), jnp.int32(0), jnp.int32(0))
                     mrow[slot] = dict(idx=idx, req=req, prompt=prompt,
                                       plen=plen, blocks=plan.blocks,
-                                      ns=ns, t_admit=time.perf_counter(),
+                                      ns=ns, task=req.task,
+                                      task_ref=task_ref,
+                                      t_admit=time.perf_counter(),
                                       t_first=None)
                     if self._disagg:
                         pf_state = target
@@ -1486,13 +1644,17 @@ class Engine:
                             state, jnp.int32(slot), jnp.asarray(prow),
                             jnp.int32(h["plen"]), jnp.int32(h["plen"]),
                             jnp.int32(h["max_new"] - 1),
-                            jnp.int32(h["task"]), jnp.int32(h["t0"]),
+                            jnp.int32(h["task_ref"]), jnp.int32(h["t0"]),
                             jnp.int32(1))
                         rstat[r]["admitted"] += 1
                         pf_stat["handoffs"] += 1
+                        # the adapter pin taken at prefill admission rides
+                        # the handoff (pf + decode share the replica's
+                        # registry) and is released at decode harvest
                         meta[slot] = dict(
                             idx=h["idx"], prompt=h["prompt"],
-                            blocks=dst, ns=h["ns"],
+                            blocks=dst, ns=h["ns"], task=h["task"],
+                            task_ref=h["task_ref"],
                             t_admit=h["t_admit"], t_first=h["t_first"])
                     note_peaks(r)
             # ---- step the worker loops until some slot finishes ----
@@ -1536,14 +1698,16 @@ class Engine:
                         results[m["idx"]] = np.asarray([t0], np.int32)
                         self._pf_scheds[r].release(
                             m["prompt"], m["blocks"], namespace=m["ns"],
-                            register=False)
+                            register=False,
+                            task=m["task"] if self._reg_on else None)
                         rr, cost = rcost[m["idx"]]
                         self.router.complete(rr, cost)
                         continue
                     handoffs[r].append(dict(
                         idx=m["idx"], prompt=m["prompt"],
                         plen=m["plen"], blocks=m["blocks"], ns=m["ns"],
-                        task=req.task, max_new=req.max_new_tokens,
+                        task=req.task, task_ref=m["task_ref"],
+                        max_new=req.max_new_tokens,
                         t0=t0, t_admit=m["t_admit"], t_first=t))
             # ---- harvest decode completions ----
             active = np.asarray(state.active)
@@ -1568,7 +1732,9 @@ class Engine:
                 # did), return the rest to the free list
                 self.scheds[r].release(m["prompt"], m["blocks"],
                                        namespace=m["ns"],
-                                       register=not self._disagg)
+                                       register=not self._disagg,
+                                       task=(m["task"] if self._reg_on
+                                             else None))
                 self._tables[slot] = self._num_blocks
                 rstat[r]["evicted"] += 1
                 # phase split is resolvable only when the first token was
@@ -1585,7 +1751,8 @@ class Engine:
                 # needing more KV blocks than the pool can ever free)
                 raise RuntimeError(
                     "paged admission deadlock: request needs more KV "
-                    "blocks than the pool can ever free")
+                    "blocks (or adapter slots) than the pool can ever "
+                    "free")
         for r in range(R):
             rstat[r]["queue_depth"] = len(pendings[r])
         if ttft:

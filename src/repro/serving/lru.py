@@ -1,0 +1,61 @@
+"""Shared LRU bookkeeping for the host-side caches (DESIGN.md §12).
+
+Both residency managers in the serving stack — the ``PrefixCache``
+(KV-block prefix index, block_manager.py) and the ``AdapterRegistry``
+(device task-slot pool, adapter_registry.py) — need the same primitive:
+a monotonic recency clock over hashable keys, where eviction picks the
+least-recently-touched entry among whatever subset the caller deems
+evictable (unpinned leaves for the prefix cache, unpinned slots for the
+registry). ``LRUClock`` is that primitive, extracted so the eviction
+ordering is implemented — and property-tested (tests/test_property.py)
+— exactly once.
+
+Pure host state, no jax. The clock never decides *what* is evictable;
+callers pass the candidate set and get the stalest member back.
+"""
+from __future__ import annotations
+
+from typing import Dict, Hashable, Iterable, Optional
+
+
+class LRUClock:
+    """Monotonic recency clock: ``touch`` stamps a key with the next tick,
+    ``oldest`` returns the least-recently-touched of a candidate set.
+
+    Keys never touched rank older than any touched key (tick 0), and ties
+    — only possible among never-touched keys — break toward the earliest
+    candidate in iteration order, keeping eviction deterministic.
+    """
+
+    def __init__(self) -> None:
+        self._tick = 0
+        self._ticks: Dict[Hashable, int] = {}
+
+    def __len__(self) -> int:
+        return len(self._ticks)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._ticks
+
+    def touch(self, key: Hashable) -> int:
+        """Stamp ``key`` as most-recently-used; returns its new tick."""
+        self._tick += 1
+        self._ticks[key] = self._tick
+        return self._tick
+
+    def forget(self, key: Hashable) -> None:
+        """Drop ``key``'s stamp (evicted / released entries)."""
+        self._ticks.pop(key, None)
+
+    def tick_of(self, key: Hashable) -> int:
+        """Current stamp of ``key`` (0 = never touched == infinitely old)."""
+        return self._ticks.get(key, 0)
+
+    def oldest(self, candidates: Iterable[Hashable]) -> Optional[Hashable]:
+        """The least-recently-touched member of ``candidates`` (None when
+        empty). ``min`` is stable, so equal-tick (never-touched) keys fall
+        back to candidate order — deterministic for list inputs."""
+        cands = list(candidates)
+        if not cands:
+            return None
+        return min(cands, key=self.tick_of)

@@ -64,9 +64,27 @@ class Router:
         return r
 
     def complete(self, replica: int, cost: int) -> None:
-        """Refund a finished request's cost (engine calls at eviction)."""
+        """Refund a finished request's cost (engine calls at eviction).
+
+        Completions arrive in ANY order relative to routing — a replica
+        may fully drain while another still holds earlier requests — so
+        the only invariants are per-replica: the refund must match a
+        charge still outstanding there. Violations raise (not assert:
+        bookkeeping bugs must surface under ``python -O`` too); load
+        never goes negative, keeping least-loaded ties deterministic.
+        """
+        if not 0 <= replica < self.replicas:
+            raise ValueError(
+                f"complete on unknown replica {replica} "
+                f"(have {self.replicas})")
+        if cost < 0:
+            raise ValueError(f"negative completion cost {cost}")
+        if cost > self._load[replica]:
+            raise ValueError(
+                f"completion refund {cost} exceeds replica {replica}'s "
+                f"outstanding load {self._load[replica]} — double "
+                "complete or cost mismatch with route()")
         self._load[replica] -= cost
-        assert self._load[replica] >= 0, (replica, self._load)
 
     # -- introspection -------------------------------------------------
     def load(self, replica: int) -> int:

@@ -63,6 +63,16 @@ class EngineStats:
     cache_evictions: int = 0     # prefix blocks reclaimed under pressure
     # --- scheduler ---
     backpressure_waits: int = 0  # admissions deferred for lack of blocks
+    #                              or of an adapter slot
+    # --- adapter registry (DESIGN.md §12) ---
+    max_resident_tasks: int = 0  # device task-slot pool size per replica
+    #                              (0 = whole task axis resident, registry
+    #                              off — the adapter_* counters stay 0)
+    adapter_hits: int = 0        # admissions whose task was already pooled
+    adapter_faults: int = 0      # host->device task-slice fault-ins
+    adapter_evictions: int = 0   # idle residents displaced by a fault
+    adapter_waits: int = 0       # admissions deferred: all slots pinned
+    #                              (also counted in backpressure_waits)
     # --- speculative decode (DESIGN.md §10) ---
     spec_k: int = 0              # drafts per engine step (0 = spec off)
     spec_steps: int = 0          # decode-loop iterations (engine steps)
@@ -104,6 +114,13 @@ class EngineStats:
         return self.kv_blocks_peak * self.block_bytes_per_shard
 
     @property
+    def adapter_hit_rate(self) -> float:
+        """Fraction of admissions whose task slice was already in the
+        device pool (0.0 when the registry is off or nothing admitted)."""
+        n = self.adapter_hits + self.adapter_faults
+        return self.adapter_hits / n if n else 0.0
+
+    @property
     def acceptance_rate(self) -> float:
         """Fraction of drafter proposals the verifier accepted (0.0 when
         speculation is off or no decode steps ran)."""
@@ -141,6 +158,12 @@ class EngineStats:
                 f"evicts={self.evicted} waits={self.backpressure_waits} "
                 f"decode_traces={self.decode_traces} "
                 f"prefill_traces={self.prefill_traces}"
+                + (f" adapters={self.max_resident_tasks}slots "
+                   f"hit={self.adapter_hit_rate:.2f} "
+                   f"faults={self.adapter_faults} "
+                   f"aevicts={self.adapter_evictions} "
+                   f"awaits={self.adapter_waits}"
+                   if self.max_resident_tasks else "")
                 + (f" spec_k={self.spec_k} "
                    f"accept={self.acceptance_rate:.2f} "
                    f"tok/step={self.tokens_per_step:.2f}"

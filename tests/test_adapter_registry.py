@@ -1,0 +1,421 @@
+"""Paged adapter registry: thousands of tasks through a fixed K-slot
+device pool (DESIGN.md §12).
+
+Acceptance criteria:
+
+  * an engine with ``RegistryConfig(max_resident_tasks=8)`` serving 256
+    DISTINCT tasks emits greedy tokens identical to the all-resident
+    engine, with ``decode_traces == 1`` (fault-ins never retrace) and
+    zero pinned slots after the drain,
+  * admission backpressures when every slot is pinned by an in-flight
+    request (``adapter_waits`` counted, tokens still exact),
+  * the loaded-flag is transactional: a slot mapped by a rolled-back
+    admission faults again on retry, never decodes a stale/zero column,
+  * prefix caching keys on the TASK ID, not the pool slot — a task
+    evicted from the adapter pool and re-admitted later still warm-hits
+    its cached prompt prefixes,
+  * bad task ids (negative or >= num_tasks) are rejected host-side at
+    submission with a clear message,
+  * the registry composes with dense KV, speculative decode, TP meshes
+    and dp replicas (mesh cases need 4 fake devices — scripts/ci.sh
+    ``adapter-paging`` job; they skip on one device).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import configs as registry
+from repro.config.base import (RunConfig, SHAPES, RegistryConfig,
+                               ServeConfig, SpecConfig)
+from repro.core import tt as ttlib
+from repro.models import model as M
+from repro.serving import (AdapterRegistry, AdapterRuntime, Engine,
+                           LRUClock, Request)
+
+KEY = jax.random.PRNGKey(0)
+
+needs4 = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs 4 (fake) devices: run under "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=4 "
+           "(scripts/ci.sh adapter-paging job)")
+
+
+# ---------------------------------------------------------------------------
+# LRUClock units (shared with PrefixCache)
+# ---------------------------------------------------------------------------
+
+def test_lru_clock_orders_by_recency():
+    c = LRUClock()
+    for k in ("a", "b", "c"):
+        c.touch(k)
+    assert c.oldest(["a", "b", "c"]) == "a"
+    c.touch("a")                      # refresh -> b is now oldest
+    assert c.oldest(["a", "b", "c"]) == "b"
+    assert len(c) == 3 and "b" in c
+
+
+def test_lru_clock_never_touched_is_infinitely_old():
+    c = LRUClock()
+    c.touch("x")
+    # a never-touched candidate always loses to any touched one
+    assert c.oldest(["x", "y"]) == "y"
+    # deterministic tie-break among never-touched: first in iteration
+    assert c.oldest(["z", "y"]) == "z"
+    assert c.oldest([]) is None
+
+
+def test_lru_clock_forget():
+    c = LRUClock()
+    c.touch("a")
+    c.touch("b")
+    c.forget("a")
+    assert "a" not in c and len(c) == 1
+    c.forget("a")                     # idempotent
+    assert c.oldest(["a", "b"]) == "a"   # forgotten == never touched
+
+
+# ---------------------------------------------------------------------------
+# AdapterRegistry units (pure host-side)
+# ---------------------------------------------------------------------------
+
+def test_registry_validation():
+    with pytest.raises(ValueError):
+        AdapterRegistry(0)
+    with pytest.raises(ValueError):
+        AdapterRegistry(2, policy="random")
+
+
+def test_acquire_miss_fill_hit_evict():
+    r = AdapterRegistry(2)
+    a = r.acquire(10)
+    assert a.slot == 0 and a.fault and a.evicted is None
+    r.mark_loaded(10)
+    b = r.acquire(11)
+    assert b.slot == 1 and b.fault
+    r.mark_loaded(11)
+    # hit: same slot, no fault, no device work
+    h = r.acquire(10)
+    assert h.slot == 0 and not h.fault
+    assert len(r) == 2 and r.resident_tasks == [10, 11]
+    # all pins dropped -> a third task evicts the LRU resident (11:
+    # task 10 was re-touched by its hit)
+    for t in (10, 10, 11):
+        r.release(t)
+    e = r.acquire(12)
+    assert e.fault and e.evicted == 11 and e.slot == 1
+    assert r.slot_of(11) is None and r.slot_of(10) == 0
+
+
+def test_pins_block_eviction_then_backpressure():
+    r = AdapterRegistry(2)
+    r.acquire(1), r.acquire(2)
+    r.mark_loaded(1), r.mark_loaded(2)
+    # both slots pinned by in-flight requests -> a third task must wait
+    assert r.acquire(3) is None
+    assert r.pinned_slots == 2
+    r.release(2)
+    got = r.acquire(3)                # now evicts idle task 2
+    assert got is not None and got.evicted == 2
+    # pins are counted, not boolean
+    r.acquire(1)
+    assert r.pin_count(1) == 2
+    r.release(1)
+    assert r.pin_count(1) == 1
+
+
+def test_loaded_flag_is_transactional():
+    """An admission that acquires a slot but rolls back before the
+    device scatter leaves the slot mapped-but-unloaded: the retry MUST
+    fault again (decoding the stale/zero column would corrupt output)."""
+    r = AdapterRegistry(2)
+    a = r.acquire(7)
+    assert a.fault
+    r.release(7)                      # rollback WITHOUT mark_loaded
+    b = r.acquire(7)
+    assert b.slot == a.slot and b.fault   # same mapping, still faults
+    r.mark_loaded(7)
+    assert not r.acquire(7).fault
+
+
+def test_release_and_mark_loaded_errors():
+    r = AdapterRegistry(2)
+    with pytest.raises(ValueError):
+        r.release(5)                  # never acquired
+    with pytest.raises(ValueError):
+        r.mark_loaded(5)              # unmapped
+    r.acquire(5)
+    r.release(5)
+    with pytest.raises(ValueError):
+        r.release(5)                  # pin already dropped
+
+
+def test_fifo_policy_ignores_hits():
+    """fifo ranks by LOAD order: a hit on the oldest resident does not
+    save it from eviction (lru would refresh it)."""
+    for policy, victim in (("lru", 2), ("fifo", 1)):
+        r = AdapterRegistry(2, policy=policy)
+        for t in (1, 2):
+            r.acquire(t)
+            r.mark_loaded(t)
+            r.release(t)
+        r.acquire(1)                  # touch the older resident
+        r.release(1)
+        got = r.acquire(3)
+        assert got.evicted == victim, policy
+
+
+def test_clear_resets_everything():
+    r = AdapterRegistry(2)
+    r.acquire(1)
+    r.mark_loaded(1)
+    r.clear()
+    assert len(r) == 0 and r.pinned_slots == 0
+    a = r.acquire(9)
+    assert a.slot == 0 and a.fault
+
+
+# ---------------------------------------------------------------------------
+# config plumbing
+# ---------------------------------------------------------------------------
+
+def test_registry_config_validation():
+    with pytest.raises(ValueError):
+        ServeConfig(registry=RegistryConfig(max_resident_tasks=-1)
+                    ).validate()
+    with pytest.raises(ValueError):
+        ServeConfig(registry=RegistryConfig(max_resident_tasks=4,
+                                            eviction="random")).validate()
+    assert not RegistryConfig().enabled
+    assert RegistryConfig(max_resident_tasks=4).enabled
+
+
+def test_registry_requires_tasked_runtime():
+    """Paging pools the TASK axis — a runtime without one (4d variant
+    collapses tasks into the layer mode) must be rejected up front."""
+    cfg = registry.get_smoke_config("stablelm-1.6b")
+    run = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                    adapter_kind="metatt", adapter_variant="4d",
+                    num_tasks=1, adapter_rank=4)
+    spec = M.build_adapter_spec(run)
+    params = M.init_params(cfg, spec, KEY)
+    params["adapter"] = {"cores": ttlib.random_tt(
+        KEY, spec.cfg.mode_sizes, 4, scale=0.8)}
+    rt = AdapterRuntime.build("live", params["base"], spec,
+                              params["adapter"], params["frozen"])
+    with pytest.raises(ValueError, match="task"):
+        Engine(cfg, rt, serve=ServeConfig(
+            max_batch=2, cache_len=32, out_cap=8,
+            registry=RegistryConfig(max_resident_tasks=2)))
+
+
+# ---------------------------------------------------------------------------
+# engine parity
+# ---------------------------------------------------------------------------
+
+def _setup(num_tasks=16, mode="live"):
+    cfg = registry.get_smoke_config("stablelm-1.6b")
+    run = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                    adapter_kind="metatt", adapter_variant="4+1d",
+                    num_tasks=num_tasks, adapter_rank=4)
+    spec = M.build_adapter_spec(run)
+    params = M.init_params(cfg, spec, KEY)
+    params["adapter"] = {"cores": ttlib.random_tt(
+        KEY, spec.cfg.mode_sizes, 4, scale=0.8)}
+    rt = AdapterRuntime.build(mode, params["base"], spec,
+                              params["adapter"], params["frozen"])
+    return cfg, rt
+
+
+def _mixed_requests(cfg, n=10, tasks=16):
+    prompts = [jax.random.randint(jax.random.PRNGKey(i), (4 + i % 3,), 0,
+                                  cfg.vocab_size) for i in range(n)]
+    return [Request(p, 3 + (i % 3), task=(7 * i) % tasks)
+            for i, p in enumerate(prompts)]
+
+
+def _serve(cfg, rt, reqs, *, slots=0, **kw):
+    base = dict(max_batch=2, cache_len=32, out_cap=8, page_size=8,
+                prefill_chunk=4)
+    base.update(kw)
+    if slots:
+        base["registry"] = RegistryConfig(max_resident_tasks=slots)
+    eng = Engine(cfg, rt, serve=ServeConfig(**base))
+    return [o.tolist() for o in eng.generate(reqs)], eng
+
+
+def _assert_drained(eng):
+    assert eng.registries, "registry engine expected"
+    for r in eng.registries:
+        assert r.pinned_slots == 0, "leaked adapter-slot pins"
+
+
+def test_pool_of_8_serves_256_distinct_tasks_token_identical():
+    """The headline: 256 distinct tasks stream through an 8-slot pool
+    with exact tokens, one decode trace, and no leaked pins."""
+    cfg, rt = _setup(num_tasks=256)
+    reqs = [Request([1 + t % 7, 2, 3 + t % 5], 2, task=t)
+            for t in range(256)]
+    sv = dict(max_batch=4, cache_len=16, out_cap=4, prefill_chunk=8)
+    ref, _ = _serve(cfg, rt, reqs, **sv)
+    got, eng = _serve(cfg, rt, reqs, slots=8, **sv)
+    assert got == ref
+    st = eng.last_stats
+    assert st.decode_traces == 1
+    assert st.adapter_faults == 256           # every task distinct
+    assert st.adapter_hits == 0
+    assert st.adapter_evictions == 256 - 8    # pool filled once, then churn
+    assert st.max_resident_tasks == 8
+    _assert_drained(eng)
+    # the pool holds the LAST 8 tasks (LRU churn through slots)
+    assert len(eng.registries[0]) == 8
+
+
+def test_task_reuse_hits_without_refault():
+    """Zipf-ish reuse: repeated tasks hit their resident slot — faults
+    count DISTINCT task loads, not admissions."""
+    cfg, rt = _setup(num_tasks=16)
+    reqs = _mixed_requests(cfg, n=12, tasks=4)   # 4 distinct tasks
+    ref, _ = _serve(cfg, rt, reqs)
+    got, eng = _serve(cfg, rt, reqs, slots=4)
+    assert got == ref
+    st = eng.last_stats
+    assert st.adapter_faults == 4
+    assert st.adapter_hits == len(reqs) - 4
+    assert st.adapter_evictions == 0
+    assert st.adapter_hit_rate == pytest.approx((len(reqs) - 4) / len(reqs))
+    _assert_drained(eng)
+
+
+def test_backpressure_when_all_slots_pinned():
+    """More distinct in-flight tasks than slots: admission defers
+    (adapter_waits) instead of evicting a pinned resident, and the
+    output is still exact."""
+    cfg, rt = _setup(num_tasks=16)
+    reqs = _mixed_requests(cfg, n=8, tasks=8)    # all-distinct tasks
+    sv = dict(max_batch=4)
+    ref, _ = _serve(cfg, rt, reqs, **sv)
+    got, eng = _serve(cfg, rt, reqs, slots=2, **sv)   # batch 4 > 2 slots
+    assert got == ref
+    st = eng.last_stats
+    assert st.adapter_waits > 0
+    assert st.backpressure_waits >= st.adapter_waits
+    _assert_drained(eng)
+
+
+def test_prefix_cache_survives_adapter_eviction():
+    """Prefix namespaces key on the TASK ID, not the pool slot: a task
+    evicted from the adapter pool between passes still warm-hits its
+    cached prompt pages on re-admission — and the hit is not poisoned
+    by another task having occupied the same slot meanwhile."""
+    cfg, rt = _setup(num_tasks=16)
+    reqs = _mixed_requests(cfg, n=6, tasks=6)
+    ref, _ = _serve(cfg, rt, reqs)
+    _, eng = _serve(cfg, rt, reqs, slots=2)      # K=2 -> heavy churn
+    warm = [o.tolist() for o in eng.generate(reqs)]
+    assert warm == ref
+    st = eng.last_stats
+    assert st.prefix_hit_rate > 0.0
+    assert st.decode_traces == 1                 # no retrace across passes
+    _assert_drained(eng)
+
+
+def test_dense_mode_registry_token_identical():
+    cfg, rt = _setup(num_tasks=16)
+    reqs = _mixed_requests(cfg, n=8, tasks=8)
+    ref, _ = _serve(cfg, rt, reqs, cache_mode="dense")
+    got, eng = _serve(cfg, rt, reqs, slots=3, cache_mode="dense")
+    assert got == ref
+    st = eng.last_stats
+    assert st.adapter_faults == 8
+    _assert_drained(eng)
+
+
+def test_lora_form_runtime_pages_identically():
+    """The lora-form runtime pools its per-task A factor (task axis 1)
+    through the same registry path."""
+    cfg, rt = _setup(num_tasks=16, mode="lora")
+    reqs = _mixed_requests(cfg, n=8, tasks=8)
+    ref, _ = _serve(cfg, rt, reqs)
+    got, eng = _serve(cfg, rt, reqs, slots=3)
+    assert got == ref
+    assert eng.last_stats.adapter_faults == 8
+    _assert_drained(eng)
+
+
+def test_speculative_drafter_pages_with_target():
+    """Spec decode composes: the rank-truncated drafter's task column
+    faults in at the same slot in the same scatter, tokens exact."""
+    cfg, rt = _setup(num_tasks=16)
+    reqs = _mixed_requests(cfg, n=6, tasks=6)
+    sc = SpecConfig(spec_k=2, draft_rank=2)
+    ref, _ = _serve(cfg, rt, reqs, spec=sc)
+    got, eng = _serve(cfg, rt, reqs, slots=3, spec=sc)
+    assert got == ref
+    st = eng.last_stats
+    assert st.decode_traces == 1 and st.adapter_faults == 6
+    _assert_drained(eng)
+
+
+# ---------------------------------------------------------------------------
+# task-id validation at submission (host-side, both cache modes)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cache_mode", ["paged", "dense"])
+@pytest.mark.parametrize("bad", [-1, 16, 99])
+def test_bad_task_id_rejected_at_submission(cache_mode, bad):
+    cfg, rt = _setup(num_tasks=16)
+    reqs = _mixed_requests(cfg, n=2, tasks=2)
+    reqs.append(Request([1, 2, 3], 2, task=bad))
+    eng = Engine(cfg, rt, serve=ServeConfig(
+        max_batch=2, cache_len=32, out_cap=8, cache_mode=cache_mode))
+    with pytest.raises(ValueError, match="out of range"):
+        eng.generate(reqs)
+
+
+# ---------------------------------------------------------------------------
+# 4-device mesh cases
+# ---------------------------------------------------------------------------
+
+@needs4
+def test_tp4_registry_token_identical():
+    """The pool is replicated over the TP mesh; the fault-in scatter
+    runs OUTSIDE shard_map and the sharded step consumes its output
+    without a retrace."""
+    cfg, rt = _setup(num_tasks=16)
+    reqs = _mixed_requests(cfg, n=8, tasks=8)
+    ref, _ = _serve(cfg, rt, reqs)
+    got, eng = _serve(cfg, rt, reqs, slots=3, mesh_shape=(1, 4))
+    assert got == ref
+    st = eng.last_stats
+    assert st.shards == 4 and st.decode_traces == 1
+    assert st.adapter_faults == 8
+    _assert_drained(eng)
+
+
+@needs4
+def test_dp2_per_replica_registries_token_identical():
+    """dp replicas each own a private registry over their own pool
+    stripe; global slot = replica * K + local slot."""
+    cfg, rt = _setup(num_tasks=16)
+    reqs = _mixed_requests(cfg, n=8, tasks=8)
+    ref, _ = _serve(cfg, rt, reqs)
+    got, eng = _serve(cfg, rt, reqs, slots=3, mesh_shape=(2, 2))
+    assert got == ref
+    assert len(eng.registries) == 2
+    _assert_drained(eng)
+
+
+@needs4
+def test_dp2_disagg_shared_registry_token_identical():
+    """Disaggregation: the prefill scheduler takes the pin, the decode
+    scheduler's harvest drops it — one registry per replica, shared by
+    both, drains to zero pins."""
+    cfg, rt = _setup(num_tasks=16)
+    reqs = _mixed_requests(cfg, n=8, tasks=8)
+    ref, _ = _serve(cfg, rt, reqs)
+    got, eng = _serve(cfg, rt, reqs, slots=3, mesh_shape=(2, 2),
+                      disagg=True)
+    assert got == ref
+    assert eng.last_stats.decode_traces == 1
+    _assert_drained(eng)

@@ -113,6 +113,55 @@ def test_router_validation():
         Router(2, "nope")
 
 
+def test_router_out_of_order_completions():
+    """Completions arrive in ANY order relative to routing (one replica
+    can fully drain while another holds earlier requests): load drains
+    exactly per replica and later ties stay deterministic."""
+    r = Router(2, "least_loaded")
+    assert [r.route(c) for c in (4, 2, 3)] == [0, 1, 1]
+    # replica 1's SECOND request completes before its first
+    r.complete(1, 3)
+    r.complete(1, 2)
+    assert r.loads() == [4, 0]
+    r.complete(0, 4)
+    assert r.loads() == [0, 0]
+    # fully drained: the tie breaks toward replica 0 again
+    assert r.route(1) == 0
+
+
+def test_router_interleaved_route_complete():
+    """route/complete interleaving mid-stream: refunds reshuffle the
+    least-loaded ordering deterministically."""
+    r = Router(3, "least_loaded")
+    assert [r.route(c) for c in (6, 3, 3)] == [0, 1, 2]
+    assert r.route(1) == 1            # tie 3,3 -> lowest index
+    r.complete(2, 3)                  # replica 2 drains first
+    assert r.route(2) == 2
+    r.complete(0, 6)
+    assert r.route(1) == 0
+    assert r.loads() == [1, 4, 2]
+
+
+def test_router_complete_rejects_bad_refunds():
+    """Bookkeeping violations raise (never silently clamp): unknown
+    replica, negative cost, refund exceeding the replica's outstanding
+    load (double complete) — and load can never go negative."""
+    r = Router(2, "least_loaded")
+    r.route(5)
+    with pytest.raises(ValueError):
+        r.complete(2, 1)              # unknown replica
+    with pytest.raises(ValueError):
+        r.complete(-1, 1)
+    with pytest.raises(ValueError):
+        r.complete(0, -1)             # negative cost
+    with pytest.raises(ValueError):
+        r.complete(0, 6)              # over-refund
+    r.complete(0, 5)
+    with pytest.raises(ValueError):
+        r.complete(0, 5)              # double complete
+    assert r.loads() == [0, 0]
+
+
 def test_fleet_config_validation():
     cfg, rt = _runtime()
     with pytest.raises(ValueError):

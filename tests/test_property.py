@@ -137,6 +137,59 @@ def test_dmrg_preserves_function_within_truncation_bound(seed, r_hi):
 
 
 # ---------------------------------------------------------------------------
+# LRU clock invariants (serving/lru.py — shared by PrefixCache and the
+# adapter registry, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+from repro.serving import LRUClock  # noqa: E402
+
+_keys = st.integers(min_value=0, max_value=7)
+
+
+@settings(max_examples=50, deadline=None)
+@given(ops=st.lists(st.tuples(st.booleans(), _keys), max_size=40),
+       cands=st.lists(_keys, min_size=1, max_size=8, unique=True))
+def test_lru_oldest_is_least_recently_touched(ops, cands):
+    """After any interleaving of touch/forget, ``oldest(candidates)``
+    is the candidate whose last surviving touch is earliest — with
+    never-touched (or forgotten) keys infinitely old, and ties broken
+    toward the first candidate (deterministic eviction order)."""
+    clock = LRUClock()
+    last = {}                         # reference: key -> touch index
+    for i, (is_touch, k) in enumerate(ops):
+        if is_touch:
+            clock.touch(k)
+            last[k] = i + 1
+        else:
+            clock.forget(k)
+            last.pop(k, None)
+    expect = min(cands, key=lambda k: last.get(k, 0))
+    assert clock.oldest(cands) == expect
+
+
+@settings(max_examples=50, deadline=None)
+@given(ops=st.lists(_keys, min_size=1, max_size=40))
+def test_lru_eviction_order_matches_touch_order(ops):
+    """Draining the clock by repeated oldest()+forget() yields keys in
+    exactly last-touch order — the registry's eviction sequence among
+    unpinned residents."""
+    clock = LRUClock()
+    last = {}
+    for i, k in enumerate(ops):
+        clock.touch(k)
+        last[k] = i
+    expect = sorted(last, key=last.get)
+    drained = []
+    alive = sorted(last)
+    while alive:
+        k = clock.oldest(alive)
+        drained.append(k)
+        clock.forget(k)
+        alive.remove(k)
+    assert drained == expect
+
+
+# ---------------------------------------------------------------------------
 # in-graph sampling invariants (serving/sampling.py)
 # ---------------------------------------------------------------------------
 
