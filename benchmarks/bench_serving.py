@@ -784,6 +784,86 @@ def _spec_rows(rows, *, smoke: bool) -> None:
             f"speculative engine not faster: {speedup:.2f}x <= 1.0")
 
 
+def _chaos_rows(rows, *, smoke: bool) -> None:
+    """Serving resilience smoke (DESIGN.md §13): the shared-prefix
+    workload under a seeded chaos schedule — forced allocation
+    failures, one scripted cancel, one NaN-logit injection — vs the
+    fault-free run.
+
+    Asserted: every SURVIVOR (request not deliberately killed) is
+    token-identical to the fault-free run, the cancelled / failed
+    requests carry the right terminal status, ``decode_traces`` stays
+    1 (aborts and the NaN guard ride the one compiled graph), and the
+    per-step pool audits (run by the injector on every host-loop
+    iteration) plus the at-rest audit hold — zero leaked blocks, zero
+    leaked adapter pins. The ``serving/chaos_survivors`` row records
+    what fired and what survived.
+    """
+    from repro.serving import FINISHED, ChaosInjector, audit
+    n_req, n_new, slots = (6, 6, 3) if smoke else (12, 12, 4)
+    cfg = registry.get_smoke_config("stablelm-1.6b")
+    run_cfg = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                        adapter_kind="metatt", adapter_variant="4+1d",
+                        num_tasks=2, adapter_rank=8)
+    spec = M.build_adapter_spec(run_cfg)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, spec, key)
+    params["adapter"] = {"cores": ttlib.random_tt(key, spec.cfg.mode_sizes,
+                                                  8, scale=0.5)}
+    rt = AdapterRuntime.build("lora", params["base"], spec,
+                              params["adapter"], params["frozen"])
+    cache_len = 32 + n_new
+    keys = jax.random.split(key, n_req)
+    reqs = [Request(np.asarray(jax.random.randint(
+        keys[i], (4 + i % 4,), 0, cfg.vocab_size)), n_new, task=i % 2,
+        request_id=f"r{i}") for i in range(n_req)]
+
+    sv = ServeConfig(max_batch=slots, cache_len=cache_len, out_cap=n_new,
+                     page_size=8, prefill_chunk=8)
+    eng = Engine(cfg, rt, serve=sv)
+    baseline = eng.generate(reqs)           # compile + fault-free tokens
+    chaos = ChaosInjector(seed=0, alloc_fail_steps=(0, 1),
+                          alloc_fail_rate=0.2,
+                          cancel_at={1: ["r1"]},
+                          nan_after={"r3": 1})
+    t0 = time.perf_counter()
+    out = eng.generate(reqs, chaos=chaos)
+    dt = time.perf_counter() - t0
+    st = eng.last_stats
+    audit(eng)                              # at rest: drained, zero pins
+    victims = {"r1", "r3"}
+    survivors = [i for i in range(n_req)
+                 if reqs[i].request_id not in victims]
+    identical = all(out[i].tolist() == baseline[i].tolist()
+                    for i in survivors)
+    statuses = [r.status for r in eng.last_results]
+    rows.append(emit(
+        "serving/chaos_survivors",
+        dt / max(st.tokens_generated, 1) * 1e6,
+        f"survivors_identical={identical},"
+        f"survivors={len(survivors)}/{n_req},"
+        f"alloc_faults={chaos.alloc_faults},"
+        f"cancelled={st.cancelled},nan_faults={st.numerics_faults},"
+        f"failed={st.failed_requests},waits={st.backpressure_waits},"
+        f"decode_traces={st.decode_traces}"))
+    _record_stats("engine_chaos_survivors", st)
+    print(f"# engine stats [chaos]: {st.summary()}")
+    if not identical:
+        raise AssertionError(
+            "chaos perturbed a survivor's tokens — scheduling faults "
+            "must never change math")
+    if statuses[1] != "CANCELLED" or statuses[3] != "FAILED":
+        raise AssertionError(
+            f"victim statuses wrong: r1={statuses[1]} r3={statuses[3]}")
+    if any(statuses[i] != FINISHED for i in survivors):
+        raise AssertionError(f"survivor not FINISHED: {statuses}")
+    if chaos.alloc_faults == 0:
+        raise AssertionError("chaos schedule never fired an alloc fault")
+    if st.decode_traces != 1:
+        raise AssertionError(
+            f"chaos retraced the decode graph: {st.decode_traces}")
+
+
 def _merge_rows_into_json(rows) -> None:
     """Merge freshly produced CSV rows (+ ENGINE_STATS) into
     BENCH_serving.json in place — rows with the same name are replaced,
@@ -854,6 +934,17 @@ def run_multitask(*, smoke: bool = False) -> list:
     return rows
 
 
+def run_chaos(*, smoke: bool = False) -> list:
+    """The ``--chaos`` entry point: the seeded-chaos survivor row only
+    (the scripts/ci.sh chaos-parity job runs this with --smoke; merges
+    serving/chaos_survivors into BENCH_serving.json)."""
+    ENGINE_STATS.clear()
+    rows = []
+    _chaos_rows(rows, smoke=smoke)
+    _merge_rows_into_json(rows)
+    return rows
+
+
 def run(*, smoke: bool = False) -> list:
     ENGINE_STATS.clear()
     rows = []
@@ -887,6 +978,10 @@ if __name__ == "__main__":
                          "adapter pool vs all-resident (merges "
                          "serving/zipf_256tasks into BENCH_serving.json; "
                          "honors --smoke)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="seeded chaos survivor row only (merges "
+                         "serving/chaos_survivors into "
+                         "BENCH_serving.json; honors --smoke)")
     args = ap.parse_args()
     if args.mesh:
         print("name,us_per_call,derived")
@@ -897,6 +992,9 @@ if __name__ == "__main__":
     elif args.multitask:
         print("name,us_per_call,derived")
         run_multitask(smoke=args.smoke)
+    elif args.chaos:
+        print("name,us_per_call,derived")
+        run_chaos(smoke=args.smoke)
     elif args.spec:
         print("name,us_per_call,derived")
         run_spec(smoke=args.smoke)

@@ -44,11 +44,13 @@ from repro.config.base import (RegistryConfig, RunConfig, SHAPES,
                                ServeConfig)
 from repro.core import tt as ttlib
 from repro.models import model as M
-from repro.serving import AdapterRuntime, Engine, Request, SpecConfig
+from repro.serving import (AdapterRuntime, ChaosInjector, Engine, FINISHED,
+                           Request, SpecConfig, audit)
 
 
 def serve(cfg, runtime, reqs, *, max_batch, cache_len, out_cap, tp=0,
-          dp=0, disagg=False, row_parallel=False, spec=None, slots=0):
+          dp=0, disagg=False, row_parallel=False, spec=None, slots=0,
+          chaos=None):
     mesh = (dp or 1, tp or 1) if (tp or dp or row_parallel) else ()
     sv = ServeConfig(max_batch=max_batch, cache_len=cache_len,
                      out_cap=out_cap, mesh_shape=mesh, disagg=disagg,
@@ -58,7 +60,7 @@ def serve(cfg, runtime, reqs, *, max_batch, cache_len, out_cap, tp=0,
     eng = Engine(cfg, runtime, serve=sv)
     eng.generate(reqs)   # warm-up: compile once + populate the prefix cache
     t0 = time.perf_counter()
-    outs = eng.generate(reqs)
+    outs = eng.generate(reqs, chaos=chaos)
     dt = time.perf_counter() - t0
     toks = sum(len(o) for o in outs)
     # per-generate observability: KV blocks in use, prefix-cache hit rate,
@@ -75,6 +77,20 @@ def serve(cfg, runtime, reqs, *, max_batch, cache_len, out_cap, tp=0,
                   f"waits={r['backpressure_waits']}"
                   + (f" handoffs={r['handoffs']}" if "handoffs" in r
                      else ""))
+    # request lifecycle (DESIGN.md §13): per-request terminal status —
+    # printed whenever something other than a clean FINISH happened
+    # (deadline sweep, scripted cancel, chaos fault, preemption)
+    if chaos is not None or any(rr.status != FINISHED or rr.preemptions
+                                for rr in eng.last_results):
+        for i, rr in enumerate(eng.last_results):
+            print(f"    request {i:>2}: {rr.status:<9} "
+                  f"tokens={rr.n_generated:<3} "
+                  f"preemptions={rr.preemptions}")
+    if chaos is not None:
+        audit(eng)  # host-pool invariants hold at rest after the faults
+        print(f"  chaos: alloc_faults={chaos.alloc_faults} "
+              f"scatter_faults={chaos.scatter_faults} "
+              f"killed={chaos.killed}")
     return outs, dt, toks
 
 
@@ -104,6 +120,18 @@ def main():
                          "task axis resident). Applies to the live and "
                          "lora runtimes; merged folds one task into the "
                          "weights and has no task axis to page")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request wall-clock budget measured from "
+                         "generate() (0 = none): requests past it are "
+                         "aborted between steps and finish with status "
+                         "TIMEOUT plus whatever tokens they produced "
+                         "(DESIGN.md §13)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="re-run the live stream under a seeded "
+                         "ChaosInjector (forced allocation backpressure, "
+                         "one scripted cancel, one NaN-logit fault) and "
+                         "check survivors stay token-identical "
+                         "(DESIGN.md §13)")
     ap.add_argument("--spec-k", type=int, default=0,
                     help="draft tokens per engine step (0 = speculative "
                          "decode off)")
@@ -127,9 +155,11 @@ def main():
                              params["frozen"])
 
     keys = jax.random.split(key, args.requests)
+    deadline = args.deadline_ms / 1e3 if args.deadline_ms > 0 else None
     reqs = [Request(jax.random.randint(keys[i], (4 + i % 5,), 0,
                                        cfg.vocab_size),
-                    args.tokens, task=i % args.tasks)
+                    args.tokens, task=i % args.tasks,
+                    deadline_s=deadline, request_id=f"r{i}")
             for i in range(args.requests)]
     cache_len = 16 + args.tokens
     kw = dict(max_batch=args.batch, cache_len=cache_len,
@@ -140,6 +170,22 @@ def main():
 
     rt_live = AdapterRuntime.build("live", base, spec, adapter, frozen)
     live, t_live, toks = serve(cfg, rt_live, reqs, **tasked_kw)
+
+    if args.chaos:
+        # seeded fault schedule (DESIGN.md §13): backpressure on the
+        # first two host steps, cancel r1 mid-flight, NaN-fail r2 after
+        # its second token — survivors must match the clean run exactly
+        inj = ChaosInjector(seed=0, alloc_fail_steps=(0, 1),
+                            alloc_fail_rate=0.2,
+                            cancel_at={1: ["r1"]},
+                            nan_after={"r2": 2} if args.requests > 2
+                            else None)
+        chaosed, _, _ = serve(cfg, rt_live, reqs, chaos=inj, **tasked_kw)
+        faulted = {"r1", "r2"}
+        same_chaos = all(a.tolist() == b.tolist()
+                         for r, a, b in zip(reqs, live, chaosed)
+                         if r.request_id not in faulted)
+        print(f"  chaos survivors identical to clean run: {same_chaos}")
 
     spec_cfg = None
     if args.spec_k:

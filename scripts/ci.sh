@@ -79,3 +79,15 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 XLA_FLAGS=--xla_force_host_platform_device_count=4 \
     python -m pytest -x -q tests/test_adapter_registry.py
 python benchmarks/bench_serving.py --multitask --smoke
+
+# chaos-parity job (DESIGN.md §13): request lifecycle (cancel / deadline
+# / preemption), the in-graph NaN guard, replica failover and the seeded
+# chaos harness — survivors of every fault schedule must stay
+# token-identical to the unfaulted run with host-pool invariants audited
+# after every step and zero leaked blocks/pins; the 8-device mesh runs
+# the dp2 replica-kill cases (kill one decode replica mid-generate,
+# drain onto the survivor, match dp1 exactly), and the chaos bench
+# merges the serving/chaos_survivors row into BENCH_serving.json
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m pytest -x -q tests/test_chaos.py tests/test_fault_tolerance.py
+python benchmarks/bench_serving.py --chaos --smoke

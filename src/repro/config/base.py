@@ -410,6 +410,16 @@ class ServeConfig:
         ``registry.max_resident_tasks=K`` serves any number of tasks
         from a K-slot device pool per replica, paging task slices on
         demand; 0 keeps every task resident (off).
+    preempt_after: recompute preemption for forward progress
+        (DESIGN.md §13). When the FIFO head of a replica's admission
+        queue has been backpressured for this many CONSECUTIVE host-loop
+        iterations, the engine preempts the youngest running request on
+        that replica vLLM-recompute-style: its generated tokens are
+        harvested, its blocks freed (prompt KV registered in the prefix
+        cache, so recompute is cheap) and it re-enqueues behind the
+        blocked head with prompt+generated as the new prompt. 0 (the
+        default) disables preemption — the head waits for natural
+        evictions. Paged, non-disaggregated engines only.
 
     Data parallelism (DESIGN.md §11): ``mesh_shape=(data, model)`` with
     data > 1 stripes decode slots AND paged-pool blocks across data
@@ -436,6 +446,7 @@ class ServeConfig:
     row_parallel: bool = False
     spec: SpecConfig = SpecConfig()
     registry: RegistryConfig = RegistryConfig()
+    preempt_after: int = 0         # 0 = recompute preemption off
 
     @property
     def pages_per_request(self) -> int:
@@ -506,6 +517,19 @@ class ServeConfig:
                 f"page_size={self.page_size} must be a multiple of the "
                 "8-row f32 sublane (the paged-attention kernel tiles "
                 "(page, head_dim) blocks)")
+        if self.preempt_after < 0:
+            raise ValueError(
+                f"ServeConfig.preempt_after={self.preempt_after} must be "
+                ">= 0 (0 disables recompute preemption)")
+        if self.preempt_after and self.cache_mode != "paged":
+            raise ValueError(
+                "recompute preemption frees paged KV blocks; it needs "
+                "cache_mode='paged'")
+        if self.preempt_after and self.disagg:
+            raise ValueError(
+                "preempt_after targets decode-side admission; the "
+                "disaggregated prefill worker has its own pool and is "
+                "not preemptible (set preempt_after=0 with disagg=True)")
         if self.cache_mode == "paged" \
                 and self.resolved_num_blocks < self.pages_per_request:
             raise ValueError(

@@ -52,16 +52,24 @@ class Watchdog:
     _steps: int = 0
 
     def step(self, step_idx: int, dt: float) -> bool:
-        """Record one step duration; returns True if flagged as straggler."""
+        """Record one step duration; returns True if flagged as straggler.
+
+        Flagged durations are EXCLUDED from the EWMA update: folding a
+        straggler into the baseline inflates the threshold and masks the
+        next straggler (a 3x-slow step would raise the baseline ~20% at
+        decay=0.9 — two consecutive 2.5x stragglers and only the first
+        fires). The baseline tracks healthy steps only.
+        """
         flagged = False
         if self._steps >= self.min_steps and dt > self.threshold * self._ewma:
             flagged = True
             if self.on_straggler is not None:
                 self.on_straggler(step_idx, dt, self._ewma)
-        if self._ewma == 0.0:
-            self._ewma = dt
-        else:
-            self._ewma = self.decay * self._ewma + (1 - self.decay) * dt
+        if not flagged:
+            if self._ewma == 0.0:
+                self._ewma = dt
+            else:
+                self._ewma = self.decay * self._ewma + (1 - self.decay) * dt
         self._steps += 1
         return flagged
 

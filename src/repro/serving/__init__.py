@@ -25,18 +25,27 @@ ServeConfig.mesh_shape — DESIGN.md §9).
   Router          — deterministic request placement over data replicas
                     (least-loaded / round-robin, DESIGN.md §11)
   EngineStats     — per-generate observability (engine.last_stats)
+  RequestResult   — per-request outcome (engine.last_results): tokens +
+                    status (FINISHED / CANCELLED / TIMEOUT / FAILED) +
+                    preemption count (DESIGN.md §13)
+  ChaosInjector   — seeded fault schedule for resilience testing; audit /
+                    audit_pools check the host-state invariants every
+                    chaos step (serving/chaos.py, DESIGN.md §13)
 """
 from repro.config.base import (RegistryConfig, ServeConfig,  # noqa: F401
                                SpecConfig)
 from repro.serving.adapter_registry import (AcquireResult,  # noqa: F401
                                             AdapterRegistry)
 from repro.serving.adapter_runtime import AdapterRuntime  # noqa: F401
+from repro.serving.chaos import (ChaosInjector, audit,  # noqa: F401
+                                 audit_pools)
 from repro.serving.lru import LRUClock  # noqa: F401
 from repro.serving.block_manager import (BlockManager,  # noqa: F401
                                          PrefixCache)
-from repro.serving.engine import (DecodeState, Engine,  # noqa: F401
-                                  PagedState, Request, make_prefill,
-                                  make_serve_step)
+from repro.serving.engine import (CANCELLED, FAILED,  # noqa: F401
+                                  FINISHED, TIMEOUT, DecodeState, Engine,
+                                  PagedState, Request, RequestResult,
+                                  make_prefill, make_serve_step)
 from repro.serving.router import Router  # noqa: F401
 from repro.serving.sampling import SamplingConfig, sample  # noqa: F401
 from repro.serving.scheduler import Scheduler  # noqa: F401

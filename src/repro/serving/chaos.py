@@ -1,0 +1,276 @@
+"""Seeded chaos injection + invariant audits for the serving engine
+(DESIGN.md §13).
+
+The refcounted host state behind continuous batching — BlockManager free
+lists, PrefixCache entry refs, AdapterRegistry pins, Router load — is
+exactly the state that silently corrupts when an abort / preemption /
+failover path forgets one deref. This module provides both halves of the
+defense:
+
+  * ``ChaosInjector`` — a deterministic, seeded fault schedule the engine
+    consults between jitted steps: forced allocation failures (the
+    Scheduler's ``fault_hook`` seam makes ``plan`` report backpressure),
+    adapter fault-in scatter failures (the admission unwinds and the slot
+    stays mapped-but-unloaded, exercising the registry's transactional
+    loaded-flag), replica kill at host step k (``Router.mark_down`` +
+    the recompute drain), request cancellations at step k, and per-request
+    NaN-logit injection (the IN-GRAPH NaN guard flags the row, the host
+    fails the request instead of emitting garbage). The replica-kill
+    trigger is ``distributed/fault_tolerance.FailureInjector`` — the same
+    fail-at-step primitive the training restart tests use, unified here
+    for serving.
+  * ``audit(engine)`` / ``audit_pools(...)`` — the invariants every host
+    step must preserve: block conservation (free + held == num_blocks,
+    free list exactly the refcount-0 set), per-block refcounts equal to
+    the number of live holders (slot tables + handoff queues + prefix
+    entries), no adapter slot that is pinned but unloaded (the
+    transactional scatter contract), registry pin counts equal to live
+    requests per task, and router load equal to the outstanding request
+    cost per healthy replica. When a ``ChaosInjector`` rides a
+    ``generate`` call, the engine runs ``audit`` after EVERY host-loop
+    iteration (``audit_every_step=False`` opts out for benchmarks).
+
+Everything here is host-side and jax-free except what it reads off the
+engine; injection is deterministic given the seed, so a chaos run is
+exactly replayable — the survivor-token-identity assertions in
+tests/test_chaos.py and ``bench_serving --chaos`` depend on that.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.distributed.fault_tolerance import (FailureInjector,
+                                               SimulatedFailure)
+
+
+class ChaosInjector:
+    """Deterministic seeded fault schedule for one ``generate`` call.
+
+    Parameters
+    ----------
+    seed: seeds the allocation-failure draw (``alloc_fail_rate``); every
+        other fault is scheduled by explicit step/request keys, so a
+        chaos run replays exactly.
+    kill_replica_at: optional ``(step, replica)`` — at host-loop
+        iteration ``step`` the engine marks ``replica`` down and drains
+        it through the recompute path. Internally a
+        ``fault_tolerance.FailureInjector`` (the training fail-at-step
+        primitive) pulls the trigger.
+    alloc_fail_steps: host-loop iterations on which every ``plan`` call
+        is forced to report backpressure (admission retries later —
+        exactly the dry-pool path, but on demand).
+    alloc_fail_rate: per-``plan`` probability of a forced failure, drawn
+        from the seeded rng (composes with ``alloc_fail_steps``).
+    scatter_failures: fail the first N adapter fault-in scatters — the
+        admission that triggered them unwinds (blocks deref'd, pin
+        released) and the slot stays mapped-but-UNLOADED until a retry's
+        scatter succeeds.
+    nan_after: ``{request_id: widx}`` — inject NaN logits into that
+        request's row once it is about to emit token ``widx`` (0 fails
+        it before any output). The in-graph guard converts this to a
+        FAILED request + ``EngineStats.numerics_faults``.
+    cancel_at: ``{step: [request_id, ...]}`` — call ``Engine.cancel``
+        for those ids at host-loop iteration ``step``.
+    audit_every_step: run ``audit(engine)`` after every host-loop
+        iteration of the generate this injector rides (default True).
+
+    One injector instance should ride ONE generate call —
+    ``scatter_failures`` and the kill trigger are consumed statefully.
+    """
+
+    def __init__(self, seed: int = 0, *,
+                 kill_replica_at: Optional[Tuple[int, int]] = None,
+                 alloc_fail_steps: Iterable[int] = (),
+                 alloc_fail_rate: float = 0.0,
+                 scatter_failures: int = 0,
+                 nan_after: Optional[Dict[object, int]] = None,
+                 cancel_at: Optional[Dict[int, Sequence[object]]] = None,
+                 audit_every_step: bool = True):
+        self.seed = seed
+        self._rng = np.random.default_rng(seed)
+        self._kill = FailureInjector(
+            fail_at_step=-1 if kill_replica_at is None
+            else int(kill_replica_at[0]))
+        self._kill_replica = (None if kill_replica_at is None
+                              else int(kill_replica_at[1]))
+        self.alloc_fail_steps = frozenset(int(s) for s in alloc_fail_steps)
+        self.alloc_fail_rate = float(alloc_fail_rate)
+        self._scatter_budget = int(scatter_failures)
+        self.nan_after = dict(nan_after or {})
+        self.cancel_at = {int(k): tuple(v)
+                          for k, v in (cancel_at or {}).items()}
+        self.audit_every_step = audit_every_step
+        self._step = 0
+        # observability: what actually fired (tests assert against these)
+        self.alloc_faults = 0
+        self.scatter_faults = 0
+        self.killed: List[int] = []
+
+    # -- engine-facing hooks -------------------------------------------
+    def tick(self, step: int) -> dict:
+        """Events for host-loop iteration ``step``: a replica to kill
+        (or None) and request ids to cancel."""
+        self._step = step
+        kill = None
+        try:
+            self._kill.check(step)
+        except SimulatedFailure:
+            kill = self._kill_replica
+            self._kill.fail_at_step = -1        # one shot
+            self.killed.append(kill)
+        return dict(kill=kill, cancels=self.cancel_at.get(step, ()))
+
+    def fail_alloc(self) -> bool:
+        """Scheduler ``fault_hook``: force this ``plan`` call to report
+        backpressure?"""
+        fire = (self._step in self.alloc_fail_steps
+                or (self.alloc_fail_rate > 0.0
+                    and self._rng.random() < self.alloc_fail_rate))
+        if fire:
+            self.alloc_faults += 1
+        return fire
+
+    def fail_scatter(self) -> bool:
+        """Fail the next adapter fault-in scatter? (first N calls)"""
+        if self._scatter_budget > 0:
+            self._scatter_budget -= 1
+            self.scatter_faults += 1
+            return True
+        return False
+
+    def nan_for(self, request_id) -> int:
+        """NaN-injection threshold for ``request_id``'s slot (-1 = no
+        injection; the in-graph guard compares ``widx >= threshold``)."""
+        return int(self.nan_after.get(request_id, -1))
+
+
+# ---------------------------------------------------------------------------
+# invariant audits
+# ---------------------------------------------------------------------------
+
+
+def audit_pools(bm, prefix, holders: Iterable[List[int]],
+                registry=None,
+                pinned_tasks: Optional[Iterable[int]] = None) -> None:
+    """Component-level invariants over one BlockManager (+ optional
+    PrefixCache / AdapterRegistry). Raises AssertionError on violation.
+
+    holders: one block-id list per live holder (slot, handoff entry…) —
+    each appearance counts one reference; the prefix cache adds one per
+    cached entry. pinned_tasks: one task id per live pin holder.
+    """
+    expected = collections.Counter()
+    for blocks in holders:
+        for bid in blocks:
+            expected[bid] += 1
+    if prefix is not None:
+        for e in prefix._entries.values():
+            expected[e.block] += 1
+    free = set(bm._free)
+    assert len(free) == len(bm._free), \
+        f"free list holds duplicates: {sorted(bm._free)}"
+    for bid in range(bm.num_blocks):
+        rc = bm.refcount(bid)
+        assert rc == expected.get(bid, 0), (
+            f"block {bid}: refcount {rc} != {expected.get(bid, 0)} "
+            "live holders (leak or double-free)")
+        assert (rc == 0) == (bid in free), (
+            f"block {bid}: refcount {rc} but "
+            f"{'in' if bid in free else 'not in'} the free list")
+    assert bm.free_blocks + bm.used_blocks == bm.num_blocks
+    if registry is not None:
+        pins = collections.Counter()
+        for t in (pinned_tasks or ()):
+            pins[t] += 1
+        for task, n in pins.items():
+            slot = registry.slot_of(task)
+            assert slot is not None, \
+                f"task {task} has {n} live pins but no slot mapping"
+        for slot in range(registry.num_slots):
+            task = registry._task_of.get(slot)
+            want = pins.get(task, 0) if task is not None else 0
+            assert registry._pins[slot] == want, (
+                f"adapter slot {slot} (task {task}): {registry._pins[slot]} "
+                f"pins != {want} live holders")
+            if registry._pins[slot] > 0:
+                assert registry._loaded[slot], (
+                    f"adapter slot {slot} (task {task}) is pinned but "
+                    "UNLOADED — a request would decode a stale/zero "
+                    "column (transactional scatter contract broken)")
+        # mapping bijection
+        assert registry._slot_of == {
+            t: s for s, t in registry._task_of.items()}
+
+
+def audit(engine) -> None:
+    """Engine-level invariants, valid between host-loop iterations and at
+    rest. Raises AssertionError on violation.
+
+    Mid-generate the engine publishes its live bookkeeping on
+    ``engine._live`` (meta / pf_meta / handoffs / results / rcost); at
+    rest every pool must hold prefix-cache blocks only and carry zero
+    adapter pins — "the pool drains to empty".
+    """
+    if getattr(engine, "sv", None) is None \
+            or engine.sv.cache_mode != "paged":
+        return
+    live = getattr(engine, "_live", None)
+    R, B = engine._dp, engine.max_batch
+    meta = live["meta"] if live else [None] * engine._slots
+    pf_meta = live["pf_meta"] if live else [None] * engine._slots
+    handoffs = (live["handoffs"] if live
+                else [[] for _ in range(R)])
+    for r in range(R):
+        stripe = range(r * B, (r + 1) * B)
+        dec_holders = [meta[s]["blocks"] for s in stripe
+                       if meta[s] is not None]
+        pinned = [meta[s]["task"] for s in stripe if meta[s] is not None]
+        if engine._disagg:
+            pf_holders = ([pf_meta[s]["blocks"] for s in stripe
+                           if pf_meta[s] is not None]
+                          + [h["blocks"] for h in handoffs[r]])
+            pinned += ([pf_meta[s]["task"] for s in stripe
+                        if pf_meta[s] is not None]
+                       + [h["task"] for h in handoffs[r]])
+            audit_pools(engine._pf_bms[r], engine._pf_prefixes[r],
+                        pf_holders)
+            audit_pools(engine.bms[r], None, dec_holders)
+        else:
+            audit_pools(engine.bms[r], engine.prefixes[r], dec_holders)
+        if engine._reg_on:
+            audit_pools(
+                BlockManagerStub(), None, [],
+                registry=engine.registries[r],
+                pinned_tasks=pinned if engine._reg_on else None)
+    # router load == outstanding cost per healthy replica
+    if live is not None:
+        results, rcost = live["results"], live["rcost"]
+        want = [0] * R
+        for idx, (r, cost) in rcost.items():
+            if results[idx] is None:
+                want[r] += cost
+        for r in range(R):
+            if not engine.router.is_up(r):
+                continue
+            assert engine.router.load(r) == want[r], (
+                f"replica {r}: router load {engine.router.load(r)} != "
+                f"{want[r]} outstanding request cost")
+    else:
+        assert all(ld == 0 for ld in engine.router.loads()), \
+            f"router load nonzero at rest: {engine.router.loads()}"
+
+
+class BlockManagerStub:
+    """A zero-block stand-in so ``audit_pools`` can check a registry
+    alone (engine-level audit checks blocks and registry separately —
+    decode blocks and adapter pins have different holder sets)."""
+    num_blocks = 0
+    free_blocks = 0
+    used_blocks = 0
+    _free: List[int] = []
+
+    def refcount(self, bid: int) -> int:    # pragma: no cover
+        raise IndexError(bid)

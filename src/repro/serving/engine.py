@@ -115,6 +115,7 @@ from repro.kernels import quant as quant_lib
 from repro.models import transformer
 from repro.peft import api as peft_api
 from repro.serving import adapter_registry
+from repro.serving import chaos as chaos_mod
 from repro.serving import sampling as sampling_lib
 from repro.serving import speculative as spec_lib
 from repro.serving.adapter_registry import AdapterRegistry
@@ -131,10 +132,40 @@ from repro.sharding.compat import shard_map
 
 @dataclasses.dataclass
 class Request:
-    """One generation request. prompt: 1-D int token ids (list/np/jnp)."""
+    """One generation request. prompt: 1-D int token ids (list/np/jnp).
+
+    deadline_s: optional wall-clock budget measured from ``generate``
+    entry — a request still unfinished when it expires ends with status
+    TIMEOUT and whatever tokens it produced. request_id: host-side
+    handle for ``Engine.cancel`` (defaults to the request's batch
+    index)."""
     prompt: Any
     max_new_tokens: int
     task: int = 0
+    deadline_s: Optional[float] = None
+    request_id: Optional[Any] = None
+
+
+# terminal request statuses (DESIGN.md §13). PREEMPTED and replica
+# failover are not terminal: the victim re-enters the queue through the
+# recompute path and still ends in one of these (RequestResult.preemptions
+# records how many recompute round-trips it survived).
+FINISHED = "FINISHED"
+CANCELLED = "CANCELLED"
+TIMEOUT = "TIMEOUT"
+FAILED = "FAILED"
+
+
+class RequestResult(NamedTuple):
+    """Per-request outcome of one ``generate`` call
+    (``engine.last_results``). ``tokens`` holds everything the request
+    emitted — possibly fewer than max_new_tokens when it was cancelled,
+    timed out or failed; FAILED requests (in-graph NaN/inf logit
+    detection) keep the tokens emitted BEFORE the fault."""
+    tokens: np.ndarray
+    status: str
+    n_generated: int
+    preemptions: int = 0
 
 
 def _pad_caches(caches, cfg: ModelConfig, batch: int, cache_len: int,
@@ -174,6 +205,7 @@ class DecodeState(NamedTuple):
     steps: Any = 0          # loop iterations (engine steps)
     drafted: Any = 0        # drafter tokens proposed
     accepted: Any = 0       # drafter tokens accepted by the verifier
+    failed: Any = None      # (B,) bool: in-graph NaN guard tripped
 
 
 class PagedState(NamedTuple):
@@ -198,6 +230,7 @@ class PagedState(NamedTuple):
     steps: Any = 0          # loop iterations (engine steps)
     drafted: Any = 0        # drafter tokens proposed
     accepted: Any = 0       # drafter tokens accepted by the verifier
+    failed: Any = None      # (B,) bool: in-graph NaN guard tripped
 
 
 class Engine:
@@ -406,6 +439,13 @@ class Engine:
         self._decode_traces = 0
         self._prefill_traces = 0
         self.last_stats = self._new_stats()
+        # request lifecycle (DESIGN.md §13): ids queued for cancellation
+        # (consumed by the running generate), per-generate results with
+        # status, and the live-bookkeeping handle chaos audits read
+        self._cancel_ids = set()
+        self.last_results: List[RequestResult] = []
+        self._live = None
+        self._chaos = None
         if self.sv.cache_mode == "dense":
             # dense mode has no Scheduler; the engine drives its (single)
             # registry directly in the dense admission/harvest loop.
@@ -477,6 +517,7 @@ class Engine:
         if self.mesh is None:
             self._admit = jax.jit(self._admit_impl, donate_argnums=(0,))
             self._decode = jax.jit(self._decode_impl, donate_argnums=(don,))
+            self._kill = jax.jit(self._kill_dense_impl, donate_argnums=(0,))
             return
         template = transformer.init_caches(
             self.cfg, self.max_batch, self.cache_len, self.cfg.compute_dtype)
@@ -492,15 +533,19 @@ class Engine:
             tok=P(), pos=P(), remaining=P(), active=P(), widx=P(),
             out=P(), task=P(), key=P(),
             caches=serve_cache_pspec(template, self.sv.tp_axis),
-            dcaches=dspec, steps=P(), drafted=P(), accepted=P())
+            dcaches=dspec, steps=P(), drafted=P(), accepted=P(),
+            failed=P())
         wspec = tuple(self._rep_spec(w) for w in self._step_weights)
         self._admit = jax.jit(self._shard_mapped(
             self._admit_impl,
             (sspec, P(), self._rep_spec(template), d1spec, P(), P(), P(),
              P()), sspec), donate_argnums=(0,))
         self._decode = jax.jit(self._shard_mapped(
-            self._decode_impl, (*wspec, sspec), sspec),
+            self._decode_impl, (*wspec, sspec, P()), sspec),
             donate_argnums=(don,))
+        self._kill = jax.jit(self._shard_mapped(
+            self._kill_dense_impl, (sspec, P()), sspec),
+            donate_argnums=(0,))
 
     def _init_paged(self) -> None:
         sv = self.sv
@@ -567,6 +612,8 @@ class Engine:
             self._pcow = jax.jit(self._cow_impl, donate_argnums=(0,))
             self._pdecode = jax.jit(self._paged_decode_impl,
                                     donate_argnums=(don,))
+            self._pkill = jax.jit(self._kill_paged_impl,
+                                  donate_argnums=(0,))
             if self._disagg:
                 self._pmigrate = jax.jit(self._migrate_impl,
                                          donate_argnums=(0,))
@@ -590,7 +637,7 @@ class Engine:
             tok=sl, prompt=sl, plen=sl, done=sl, remaining=sl,
             active=sl, widx=sl, out=sl, task=sl, key=sl,
             caches=cspec, dcaches=dspec,
-            steps=sl, drafted=sl, accepted=sl)
+            steps=sl, drafted=sl, accepted=sl, failed=sl)
         wspec = tuple(self._rep_spec(w) for w in self._step_weights)
         self._padmit = jax.jit(self._shard_mapped(
             self._paged_admit_impl,
@@ -600,8 +647,11 @@ class Engine:
             self._cow_impl, (sspec, P(), P(), P()), sspec),
             donate_argnums=(0,))
         self._pdecode = jax.jit(self._shard_mapped(
-            self._paged_decode_impl, (*wspec, sspec, sl), sspec),
+            self._paged_decode_impl, (*wspec, sspec, sl, sl), sspec),
             donate_argnums=(don,))
+        self._pkill = jax.jit(self._shard_mapped(
+            self._kill_paged_impl, (sspec, P()), sspec),
+            donate_argnums=(0,))
         if self._disagg:
             self._pmigrate = jax.jit(self._shard_mapped(
                 self._migrate_impl,
@@ -653,6 +703,43 @@ class Engine:
                        else self.prefixes[0])
         self.sched = (self._pf_scheds[0] if self._disagg
                       else self.scheds[0])
+
+    def _rebuild_replica_pools(self, r: int) -> None:
+        """Failover (DESIGN.md §13): replace replica ``r``'s host-side
+        admission state — block manager, prefix cache, adapter registry,
+        scheduler(s) — with fresh empty instances. The old pools indexed
+        KV on a replica that no longer serves; every request they backed
+        has already been harvested and re-routed, so nothing references
+        them. The replica-0 aliases are kept pointing at the live
+        objects for single-replica-era callers."""
+        sv = self.sv
+        self.bms[r] = BlockManager(self._num_blocks, self._page)
+        if self._reg_on:
+            self.registries[r] = AdapterRegistry(
+                self.reg_cfg.max_resident_tasks,
+                policy=self.reg_cfg.eviction)
+        reg = self.registries[r] if self._reg_on else None
+        if self._disagg:
+            self.prefixes[r] = None
+            self._pf_bms[r] = BlockManager(self._num_blocks, self._page)
+            self._pf_prefixes[r] = (PrefixCache(self._pf_bms[r])
+                                    if sv.prefix_cache else None)
+            old_pf = self._pf_scheds[r]
+            self._pf_scheds[r] = Scheduler(
+                self._pf_bms[r], self._pf_prefixes[r], old_pf.stats,
+                registry=reg)
+        else:
+            self.prefixes[r] = (PrefixCache(self.bms[r])
+                                if sv.prefix_cache else None)
+        old = self.scheds[r]
+        self.scheds[r] = Scheduler(self.bms[r], self.prefixes[r],
+                                   old.stats, registry=reg)
+        if r == 0:
+            self.bm = self.bms[0]
+            self.prefix = (self._pf_prefixes[0] if self._disagg
+                           else self.prefixes[0])
+            self.sched = (self._pf_scheds[0] if self._disagg
+                          else self.scheds[0])
 
     def _fresh_pools(self, num_super_blocks: Optional[int] = None):
         """Zero paged K/V (+ int8 scale) pools, kv-head-sharded over the
@@ -795,6 +882,7 @@ class Engine:
             widx=state.widx.at[slot].set(1),
             out=state.out.at[slot].set(0).at[slot, 0].set(t0),
             task=state.task.at[slot].set(task_id),
+            failed=state.failed.at[slot].set(False),
             key=key, caches=caches)
 
     # -- fleet helpers (DESIGN.md §11) ---------------------------------
@@ -891,11 +979,19 @@ class Engine:
         k drafter single-token steps (plus one write-only step syncing
         the last draft's KV into the drafter cache), ONE multi-token
         verifier pass scoring all k+1 columns, and the in-graph accept
-        rule — all inside the same single-trace while_loop."""
+        rule — all inside the same single-trace while_loop.
+
+        ``nan_at`` (B,) int32 is the chaos NaN-injection threshold per
+        slot (-1 = never, the production value — it is a traced arg, so
+        chaos runs share the single compiled graph). Independent of
+        injection, every step checks its logits finite IN-GRAPH: a
+        non-finite row stops emitting, deactivates, and raises its
+        ``failed`` flag for the host to fail the request (DESIGN.md
+        §13)."""
         if self._spec_on:
-            dbase, dbc, dpl, state = rest
+            dbase, dbc, dpl, state, nan_at = rest
         else:
-            (state,) = rest
+            state, nan_at = rest
         self._decode_traces += 1        # python side effect: runs per trace
         active0 = state.active
         rows = jnp.arange(self.max_batch)
@@ -911,22 +1007,30 @@ class Engine:
             logits, caches = transformer.decode_step(
                 base, self.cfg, self.rt.spec, bc, pl, s.tok, s.caches,
                 s.pos, task=task, policy=self.policy)
+            # NaN guard: poison injected rows (chaos), then fail any row
+            # whose logits are non-finite instead of sampling garbage
+            inject = s.active & (nan_at >= 0) & (s.widx >= nan_at)
+            logits = jnp.where(inject[:, None], jnp.nan, logits)
+            bad = s.active & ~jnp.all(jnp.isfinite(logits), axis=-1)
             key, sub = jax.random.split(s.key)
             pm = (sampling_lib.history_mask(s.out, s.widx, V)
                   if rp_on else None)
             nxt = sampling_lib.sample(logits, sub, self.sampling,
                                       penalty_mask=pm)
-            # inactive slots write to column out_cap -> dropped
-            col = jnp.where(s.active, s.widx, self.out_cap)
+            # inactive (and failing) slots write to column out_cap -> drop
+            emit = s.active & ~bad
+            col = jnp.where(emit, s.widx, self.out_cap)
             out = s.out.at[rows, col].set(nxt, mode="drop")
-            adv = s.active.astype(jnp.int32)
-            tok = jnp.where(s.active[:, None], nxt[:, None], s.tok)
+            adv = emit.astype(jnp.int32)
+            tok = jnp.where(emit[:, None], nxt[:, None], s.tok)
             return DecodeState(
                 tok=tok, pos=s.pos + adv, remaining=s.remaining - adv,
-                active=s.active & (s.remaining > 1), widx=s.widx + adv,
+                active=s.active & (s.remaining > 1) & ~bad,
+                widx=s.widx + adv,
                 out=out, task=s.task, key=key, caches=caches,
                 dcaches=s.dcaches, steps=s.steps + 1,
-                drafted=s.drafted, accepted=s.accepted)
+                drafted=s.drafted, accepted=s.accepted,
+                failed=s.failed | bad)
 
         def spec_body(s):
             task = s.task if self.rt.tasked else None
@@ -960,9 +1064,15 @@ class Engine:
             L, caches = transformer.decode_step(
                 base, self.cfg, self.rt.spec, bc, pl, toks_v, s.caches,
                 s.pos, task=task, policy=self.policy, all_logits=True)
+            # NaN guard over the verifier logits (chaos injection poisons
+            # them first): a bad row commits nothing and fails
+            inject = s.active & (nan_at >= 0) & (s.widx >= nan_at)
+            L = jnp.where(inject[:, None, None], jnp.nan, L)
+            bad = s.active & ~jnp.all(jnp.isfinite(L), axis=(1, 2))
             q = jnp.stack(qs, axis=1) if qs else None
             emitted, n = self._spec_accept(L, d, q, base_mask, keys[K + 1])
-            m = jnp.where(s.active, jnp.minimum(n + 1, s.remaining), 0)
+            m = jnp.where(s.active & ~bad,
+                          jnp.minimum(n + 1, s.remaining), 0)
             cols = jnp.arange(K + 1)[None, :]
             outcol = jnp.where(cols < m[:, None], s.widx[:, None] + cols,
                                self.out_cap)
@@ -973,11 +1083,13 @@ class Engine:
             nact = jnp.sum(s.active.astype(jnp.int32))
             return DecodeState(
                 tok=tok, pos=s.pos + m, remaining=s.remaining - m,
-                active=s.active & (s.remaining > m), widx=s.widx + m,
+                active=s.active & (s.remaining > m) & ~bad,
+                widx=s.widx + m,
                 out=out, task=s.task, key=keys[0], caches=caches,
                 dcaches=dc, steps=s.steps + 1,
                 drafted=s.drafted + K * nact,
-                accepted=s.accepted + jnp.sum(jnp.where(s.active, n, 0)))
+                accepted=s.accepted + jnp.sum(jnp.where(s.active, n, 0)),
+                failed=s.failed | bad)
 
         return jax.lax.while_loop(
             cond, spec_body if self._spec_on else body, state)
@@ -1013,7 +1125,33 @@ class Engine:
                      .at[ls, 0].set(jnp.where(w0 > 0, tok0, 0),
                                     mode="drop"),
             tok=state.tok.at[ls, 0].set(tok0, mode="drop"),
-            task=state.task.at[ls].set(task_id, mode="drop"))
+            task=state.task.at[ls].set(task_id, mode="drop"),
+            failed=state.failed.at[ls].set(False, mode="drop"))
+
+    def _kill_dense_impl(self, state: DecodeState, slot) -> DecodeState:
+        """Abort one dense slot between loop exits: mark it dead in-graph
+        so the next decode call never steps it (DESIGN.md §13). The host
+        harvests the output row BEFORE calling this (the state is
+        donated)."""
+        return state._replace(
+            active=state.active.at[slot].set(False),
+            remaining=state.remaining.at[slot].set(0),
+            failed=state.failed.at[slot].set(False))
+
+    def _kill_paged_impl(self, state: PagedState, slot) -> PagedState:
+        """Abort one paged slot between loop exits (cancel / deadline /
+        preemption victim / failover drain). Same ownership gating as
+        ``_paged_admit_impl``: ``slot`` is global, non-owner replicas
+        drop the write via the sentinel row. The slot's block-table row
+        is reset host-side right after, so any stale prefill writes the
+        row could still route land on the sentinel and drop."""
+        b = self.max_batch
+        ls = slot - serve_dp_index() * b
+        ls = jnp.where((ls >= 0) & (ls < b), ls, b)     # non-owner: drop
+        return state._replace(
+            active=state.active.at[ls].set(False, mode="drop"),
+            remaining=state.remaining.at[ls].set(0, mode="drop"),
+            failed=state.failed.at[ls].set(False, mode="drop"))
 
     def _cow_impl(self, state: PagedState, src, dst, rep) -> PagedState:
         """Copy-on-write one physical block (all layers) — scheduled at
@@ -1069,9 +1207,9 @@ class Engine:
         out-of-table positions (sentinel drop), and during the one
         prompt-sync pass, decoding rows do."""
         if self._spec_on:
-            dbase, dbc, dpl, state, tables = rest
+            dbase, dbc, dpl, state, tables, nan_at = rest
         else:
-            state, tables = rest
+            state, tables, nan_at = rest
         self._decode_traces += 1        # python side effect: runs per trace
         active0 = state.active
         C = self._chunk
@@ -1098,6 +1236,12 @@ class Engine:
             logits, caches = transformer.paged_step(
                 base, self.cfg, self.rt.spec, bc, pl, toks, s.caches,
                 tables, s.done, ntok - 1, task=task, policy=self.policy)
+            # NaN guard (DESIGN.md §13): chaos poisons injected rows,
+            # then ANY non-finite logit row stops emitting and raises
+            # its failed flag for the host to fail the request
+            inject = s.active & (nan_at >= 0) & (s.widx >= nan_at)
+            logits = jnp.where(inject[:, None], jnp.nan, logits)
+            bad = s.active & ~jnp.all(jnp.isfinite(logits), axis=-1)
             key, sub = jax.random.split(self._key_of(s))
             pm = (sampling_lib.history_mask(s.out, s.widx, V)
                   if rp_on else None)
@@ -1106,7 +1250,7 @@ class Engine:
             new_done = s.done + ntok
             # a slot emits a token when its step reached the last prompt
             # position (prefill -> first token) or is decoding
-            produced = s.active & (new_done >= s.plen)
+            produced = s.active & (new_done >= s.plen) & ~bad
             col = jnp.where(produced, s.widx, self.out_cap)
             out = s.out.at[rows, col].set(nxt, mode="drop")
             adv = produced.astype(jnp.int32)
@@ -1114,11 +1258,12 @@ class Engine:
             return PagedState(
                 tok=tok, prompt=s.prompt, plen=s.plen, done=new_done,
                 remaining=s.remaining - adv,
-                active=s.active & ((s.remaining > 1) | ~produced),
+                active=s.active & ((s.remaining > 1) | ~produced) & ~bad,
                 widx=s.widx + adv, out=out, task=s.task,
                 key=self._wrap_key(key), caches=caches,
                 dcaches=s.dcaches, steps=s.steps + 1,
-                drafted=s.drafted, accepted=s.accepted)
+                drafted=s.drafted, accepted=s.accepted,
+                failed=s.failed | bad)
 
         def spec_body(s):
             is_pf = s.done < s.plen
@@ -1179,10 +1324,19 @@ class Engine:
                 base, self.cfg, self.rt.spec, bc, pl, toks_v, s.caches,
                 tables, s.done, zero, task=task, policy=self.policy,
                 all_logits=True)
+            # NaN guard (DESIGN.md §13): poison chaos-injected rows,
+            # then fail any row whose relevant logit columns are
+            # non-finite — the verifier block for decoding rows, the
+            # last-prompt column for prefilling rows
+            inject = s.active & (nan_at >= 0) & (s.widx >= nan_at)
+            L = jnp.where(inject[:, None, None], jnp.nan, L)
             # prefilling rows: baseline single-token emission off the
             # last real prompt column
             sel = jnp.clip(jnp.where(is_pf, ntok_pf - 1, 0), 0, C - 1)
             Lsel = L[rows, sel]
+            fin_dec = jnp.all(jnp.isfinite(L[:, :K + 1]), axis=(1, 2))
+            fin_pf = jnp.all(jnp.isfinite(Lsel), axis=-1)
+            bad = s.active & ~jnp.where(is_pf, fin_pf, fin_dec)
             nxt_pf = sampling_lib.sample(Lsel, keys[K + 2], self.sampling,
                                          penalty_mask=base_mask)
             # decoding rows: accept/reject over the first K+1 columns
@@ -1194,6 +1348,7 @@ class Engine:
             m = jnp.where(is_pf, produced_pf.astype(jnp.int32),
                           jnp.where(s.active,
                                     jnp.minimum(n + 1, s.remaining), 0))
+            m = jnp.where(bad, 0, m)    # a failing row commits nothing
             em = jnp.where(is_pf[:, None],
                            jnp.broadcast_to(nxt_pf[:, None],
                                             emitted.shape), emitted)
@@ -1210,11 +1365,13 @@ class Engine:
             return PagedState(
                 tok=tok, prompt=s.prompt, plen=s.plen, done=new_done,
                 remaining=s.remaining - m,
-                active=s.active & ((s.remaining > m) | (m == 0)),
+                active=(s.active & ((s.remaining > m) | (m == 0))
+                        & ~bad),
                 widx=s.widx + m, out=out, task=s.task,
                 key=self._wrap_key(keys[0]), caches=caches, dcaches=dc,
                 steps=s.steps + 1, drafted=s.drafted + K * nact,
-                accepted=s.accepted + jnp.sum(jnp.where(dec_act, n, 0)))
+                accepted=s.accepted + jnp.sum(jnp.where(dec_act, n, 0)),
+                failed=s.failed | bad)
 
         return jax.lax.while_loop(
             cond, spec_body if self._spec_on else body, state)
@@ -1260,7 +1417,7 @@ class Engine:
                 num_super_blocks=self._nb_draft)
                 if self._spec_on else None),
             steps=jnp.int32(0), drafted=jnp.int32(0),
-            accepted=jnp.int32(0))
+            accepted=jnp.int32(0), failed=jnp.zeros((b,), bool))
 
     def _blank_paged_state(self, key, caches, dcaches) -> PagedState:
         """Zeroed slot state over ``caches`` — the slot axis spans ALL
@@ -1274,7 +1431,8 @@ class Engine:
             active=jnp.zeros((b,), bool), widx=z((b,)), out=z((b, cap)),
             task=z((b,)), key=self._fleet_key(key), caches=caches,
             dcaches=dcaches, steps=self._zero_ctr(),
-            drafted=self._zero_ctr(), accepted=self._zero_ctr())
+            drafted=self._zero_ctr(), accepted=self._zero_ctr(),
+            failed=jnp.zeros((b,), bool))
 
     def init_paged_state(self, key) -> PagedState:
         """Fresh per-slot state over the engine's PERSISTENT block pools
@@ -1319,15 +1477,46 @@ class Engine:
             raise ValueError(
                 f"prompt ({plen}) + max_new_tokens ({req.max_new_tokens}) "
                 f"exceeds cache_len={self.cache_len}")
+        if self.sv.cache_mode == "paged":
+            # reject what can NEVER be admitted: a request whose
+            # worst-case page count exceeds the whole replica pool would
+            # backpressure forever at the FIFO head and livelock the
+            # queue behind it (strictly >: an exact fit drains the pool
+            # and admits)
+            total = -(-(plen + req.max_new_tokens) // self._page)
+            if total > self._num_blocks:
+                raise ValueError(
+                    f"request needs {total} KV pages "
+                    f"(ceil(({plen}+{req.max_new_tokens})/{self._page})) "
+                    f"but a replica pool holds only {self._num_blocks} "
+                    "blocks — it could never be admitted (raise "
+                    "num_blocks or split the request)")
         self.rt.check_task(req.task)
         return prompt, plen
 
+    def cancel(self, request_id) -> None:
+        """Queue ``request_id`` (Request.request_id, default its batch
+        index) for cancellation. Safe to call before generate (the
+        request is dropped at submission) or from a chaos/audit hook
+        mid-generate: the host loop aborts the request between jitted
+        steps — blocks deref'd, adapter pin dropped, status CANCELLED
+        with the tokens emitted so far (DESIGN.md §13)."""
+        self._cancel_ids.add(request_id)
+
     def generate(self, requests: Sequence[Request], *,
-                 key=None) -> List[np.ndarray]:
+                 key=None, chaos=None) -> List[np.ndarray]:
         """Serve ``requests`` through the slots; returns, per request, the
-        generated token ids (np.ndarray of length max_new_tokens). Fills
+        generated token ids (np.ndarray — length max_new_tokens unless
+        the request was cancelled / timed out / failed). Fills
         ``self.last_stats`` (tokens/sec, KV blocks in use, prefix-cache
-        hit rate, admit/evict counts — serving/stats.py).
+        hit rate, admit/evict counts — serving/stats.py) and
+        ``self.last_results`` (one RequestResult per request: tokens,
+        terminal status, preemption count — DESIGN.md §13).
+
+        ``chaos``: optional serving.chaos.ChaosInjector driving seeded
+        fault injection (forced alloc failures, scatter failures,
+        replica kill, NaN logits, scripted cancels) with per-step
+        invariant audits.
 
         Without an explicit ``key`` the engine advances its own PRNG
         stream, so successive calls draw fresh samples under
@@ -1337,16 +1526,36 @@ class Engine:
         if key is None:
             self._key, key = jax.random.split(self._key)
         self.last_stats = self._new_stats(requests=len(requests))
+        self._chaos = chaos
+        # request lifecycle bookkeeping: rid -> indices (cancel handle),
+        # absolute deadlines, terminal statuses, recompute carry-over
+        self._rids = [req.request_id if req.request_id is not None
+                      else idx for idx, req in enumerate(requests)]
         t0 = time.perf_counter()
-        if self.sv.cache_mode == "dense":
-            results = self._generate_dense(requests, key)
-        else:
-            results = self._generate_paged(requests, key)
+        self._abs_deadline = {
+            idx: (t0 + req.deadline_s if req.deadline_s is not None
+                  else None)
+            for idx, req in enumerate(requests)}
+        self._req_status = {}
+        self._req_preempts = {}
+        try:
+            if self.sv.cache_mode == "dense":
+                results = self._generate_dense(requests, key)
+            else:
+                results = self._generate_paged(requests, key)
+        finally:
+            self._chaos = None
+            self._cancel_ids.clear()
         st = self.last_stats
         st.wall_s = time.perf_counter() - t0
         st.tokens_generated = sum(len(r) for r in results)
         st.decode_traces = self._decode_traces
         st.prefill_traces = self._prefill_traces
+        self.last_results = [
+            RequestResult(tokens=r, status=self._req_status.get(i, FINISHED),
+                          n_generated=len(r),
+                          preemptions=self._req_preempts.get(i, 0))
+            for i, r in enumerate(results)]
         return results
 
     # -- dense ---------------------------------------------------------
@@ -1384,12 +1593,65 @@ class Engine:
                 self.cache_len, num_super_blocks=self._nb_draft)
         # dense reserves the whole max_batch × cache_len cache up front
         st.kv_blocks_peak = self.max_batch
+        chaos = self._chaos
         state = self.init_state(key)
         pending = collections.deque(enumerate(requests))
         results: List[Optional[np.ndarray]] = [None] * len(requests)
         meta: List[Optional[int]] = [None] * self.max_batch
+        nan_at = np.full((self.max_batch,), -1, np.int32)
+        hstep = 0
+
+        def abort_status(idx):
+            if self._rids[idx] in self._cancel_ids:
+                return CANCELLED
+            dl = self._abs_deadline[idx]
+            if dl is not None and time.perf_counter() >= dl:
+                return TIMEOUT
+            return None
 
         while pending or any(m is not None for m in meta):
+            if chaos is not None:
+                ev = chaos.tick(hstep)
+                for rid in ev["cancels"]:
+                    self._cancel_ids.add(rid)
+            hstep += 1
+            # ---- request lifecycle: cancels / deadlines (DESIGN.md §13)
+            keep = collections.deque()
+            for idx, req in pending:
+                stt = abort_status(idx)
+                if stt is None:
+                    keep.append((idx, req))
+                    continue
+                results[idx] = np.zeros((0,), np.int32)
+                self._req_status[idx] = stt
+                if stt is CANCELLED:
+                    st.cancelled += 1
+                else:
+                    st.timeouts += 1
+            pending.clear()
+            pending.extend(keep)
+            for slot in range(self.max_batch):
+                if meta[slot] is None:
+                    continue
+                idx = meta[slot]
+                stt = abort_status(idx)
+                if stt is None:
+                    continue
+                # harvest BEFORE the donating kill invalidates the state
+                out = np.asarray(state.out)
+                w = int(np.asarray(state.widx)[slot])
+                results[idx] = out[slot, :w].copy()
+                self._req_status[idx] = stt
+                if stt is CANCELLED:
+                    st.cancelled += 1
+                else:
+                    st.timeouts += 1
+                state = self._kill(state, jnp.int32(slot))
+                nan_at[slot] = -1
+                if self._reg_on:
+                    self.registries[0].release(requests[idx].task)
+                meta[slot] = None
+                st.evicted += 1
             # admit pending requests into free slots (dense mode has no
             # Scheduler, so the engine gates on adapter residency here:
             # a head whose task cannot get a pool slot waits for a
@@ -1404,6 +1666,14 @@ class Engine:
                             st.adapter_waits += 1
                             st.backpressure_waits += 1
                             break
+                        if (acq.fault and chaos is not None
+                                and chaos.fail_scatter()):
+                            # simulated scatter failure: roll the pin
+                            # back; the slot stays mapped-but-UNLOADED
+                            # and the retry faults again
+                            self.registries[0].release(req.task)
+                            st.backpressure_waits += 1
+                            break
                         if acq.fault:
                             st.adapter_faults += 1
                             if acq.evicted is not None:
@@ -1415,21 +1685,32 @@ class Engine:
                     pending.popleft()
                     state = self._admit_request(state, slot, req, task_ref)
                     meta[slot] = idx
+                    nan_at[slot] = (chaos.nan_for(self._rids[idx])
+                                    if chaos is not None else -1)
             # decode every active slot until one finishes
             if bool(np.any(np.asarray(state.active))):
-                state = self._decode(*self._step_weights, state)
+                state = self._decode(*self._step_weights, state,
+                                     jnp.asarray(nan_at))
                 st.decode_calls += 1
             # evict finished slots (also catches max_new_tokens == 1)
             active = np.asarray(state.active)
             out = np.asarray(state.out)
             widx = np.asarray(state.widx)
+            failedv = np.asarray(state.failed)
             for slot in range(self.max_batch):
                 if meta[slot] is not None and not active[slot]:
-                    results[meta[slot]] = out[slot, : int(widx[slot])].copy()
+                    idx = meta[slot]
+                    results[idx] = out[slot, : int(widx[slot])].copy()
+                    if failedv[slot]:
+                        # in-graph NaN guard tripped: fail the request
+                        # with whatever it emitted before the fault
+                        self._req_status[idx] = FAILED
+                        st.failed_requests += 1
+                        st.numerics_faults += 1
                     if self._reg_on:
-                        self.registries[0].release(
-                            requests[meta[slot]].task)
+                        self.registries[0].release(requests[idx].task)
                     meta[slot] = None
+                    nan_at[slot] = -1
                     st.evicted += 1
         self._read_spec_stats(state, st)
         return results  # type: ignore[return-value]
@@ -1454,8 +1735,14 @@ class Engine:
                          * (2 if self._disagg else 1))
         st.block_bytes = self._block_bytes
         st.data_shards = self._dp
+        chaos = self._chaos
         for sc in self.scheds + self._pf_scheds:
             sc.stats = st               # block/prefix counters land here
+            sc.fault_hook = chaos.fail_alloc if chaos is not None else None
+        # per-slot chaos NaN thresholds (-1 = never — the production
+        # value; passed as a traced arg so decode_traces stays 1)
+        self._nan_at = np.full((self._slots,), -1, np.int32)
+        self._pf_nan = np.full((self._slots,), -1, np.int32)
         state = self.init_paged_state(key)
         self._tables[:] = self._num_blocks
         pf_state = None
@@ -1464,7 +1751,10 @@ class Engine:
             self._pf_tables[:] = self._num_blocks
         # deterministic placement: the router stripes every request over
         # the data replicas up front (per-replica FIFO order = arrival
-        # order), so dp decode is reproducible run to run
+        # order), so dp decode is reproducible run to run. Queue entries
+        # are dicts because the recompute path (preemption / failover)
+        # re-enqueues a request with a GROWN prompt and a shrunk token
+        # budget (prompt' = prompt + generated, max_new' = max_new - n).
         pendings = [collections.deque() for _ in range(self._dp)]
         rcost = {}
         for idx, req in enumerate(requests):
@@ -1472,7 +1762,10 @@ class Engine:
             cost = plen + req.max_new_tokens
             r = self.router.route(cost)
             rcost[idx] = (r, cost)
-            pendings[r].append((idx, req, prompt, plen))
+            pendings[r].append(dict(idx=idx, req=req, prompt=prompt,
+                                    plen=plen,
+                                    max_new=req.max_new_tokens,
+                                    task=req.task))
         results: List[Optional[np.ndarray]] = [None] * len(requests)
         try:
             state, pf_state = self._paged_loop(state, pf_state, pendings,
@@ -1496,8 +1789,19 @@ class Engine:
         disaggregation), the prefill→decode block handoff, stepping the
         worker loops, and harvesting finished slots. Returns the final
         (decode, prefill) states so generate can hand the pool buffers
-        back."""
+        back.
+
+        Each iteration additionally runs the request-lifecycle machinery
+        (DESIGN.md §13): chaos events, cancel/deadline sweeps that abort
+        slots between jitted steps (harvest -> register safe prefix ->
+        deref blocks -> drop pin -> in-graph kill), recompute preemption
+        of the youngest running request when the FIFO head has been
+        backpressured ``preempt_after`` consecutive iterations, and
+        replica failover (drain a marked-down replica through the same
+        recompute re-admission). While the loop runs, its bookkeeping is
+        published on ``self._live`` for ``serving.chaos.audit``."""
         R, B = self._dp, self.max_batch
+        chaos = self._chaos
         meta: List[Optional[dict]] = [None] * self._slots
         pf_meta: List[Optional[dict]] = [None] * self._slots
         handoffs = [collections.deque() for _ in range(R)]
@@ -1508,6 +1812,17 @@ class Engine:
                         backpressure_waits=0, kv_blocks_peak=0,
                         handoffs=0) if self._disagg else None)
         ttft, tpot = [], []
+        # idx -> tokens harvested before a preemption / failover kill;
+        # the recompute re-admission carries them in the grown prompt
+        # and ``finish`` prepends them to the final output
+        prior: dict = {}
+        # consecutive iterations each replica's FIFO head was blocked
+        blocked = [0] * R
+        # admission order; the preemption victim is the YOUNGEST running
+        # request (max seq) — deterministic, vLLM-recompute style
+        seq_ctr = [0]
+        self._live = dict(meta=meta, pf_meta=pf_meta, handoffs=handoffs,
+                          pendings=pendings, rcost=rcost, results=results)
 
         def note_peaks(r):
             """Per-replica and global peak-block accounting (manual here
@@ -1522,46 +1837,356 @@ class Engine:
                        for bm in self.bms + self._pf_bms)
             st.kv_blocks_peak = max(st.kv_blocks_peak, used)
 
+        def finish(idx, toks, status=None):
+            """Terminal bookkeeping for one request: prepend any
+            recompute carry-over, record the result + status, refund the
+            router (no-op on a replica that was marked down)."""
+            arr = np.array(toks, np.int32).reshape(-1)
+            pr = prior.pop(idx, None)
+            if pr:
+                arr = np.concatenate([np.asarray(pr, np.int32), arr])
+            results[idx] = arr
+            if status is not None:
+                self._req_status[idx] = status
+            rr, cost = rcost[idx]
+            self.router.complete(rr, cost)
+
+        def abort_status(idx):
+            if self._rids[idx] in self._cancel_ids:
+                return CANCELLED
+            dl = self._abs_deadline[idx]
+            if dl is not None and time.perf_counter() >= dl:
+                return TIMEOUT
+            return None
+
+        def count_status(status):
+            if status is CANCELLED:
+                st.cancelled += 1
+            elif status is TIMEOUT:
+                st.timeouts += 1
+
+        def abort_decode_slot(slot, status, state):
+            """Abort one in-flight decode slot with exact host unwind:
+            harvest the output row FIRST (the kill donates the state),
+            index the already-computed KV for prefix reuse (prompt +
+            generated tokens whose cells are written — skipped when the
+            KV is suspect, i.e. status FAILED), deref every block, drop
+            the adapter pin, then mask the slot dead in-graph and
+            sentinel its table row."""
+            m = meta[slot]
+            r = slot // B
+            out = np.asarray(state.out)
+            w = int(np.asarray(state.widx)[slot])
+            done = int(np.asarray(state.done)[slot])
+            gen = out[slot, :w].astype(np.int32)
+            full = np.concatenate([np.asarray(m["prompt"], np.int32), gen])
+            known = min(done, len(full))    # tokens with computed KV
+            reg = (not self._disagg) and status is not FAILED
+            self.scheds[r].release(
+                full[:known], m["blocks"], namespace=m["ns"],
+                register=reg,
+                task=m["task"] if self._reg_on else None)
+            state = self._pkill(state, jnp.int32(slot))
+            self._tables[slot] = self._num_blocks
+            self._nan_at[slot] = -1
+            meta[slot] = None
+            rstat[r]["evicted"] += 1
+            finish(m["idx"], gen, status)
+            return state
+
+        def abort_pf_slot(slot, status, pf_state):
+            """Abort one mid-prefill slot on the prefill worker: register
+            the prompt prefix whose KV is already computed (unless
+            FAILED), deref, unpin, kill."""
+            m = pf_meta[slot]
+            r = slot // B
+            done = int(np.asarray(pf_state.done)[slot])
+            prompt = np.asarray(m["prompt"], np.int32)
+            known = min(done, len(prompt))
+            reg = status is not FAILED
+            self._pf_scheds[r].release(
+                prompt[:known], m["blocks"], namespace=m["ns"],
+                register=reg,
+                task=m["task"] if self._reg_on else None)
+            pf_state = self._pkill(pf_state, jnp.int32(slot))
+            self._pf_tables[slot] = self._num_blocks
+            self._pf_nan[slot] = -1
+            pf_meta[slot] = None
+            pf_stat["evicted"] += 1
+            finish(m["idx"], [], status)
+            return pf_state
+
+        def sweep(state, pf_state):
+            """Apply cancels and expired deadlines everywhere a request
+            can live: queues, handoff buffers, prefill slots, decode
+            slots."""
+            swept = False
+            for r in range(R):
+                keep = collections.deque()
+                for ent in pendings[r]:
+                    stt = abort_status(ent["idx"])
+                    if stt is None:
+                        keep.append(ent)
+                        continue
+                    finish(ent["idx"], [], stt)
+                    count_status(stt)
+                    swept = True
+                pendings[r].clear()
+                pendings[r].extend(keep)
+                keep = collections.deque()
+                for h in handoffs[r]:
+                    stt = abort_status(h["idx"])
+                    if stt is None:
+                        keep.append(h)
+                        continue
+                    # handoff entries hold PREFILL-pool blocks, already
+                    # prefix-registered at pf harvest: deref only
+                    self._pf_scheds[r].release(
+                        h["prompt"], h["blocks"], namespace=h["ns"],
+                        register=False,
+                        task=h["task"] if self._reg_on else None)
+                    finish(h["idx"], [h["t0"]], stt)
+                    count_status(stt)
+                    swept = True
+                handoffs[r].clear()
+                handoffs[r].extend(keep)
+            for slot in range(self._slots):
+                if meta[slot] is not None:
+                    stt = abort_status(meta[slot]["idx"])
+                    if stt is not None:
+                        state = abort_decode_slot(slot, stt, state)
+                        count_status(stt)
+                        swept = True
+                if pf_meta[slot] is not None:
+                    stt = abort_status(pf_meta[slot]["idx"])
+                    if stt is not None:
+                        pf_state = abort_pf_slot(slot, stt, pf_state)
+                        count_status(stt)
+                        swept = True
+            return state, pf_state, swept
+
+        def preempt_one(r, state):
+            """vLLM-recompute preemption: kill the youngest running
+            request on replica ``r``, harvest its tokens, free its
+            blocks (registering the computed KV so the recompute is a
+            warm prefix hit), and re-enqueue it right behind the blocked
+            head with prompt' = prompt + generated and the shrunk token
+            budget. Deterministic: victim = max admission seq."""
+            cand = [s for s in range(r * B, (r + 1) * B)
+                    if meta[s] is not None]
+            if not cand:
+                return state, False
+            victim = max(cand, key=lambda s: meta[s]["seq"])
+            m = meta[victim]
+            out = np.asarray(state.out)
+            w = int(np.asarray(state.widx)[victim])
+            done = int(np.asarray(state.done)[victim])
+            gen = out[victim, :w].astype(np.int32)
+            full = np.concatenate([np.asarray(m["prompt"], np.int32), gen])
+            known = min(done, len(full))
+            self.scheds[r].release(
+                full[:known], m["blocks"], namespace=m["ns"],
+                register=True,
+                task=m["task"] if self._reg_on else None)
+            state = self._pkill(state, jnp.int32(victim))
+            self._tables[victim] = self._num_blocks
+            self._nan_at[victim] = -1
+            meta[victim] = None
+            rstat[r]["evicted"] += 1
+            prior.setdefault(m["idx"], []).extend(int(t) for t in gen)
+            self._req_preempts[m["idx"]] = (
+                self._req_preempts.get(m["idx"], 0) + 1)
+            st.preemptions += 1
+            ent = dict(idx=m["idx"], req=m["req"], prompt=full,
+                       plen=len(full), max_new=m["max_new"] - w,
+                       task=m["task"])
+            pendings[r].insert(1, ent)  # right behind the blocked head
+            return state, True
+
+        def drain_replica(rdead, state, pf_state):
+            """Replica failover (DESIGN.md §13): mark ``rdead`` down in
+            the router, write off its device stripe, and push every
+            request it held — in-flight decode slots (tokens harvested),
+            prefill slots, handoff entries, queued requests — back
+            through the router onto healthy replicas via the recompute
+            re-admission path. The dead replica's host pools are rebuilt
+            empty (its refcounts indexed KV that no longer serves)."""
+            self.router.mark_down(rdead)
+            st.replicas_lost += 1
+            moved = []
+            out = np.asarray(state.out)
+            widx = np.asarray(state.widx)
+            for slot in range(rdead * B, (rdead + 1) * B):
+                m = meta[slot]
+                if m is None:
+                    continue
+                w = int(widx[slot])
+                gen = out[slot, :w].astype(np.int32)
+                prior.setdefault(m["idx"], []).extend(int(t) for t in gen)
+                newp = np.concatenate(
+                    [np.asarray(m["prompt"], np.int32), gen])
+                moved.append(dict(idx=m["idx"], req=m["req"], prompt=newp,
+                                  plen=len(newp),
+                                  max_new=m["max_new"] - w,
+                                  task=m["task"]))
+                state = self._pkill(state, jnp.int32(slot))
+                self._tables[slot] = self._num_blocks
+                self._nan_at[slot] = -1
+                meta[slot] = None
+                st.failover_requests += 1
+            if self._disagg:
+                for slot in range(rdead * B, (rdead + 1) * B):
+                    m = pf_meta[slot]
+                    if m is None:
+                        continue
+                    moved.append(dict(
+                        idx=m["idx"], req=m["req"],
+                        prompt=np.asarray(m["prompt"], np.int32),
+                        plen=m["plen"], max_new=m["max_new"],
+                        task=m["task"]))
+                    pf_state = self._pkill(pf_state, jnp.int32(slot))
+                    self._pf_tables[slot] = self._num_blocks
+                    self._pf_nan[slot] = -1
+                    pf_meta[slot] = None
+                    st.failover_requests += 1
+                for h in handoffs[rdead]:
+                    prior.setdefault(h["idx"], []).append(int(h["t0"]))
+                    newp = np.concatenate(
+                        [np.asarray(h["prompt"], np.int32),
+                         np.asarray([h["t0"]], np.int32)])
+                    moved.append(dict(idx=h["idx"], req=h["req"],
+                                      prompt=newp, plen=len(newp),
+                                      max_new=h["max_new"] - 1,
+                                      task=h["task"]))
+                    st.failover_requests += 1
+                handoffs[rdead].clear()
+            while pendings[rdead]:
+                moved.append(pendings[rdead].popleft())
+                st.failover_requests += 1
+            self._rebuild_replica_pools(rdead)
+            if chaos is not None:
+                self.scheds[rdead].fault_hook = chaos.fail_alloc
+                if self._disagg:
+                    self._pf_scheds[rdead].fault_hook = chaos.fail_alloc
+            for ent in moved:
+                cost = ent["plen"] + ent["max_new"]
+                r2 = self.router.route(cost)    # raises when none are up
+                rcost[ent["idx"]] = (r2, cost)
+                pendings[r2].append(ent)
+            return state, pf_state
+
+        hstep = 0
+        try:
+            state, pf_state = self._paged_loop_iterations(
+                state, pf_state, pendings, rcost, results, st, meta,
+                pf_meta, handoffs, rstat, pf_stat, ttft, tpot, prior,
+                blocked, seq_ctr, note_peaks, finish, sweep, preempt_one,
+                drain_replica, hstep)
+        finally:
+            self._live = None
+            for sc in self.scheds + self._pf_scheds:
+                sc.fault_hook = None
+        for r in range(R):
+            rstat[r]["queue_depth"] = len(pendings[r])
+        if ttft:
+            st.ttft_s = sum(ttft) / len(ttft)
+        if tpot:
+            st.tpot_s = sum(tpot) / len(tpot)
+        st.replica_stats = rstat + ([pf_stat] if pf_stat else [])
+        return state, pf_state
+
+    def _paged_loop_iterations(self, state, pf_state, pendings, rcost,
+                               results, st, meta, pf_meta, handoffs,
+                               rstat, pf_stat, ttft, tpot, prior, blocked,
+                               seq_ctr, note_peaks, finish, sweep,
+                               preempt_one, drain_replica, hstep):
+        """The iteration body of ``_paged_loop`` (split out so the
+        closure scaffolding above stays readable). One iteration =
+        chaos events -> lifecycle sweep -> admission (+ preemption) ->
+        handoff -> one jitted step per worker -> harvests -> audit."""
+        R, B = self._dp, self.max_batch
+        chaos = self._chaos
+
         while (any(pendings) or any(handoffs)
                or any(m is not None for m in meta)
                or any(m is not None for m in pf_meta)):
             progressed = False
+            faults0 = (chaos.alloc_faults + chaos.scatter_faults
+                       if chaos is not None else 0)
+            # ---- chaos events: scripted cancels and the replica kill
+            if chaos is not None:
+                ev = chaos.tick(hstep)
+                for rid in ev["cancels"]:
+                    self._cancel_ids.add(rid)
+                if ev["kill"] is not None:
+                    state, pf_state = drain_replica(int(ev["kill"]),
+                                                    state, pf_state)
+                    progressed = True
+            hstep += 1
+            # ---- request lifecycle: cancels / expired deadlines
+            state, pf_state, swept = sweep(state, pf_state)
+            progressed = progressed or swept
             # ---- admission: pending -> prefill worker (disagg) or
             # straight into this replica's decode slots. Strict FIFO per
             # replica: a blocked head waits for evictions rather than
-            # being overtaken.
+            # being overtaken (and, with preempt_after set, eventually
+            # preempts the youngest running request).
             for r in range(R):
+                if not self.router.is_up(r):
+                    continue
                 scheds = self._pf_scheds if self._disagg else self.scheds
+                head_blocked = False
+                admitted_any = False
                 for slot in range(r * B, (r + 1) * B):
                     mrow = pf_meta if self._disagg else meta
                     if mrow[slot] is not None or not pendings[r]:
                         continue
-                    idx, req, prompt, plen = pendings[r][0]
-                    ns = req.task if self._kv_tasked else None
+                    ent = pendings[r][0]
+                    prompt, plen = ent["prompt"], ent["plen"]
+                    ns = ent["task"] if self._kv_tasked else None
                     # the prefill worker computes prompt KV only (its one
                     # emission needs no extra page), so plan with 0 new
                     # tokens there; decode-side pages come at handoff
                     plan = scheds[r].plan(
-                        prompt.tolist(),
-                        0 if self._disagg else req.max_new_tokens,
+                        np.asarray(prompt).tolist(),
+                        0 if self._disagg else ent["max_new"],
                         namespace=ns,
-                        task=req.task if self._reg_on else None)
+                        task=ent["task"] if self._reg_on else None)
                     if plan is None:    # backpressure: out of KV blocks
                         #                 or of adapter slots
                         (pf_stat if self._disagg
                          else rstat[r])["backpressure_waits"] += 1
+                        head_blocked = True
+                        break
+                    if (self._reg_on and plan.adapter_fault
+                            and chaos is not None
+                            and chaos.fail_scatter()):
+                        # simulated adapter-scatter failure BEFORE any
+                        # device work: unwind the whole admission —
+                        # deref the planned blocks, roll the pin back
+                        # (the slot stays mapped-but-UNLOADED; the
+                        # retry faults again), uncount the admission
+                        for bid in plan.blocks:
+                            scheds[r].bm.deref(bid)
+                        self.registries[r].release(ent["task"])
+                        st.admitted -= 1
+                        (pf_stat if self._disagg
+                         else rstat[r])["backpressure_waits"] += 1
+                        st.backpressure_waits += 1
+                        head_blocked = True
                         break
                     pendings[r].popleft()
                     progressed = True
+                    admitted_any = True
                     # adapter paging (DESIGN.md §12): the device state
                     # carries the POOL-SLOT index (replica-offset into
                     # the dp-striped pool), never the task id; a cold
                     # task's slice is scattered in first
-                    task_ref = req.task
+                    task_ref = ent["task"]
                     if self._reg_on:
                         if plan.adapter_fault:
                             self._adapter_fault_in(r, plan.adapter_slot,
-                                                   req.task)
+                                                   ent["task"])
                         task_ref = (r * self.reg_cfg.max_resident_tasks
                                     + plan.adapter_slot)
                     target = pf_state if self._disagg else state
@@ -1581,12 +2206,20 @@ class Engine:
                         target, jnp.int32(slot), jnp.asarray(prow),
                         jnp.int32(plen), jnp.int32(plan.n_cached),
                         jnp.int32(1 if self._disagg
-                                  else req.max_new_tokens),
+                                  else ent["max_new"]),
                         jnp.int32(task_ref), jnp.int32(0), jnp.int32(0))
-                    mrow[slot] = dict(idx=idx, req=req, prompt=prompt,
+                    seq_ctr[0] += 1
+                    rid = self._rids[ent["idx"]]
+                    nan_vec = self._pf_nan if self._disagg else self._nan_at
+                    nan_vec[slot] = (chaos.nan_for(rid)
+                                     if chaos is not None else -1)
+                    mrow[slot] = dict(idx=ent["idx"], req=ent["req"],
+                                      prompt=prompt,
                                       plen=plen, blocks=plan.blocks,
-                                      ns=ns, task=req.task,
+                                      ns=ns, task=ent["task"],
                                       task_ref=task_ref,
+                                      max_new=ent["max_new"],
+                                      seq=seq_ctr[0],
                                       t_admit=time.perf_counter(),
                                       t_first=None)
                     if self._disagg:
@@ -1596,9 +2229,26 @@ class Engine:
                         state = target
                         rstat[r]["admitted"] += 1
                 note_peaks(r)
+                # ---- recompute preemption (DESIGN.md §13): the FIFO
+                # head has been backpressured preempt_after consecutive
+                # iterations — free the youngest running request so
+                # mixed long/short workloads cannot livelock
+                if head_blocked and not admitted_any:
+                    blocked[r] += 1
+                else:
+                    blocked[r] = 0
+                N = self.sv.preempt_after
+                if (N and not self._disagg and blocked[r] >= N
+                        and pendings[r]):
+                    state, did = preempt_one(r, state)
+                    if did:
+                        blocked[r] = 0
+                        progressed = True
             # ---- handoff: finished prefills -> decode slots ----
             if self._disagg:
                 for r in range(R):
+                    if not self.router.is_up(r):
+                        continue
                     while handoffs[r]:
                         h = handoffs[r][0]
                         slot = next(
@@ -1652,28 +2302,38 @@ class Engine:
                         # the handoff (pf + decode share the replica's
                         # registry) and is released at decode harvest
                         meta[slot] = dict(
-                            idx=h["idx"], prompt=h["prompt"],
+                            idx=h["idx"], req=h["req"],
+                            prompt=h["prompt"], plen=h["plen"],
                             blocks=dst, ns=h["ns"], task=h["task"],
                             task_ref=h["task_ref"],
+                            max_new=h["max_new"], seq=h["seq"],
                             t_admit=h["t_admit"], t_first=h["t_first"])
+                        # the NaN-injection threshold follows the
+                        # request onto its decode slot
+                        self._nan_at[slot] = (
+                            chaos.nan_for(self._rids[h["idx"]])
+                            if chaos is not None else -1)
                     note_peaks(r)
             # ---- step the worker loops until some slot finishes ----
             stepped = False
             if (self._disagg
                     and bool(np.any(np.asarray(pf_state.active)))):
                 pf_state = self._pdecode(*self._step_weights, pf_state,
-                                         jnp.asarray(self._pf_tables))
+                                         jnp.asarray(self._pf_tables),
+                                         jnp.asarray(self._pf_nan))
                 st.decode_calls += 1
                 stepped = True
             if bool(np.any(np.asarray(state.active))):
                 state = self._pdecode(*self._step_weights, state,
-                                      jnp.asarray(self._tables))
+                                      jnp.asarray(self._tables),
+                                      jnp.asarray(self._nan_at))
                 st.decode_calls += 1
                 stepped = True
             # ---- harvest prefill completions -> handoff queue ----
             if self._disagg:
                 pactive = np.asarray(pf_state.active)
                 pout = np.asarray(pf_state.out)
+                pfailed = np.asarray(pf_state.failed)
                 t = time.perf_counter()
                 for slot in range(self._slots):
                     m = pf_meta[slot]
@@ -1681,8 +2341,22 @@ class Engine:
                         continue
                     progressed = True
                     r = slot // B
-                    req = m["req"]
                     t0 = int(pout[slot, 0])
+                    if pfailed[slot]:
+                        # in-graph NaN guard tripped during prefill: the
+                        # KV is suspect — fail the request, index nothing
+                        self._pf_scheds[r].release(
+                            m["prompt"], m["blocks"], namespace=m["ns"],
+                            register=False,
+                            task=m["task"] if self._reg_on else None)
+                        self._pf_tables[slot] = self._num_blocks
+                        self._pf_nan[slot] = -1
+                        pf_meta[slot] = None
+                        pf_stat["evicted"] += 1
+                        st.failed_requests += 1
+                        st.numerics_faults += 1
+                        finish(m["idx"], [], FAILED)
+                        continue
                     # prompt KV is complete: index it for prefix reuse
                     # BEFORE the handoff derefs the slot's refs, so the
                     # cached entries stay pinned in the prefill pool
@@ -1690,29 +2364,29 @@ class Engine:
                         self._pf_prefixes[r].register(
                             m["prompt"], m["blocks"], namespace=m["ns"])
                     self._pf_tables[slot] = self._num_blocks
+                    self._pf_nan[slot] = -1
                     pf_meta[slot] = None
                     pf_stat["evicted"] += 1
                     ttft.append(t - m["t_admit"])
-                    if req.max_new_tokens == 1:
+                    if m["max_new"] == 1:
                         # the prefill emission IS the whole output
-                        results[m["idx"]] = np.asarray([t0], np.int32)
                         self._pf_scheds[r].release(
                             m["prompt"], m["blocks"], namespace=m["ns"],
                             register=False,
                             task=m["task"] if self._reg_on else None)
-                        rr, cost = rcost[m["idx"]]
-                        self.router.complete(rr, cost)
+                        finish(m["idx"], [t0])
                         continue
                     handoffs[r].append(dict(
-                        idx=m["idx"], prompt=m["prompt"],
+                        idx=m["idx"], req=m["req"], prompt=m["prompt"],
                         plen=m["plen"], blocks=m["blocks"], ns=m["ns"],
-                        task=req.task, task_ref=m["task_ref"],
-                        max_new=req.max_new_tokens,
+                        task=m["task"], task_ref=m["task_ref"],
+                        max_new=m["max_new"], seq=m["seq"],
                         t0=t0, t_admit=m["t_admit"], t_first=t))
             # ---- harvest decode completions ----
             active = np.asarray(state.active)
             out = np.asarray(state.out)
             widx = np.asarray(state.widx)
+            failedv = np.asarray(state.failed)
             t = time.perf_counter()
             for slot in range(self._slots):
                 m = meta[slot]
@@ -1726,26 +2400,39 @@ class Engine:
                 progressed = True
                 r = slot // B
                 ntok = int(widx[slot])
-                results[m["idx"]] = out[slot, :ntok].copy()
+                bad = bool(failedv[slot])
                 # prompt pages are fully computed now: index them for
                 # prefix reuse (unless the prefill pool's cache already
-                # did), return the rest to the free list
+                # did, or the NaN guard fired — suspect KV is never
+                # indexed), return the rest to the free list
                 self.scheds[r].release(m["prompt"], m["blocks"],
                                        namespace=m["ns"],
-                                       register=not self._disagg,
+                                       register=not (self._disagg or bad),
                                        task=(m["task"] if self._reg_on
                                              else None))
                 self._tables[slot] = self._num_blocks
+                self._nan_at[slot] = -1
                 rstat[r]["evicted"] += 1
                 # phase split is resolvable only when the first token was
                 # observed at an earlier loop exit than the completion
                 if (m["t_first"] is not None and ntok > 1
                         and m["t_first"] < t):
                     tpot.append((t - m["t_first"]) / (ntok - 1))
-                rr, cost = rcost[m["idx"]]
-                self.router.complete(rr, cost)
+                if bad:
+                    st.failed_requests += 1
+                    st.numerics_faults += 1
+                    finish(m["idx"], out[slot, :ntok], FAILED)
+                else:
+                    finish(m["idx"], out[slot, :ntok])
                 meta[slot] = None
             if not (progressed or stepped):
+                faults1 = (chaos.alloc_faults + chaos.scatter_faults
+                           if chaos is not None else 0)
+                if faults1 > faults0:
+                    # the stall was manufactured (injected alloc /
+                    # scatter faults blocked every admission this
+                    # iteration) — retry, this is not a real deadlock
+                    continue
                 # nothing decoded, admitted, handed off or harvested:
                 # the queued work can never fit (classic case: a request
                 # needing more KV blocks than the pool can ever free)
@@ -1753,13 +2440,8 @@ class Engine:
                     "paged admission deadlock: request needs more KV "
                     "blocks (or adapter slots) than the pool can ever "
                     "free")
-        for r in range(R):
-            rstat[r]["queue_depth"] = len(pendings[r])
-        if ttft:
-            st.ttft_s = sum(ttft) / len(ttft)
-        if tpot:
-            st.tpot_s = sum(tpot) / len(tpot)
-        st.replica_stats = rstat + ([pf_stat] if pf_stat else [])
+            if chaos is not None and chaos.audit_every_step:
+                chaos_mod.audit(self)
         return state, pf_state
 
 

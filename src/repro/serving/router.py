@@ -23,6 +23,15 @@ within a replica (per-replica admission stays strict FIFO — the
 Scheduler's no-starvation policy is preserved per stripe). The exemplar
 seam is NeMo's deploy-time router/worker split; here both sides live in
 one process and the "network" is a pair of host deques.
+
+Failover (DESIGN.md §13): ``mark_down(r)`` removes a replica from
+placement — its outstanding load is zeroed (the engine re-routes every
+in-flight and queued request of a dead replica through ``route`` again,
+which charges the healthy replica that receives it) and ``complete`` on
+a down replica becomes a no-op (a stale refund for a charge the
+mark_down already wrote off). ``route`` raises when every replica is
+down. Down-ness lasts for the life of this Router object; the engine
+rebuilds its router per generate, so a "repaired" fleet starts clean.
 """
 from __future__ import annotations
 
@@ -50,18 +59,43 @@ class Router:
         self.policy = policy
         self._load = [0] * replicas     # outstanding tokens per replica
         self._rr = 0                    # round-robin cursor
+        self._up = [True] * replicas    # mark_down flips to False
 
     # -- placement -----------------------------------------------------
     def route(self, cost: int) -> int:
         """Place one request of ``cost`` outstanding tokens (prompt +
-        max_new); returns the replica index and charges the cost."""
+        max_new); returns the replica index and charges the cost. Down
+        replicas are never chosen; raises when none are healthy."""
+        up = [i for i in range(self.replicas) if self._up[i]]
+        if not up:
+            raise RuntimeError("every decode replica is marked down")
         if self.policy == "round_robin":
-            r = self._rr % self.replicas
-            self._rr += 1
+            while True:
+                r = self._rr % self.replicas
+                self._rr += 1
+                if self._up[r]:
+                    break
         else:
-            r = min(range(self.replicas), key=lambda i: (self._load[i], i))
+            r = min(up, key=lambda i: (self._load[i], i))
         self._load[r] += cost
         return r
+
+    # -- failover (DESIGN.md §13) --------------------------------------
+    def mark_down(self, replica: int) -> None:
+        """Remove ``replica`` from placement and write off its
+        outstanding load (the engine re-routes every request the dead
+        replica held, charging whichever healthy replica receives it).
+        Idempotent."""
+        if not 0 <= replica < self.replicas:
+            raise ValueError(
+                f"mark_down of unknown replica {replica} "
+                f"(have {self.replicas})")
+        self._up[replica] = False
+        self._load[replica] = 0
+
+    def is_up(self, replica: int) -> bool:
+        """Whether ``replica`` is still eligible for placement."""
+        return self._up[replica]
 
     def complete(self, replica: int, cost: int) -> None:
         """Refund a finished request's cost (engine calls at eviction).
@@ -79,6 +113,8 @@ class Router:
                 f"(have {self.replicas})")
         if cost < 0:
             raise ValueError(f"negative completion cost {cost}")
+        if not self._up[replica]:
+            return      # stale refund: mark_down already wrote it off
         if cost > self._load[replica]:
             raise ValueError(
                 f"completion refund {cost} exceeds replica {replica}'s "

@@ -66,6 +66,10 @@ class Scheduler:
         self.prefix = prefix
         self.stats = stats if stats is not None else EngineStats()
         self.registry = registry
+        # chaos seam (serving/chaos.py): when set, consulted at the top
+        # of every plan() — returning True forces this admission attempt
+        # to report backpressure, exercising the retry path on demand
+        self.fault_hook = None
 
     def _alloc(self, n: int) -> Optional[List[int]]:
         """n fresh blocks, evicting LRU prefix blocks under pressure —
@@ -99,6 +103,11 @@ class Scheduler:
         is trivially reversible — on block failure the pin is dropped
         and the slot stays mapped-but-unloaded, so nothing was wasted.
         """
+        if self.fault_hook is not None and self.fault_hook():
+            # injected allocation failure (ChaosInjector): same contract
+            # as a dry pool — the caller keeps decoding and retries
+            self.stats.backpressure_waits += 1
+            return None
         acq = None
         if self.registry is not None and task is not None:
             acq = self.registry.acquire(task)

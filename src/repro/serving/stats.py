@@ -78,6 +78,15 @@ class EngineStats:
     spec_steps: int = 0          # decode-loop iterations (engine steps)
     draft_tokens: int = 0        # drafter proposals (active decode rows)
     accepted_tokens: int = 0     # proposals the verifier accepted
+    # --- resilience (request lifecycle / failover, DESIGN.md §13) ---
+    cancelled: int = 0           # requests ended by Engine.cancel
+    timeouts: int = 0            # requests ended by their deadline_s
+    preemptions: int = 0         # recompute preemptions (victim re-queued)
+    failed_requests: int = 0     # requests ended with status FAILED
+    numerics_faults: int = 0     # in-graph NaN/inf logit detections
+    replicas_lost: int = 0       # replicas drained via Router.mark_down
+    failover_requests: int = 0   # in-flight/queued requests re-routed off
+    #                              a dead replica (recompute re-admission)
 
     @property
     def tokens_per_s(self) -> float:
@@ -167,4 +176,14 @@ class EngineStats:
                 + (f" spec_k={self.spec_k} "
                    f"accept={self.acceptance_rate:.2f} "
                    f"tok/step={self.tokens_per_step:.2f}"
-                   if self.spec_k else ""))
+                   if self.spec_k else "")
+                + (f" cancelled={self.cancelled} "
+                   f"timeouts={self.timeouts} "
+                   f"preempts={self.preemptions} "
+                   f"failed={self.failed_requests} "
+                   f"nan_faults={self.numerics_faults} "
+                   f"replicas_lost={self.replicas_lost} "
+                   f"failover_reqs={self.failover_requests}"
+                   if (self.cancelled or self.timeouts or self.preemptions
+                       or self.failed_requests or self.numerics_faults
+                       or self.replicas_lost) else ""))

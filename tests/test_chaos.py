@@ -1,0 +1,381 @@
+"""Serving resilience (DESIGN.md §13): request lifecycle
+(cancel / deadline / preemption), replica failover, and the seeded
+chaos harness with per-step invariant audits.
+
+Acceptance criteria:
+
+  * survivors of any injected fault are TOKEN-IDENTICAL to a fault-free
+    greedy run (chaos perturbs scheduling, never math),
+  * every chaos run keeps ``decode_traces == 1`` — aborts, NaN guards
+    and preemptions ride the one compiled decode graph,
+  * the pool invariants (block conservation, refcount == live holders,
+    pinned => loaded, router load == outstanding cost) hold after EVERY
+    host-loop iteration under chaos and at rest ("drains to empty"),
+  * dp2 with one replica killed mid-flight finishes every request with
+    the same greedy tokens as unfaulted dp1.
+
+The dp2 failover case needs fake host devices:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m pytest -q tests/test_chaos.py
+
+(the scripts/ci.sh ``chaos-parity`` job runs it that way; on a single
+device it skips and everything else still runs in the tier-1 suite).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import configs as registry
+from repro.config.base import (RegistryConfig, RunConfig, SHAPES,
+                               ServeConfig)
+from repro.core import tt as ttlib
+from repro.models import model as M
+from repro.serving import (CANCELLED, FAILED, FINISHED, TIMEOUT,
+                           AdapterRegistry, AdapterRuntime, BlockManager,
+                           ChaosInjector, Engine, PrefixCache, Request,
+                           Scheduler, audit, audit_pools)
+
+KEY = jax.random.PRNGKey(0)
+
+needs2 = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs 2 (fake) devices: run under "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+           "(scripts/ci.sh chaos-parity job)")
+
+
+def _runtime(variant="4+1d", num_tasks=3):
+    cfg = registry.get_smoke_config("stablelm-1.6b")
+    run = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                    adapter_kind="metatt", adapter_variant=variant,
+                    num_tasks=num_tasks, adapter_rank=4)
+    spec = M.build_adapter_spec(run)
+    params = M.init_params(cfg, spec, KEY)
+    params["adapter"] = {"cores": ttlib.random_tt(
+        KEY, spec.cfg.mode_sizes, 4, scale=0.8)}
+    rt = AdapterRuntime.build("live", params["base"], spec,
+                              params["adapter"], params["frozen"])
+    return cfg, rt
+
+
+def _requests(cfg, n=4, tasks=3, max_new=6):
+    prompts = [jax.random.randint(jax.random.PRNGKey(i), (4 + i,), 0,
+                                  cfg.vocab_size) for i in range(n)]
+    return [Request(p, max_new, task=i % tasks, request_id=f"r{i}")
+            for i, p in enumerate(prompts)]
+
+
+def _engine(cfg, rt, **kw):
+    base = dict(max_batch=2, cache_len=32, out_cap=8, page_size=8,
+                prefill_chunk=4)
+    base.update(kw)
+    return Engine(cfg, rt, serve=ServeConfig(**base))
+
+
+def _statuses(eng):
+    return [r.status for r in eng.last_results]
+
+
+# ---------------------------------------------------------------------------
+# request lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_scripted_spares_survivors():
+    """Cancel one in-flight request mid-decode (via the chaos schedule,
+    which calls Engine.cancel between jitted steps): it ends CANCELLED
+    with a partial output; every survivor is token-identical to the
+    fault-free run; the pool drains to empty.
+
+    The host regains control exactly when some slot finishes, so the
+    cancel step is scheduled one completion in: r0 (short) finishes in
+    host-step 0, and step 1's sweep catches r1 (long) mid-decode."""
+    cfg, rt = _runtime()
+    lens, news = (4, 5, 6, 7), (3, 8, 6, 6)
+    reqs = [Request(jax.random.randint(jax.random.PRNGKey(i), (lens[i],),
+                                       0, cfg.vocab_size),
+                    news[i], task=i % 3, request_id=f"r{i}")
+            for i in range(4)]
+    baseline = [o.tolist() for o in _engine(cfg, rt).generate(reqs)]
+    eng = _engine(cfg, rt)
+    out = eng.generate(reqs, chaos=ChaosInjector(cancel_at={1: ["r1"]}))
+    res = eng.last_results
+    assert res[1].status == CANCELLED
+    assert res[1].n_generated < reqs[1].max_new_tokens
+    assert out[1].tolist() == baseline[1][:res[1].n_generated]
+    for i in (0, 2, 3):
+        assert res[i].status == FINISHED
+        assert out[i].tolist() == baseline[i], i
+    assert eng.last_stats.cancelled == 1
+    assert eng.last_stats.decode_traces == 1
+    audit(eng)                                  # drained, zero pins
+
+
+def test_cancel_before_generate_kills_queued_request():
+    cfg, rt = _runtime()
+    reqs = _requests(cfg, n=3)
+    eng = _engine(cfg, rt)
+    eng.cancel("r2")
+    out = eng.generate(reqs)
+    assert _statuses(eng) == [FINISHED, FINISHED, CANCELLED]
+    assert out[2].tolist() == []
+    assert eng.last_stats.cancelled == 1
+    audit(eng)
+
+
+def test_deadline_timeout_status_and_partial_tokens():
+    cfg, rt = _runtime()
+    reqs = _requests(cfg, n=3)
+    reqs[0] = Request(reqs[0].prompt, reqs[0].max_new_tokens,
+                      task=reqs[0].task, request_id="r0",
+                      deadline_s=0.0)       # expired on entry
+    baseline = [o.tolist()
+                for o in _engine(cfg, rt).generate(_requests(cfg, n=3))]
+    eng = _engine(cfg, rt)
+    out = eng.generate(reqs)
+    assert _statuses(eng) == [TIMEOUT, FINISHED, FINISHED]
+    assert out[0].tolist() == []
+    assert out[1].tolist() == baseline[1]
+    assert out[2].tolist() == baseline[2]
+    assert eng.last_stats.timeouts == 1
+    audit(eng)
+
+
+def test_lifecycle_on_dense_engine_too():
+    """cancel / deadline / NaN guard are not paged-only: the dense
+    engine shares the Request/RequestResult contract."""
+    cfg, rt = _runtime()
+    lens, news = (4, 5, 6), (3, 8, 6)
+    mk = lambda i, **kw: Request(
+        jax.random.randint(jax.random.PRNGKey(i), (lens[i],), 0,
+                           cfg.vocab_size), news[i], task=i % 3,
+        request_id=f"r{i}", **kw)
+    baseline = [o.tolist()
+                for o in _engine(cfg, rt, cache_mode="dense")
+                .generate([mk(i) for i in range(3)])]
+    reqs = [mk(0), mk(1), mk(2, deadline_s=0.0)]
+    eng = _engine(cfg, rt, cache_mode="dense")
+    out = eng.generate(reqs, chaos=ChaosInjector(cancel_at={1: ["r1"]},
+                                                 audit_every_step=False))
+    res = eng.last_results
+    assert res[2].status == TIMEOUT and out[2].tolist() == []
+    assert res[1].status == CANCELLED
+    assert res[1].n_generated < news[1]
+    assert out[1].tolist() == baseline[1][:res[1].n_generated]
+    assert res[0].status == FINISHED and out[0].tolist() == baseline[0]
+
+
+# ---------------------------------------------------------------------------
+# numerics faults (in-graph NaN guard)
+# ---------------------------------------------------------------------------
+
+
+def test_nan_injection_fails_request_in_graph():
+    cfg, rt = _runtime()
+    reqs = _requests(cfg)
+    baseline = [o.tolist() for o in _engine(cfg, rt).generate(reqs)]
+    eng = _engine(cfg, rt)
+    out = eng.generate(reqs, chaos=ChaosInjector(nan_after={"r2": 2}))
+    res = eng.last_results
+    assert res[2].status == FAILED
+    assert res[2].n_generated == 2          # tokens emitted BEFORE the fault
+    assert out[2].tolist() == baseline[2][:2]
+    for i in (0, 1, 3):
+        assert res[i].status == FINISHED and out[i].tolist() == baseline[i]
+    st = eng.last_stats
+    assert st.numerics_faults == 1 and st.failed_requests == 1
+    assert st.decode_traces == 1            # the guard rides the one trace
+    audit(eng)
+
+
+def test_nan_at_zero_fails_before_any_output():
+    cfg, rt = _runtime()
+    reqs = _requests(cfg, n=2)
+    eng = _engine(cfg, rt)
+    out = eng.generate(reqs, chaos=ChaosInjector(nan_after={"r0": 0}))
+    assert _statuses(eng) == [FAILED, FINISHED]
+    assert out[0].tolist() == []
+    audit(eng)
+
+
+# ---------------------------------------------------------------------------
+# allocation / scatter chaos
+# ---------------------------------------------------------------------------
+
+
+def test_alloc_chaos_only_delays_never_corrupts():
+    cfg, rt = _runtime()
+    reqs = _requests(cfg, n=5)
+    baseline = [o.tolist() for o in _engine(cfg, rt).generate(reqs)]
+    eng = _engine(cfg, rt)
+    chaos = ChaosInjector(seed=7, alloc_fail_steps=(0, 1, 2),
+                          alloc_fail_rate=0.3)
+    out = eng.generate(reqs, chaos=chaos)
+    assert chaos.alloc_faults > 0
+    assert [o.tolist() for o in out] == baseline
+    assert all(s == FINISHED for s in _statuses(eng))
+    assert eng.last_stats.decode_traces == 1
+    audit(eng)
+
+
+def test_scatter_chaos_leaves_slot_mapped_but_unloaded_then_retries():
+    """A failed adapter fault-in scatter unwinds the whole admission
+    (blocks deref'd, pin dropped) and the task slot stays
+    mapped-but-UNLOADED; the retry faults the slice in again. Output
+    must match the fault-free registry run exactly."""
+    cfg, rt = _runtime()
+    reqs = _requests(cfg, n=4, tasks=3)
+    reg = RegistryConfig(max_resident_tasks=2)
+    baseline = [o.tolist()
+                for o in _engine(cfg, rt, registry=reg).generate(reqs)]
+    eng = _engine(cfg, rt, registry=reg)
+    chaos = ChaosInjector(scatter_failures=2)
+    out = eng.generate(reqs, chaos=chaos)
+    assert chaos.scatter_faults == 2
+    assert [o.tolist() for o in out] == baseline
+    assert all(s == FINISHED for s in _statuses(eng))
+    audit(eng)                              # zero pins, pinned => loaded
+
+
+# ---------------------------------------------------------------------------
+# recompute preemption
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_recomputes_victim_token_identically():
+    """Pool sized so two requests can never be resident together: with
+    preempt_after set, the blocked head eventually preempts the running
+    (youngest) request, which re-enters the queue with its generated
+    prefix and still produces exactly the fault-free tokens."""
+    cfg, rt = _runtime(variant="4d", num_tasks=0)
+    # r0: 1 page, finishes first. r1: 2 pages, long — the running
+    # request when r2's admission blocks. r2: 4 pages, can never fit
+    # beside r1 in a 5-block pool -> r1 is the preemption victim.
+    lens, news = (4, 9, 25), (4, 7, 7)
+    reqs = [Request(jax.random.randint(jax.random.PRNGKey(i), (lens[i],),
+                                       0, cfg.vocab_size),
+                    news[i], request_id=f"r{i}")
+            for i in range(3)]
+    kw = dict(max_batch=2, num_blocks=5)
+    baseline = [o.tolist() for o in _engine(cfg, rt, **kw).generate(reqs)]
+    eng = _engine(cfg, rt, preempt_after=1, **kw)
+    out = eng.generate(reqs, chaos=ChaosInjector())  # audits every step
+    res = eng.last_results
+    assert eng.last_stats.preemptions >= 1
+    assert res[1].preemptions >= 1          # the in-flight long request
+    assert all(s == FINISHED for s in _statuses(eng))
+    assert [o.tolist() for o in out] == baseline
+    assert eng.last_stats.decode_traces == 1
+    audit(eng)
+
+
+# ---------------------------------------------------------------------------
+# replica failover
+# ---------------------------------------------------------------------------
+
+
+@needs2
+def test_dp2_replica_kill_matches_unfaulted_dp1():
+    cfg, rt = _runtime()
+    reqs = _requests(cfg, n=5, max_new=8)   # long enough to be in flight
+    dp1 = [o.tolist() for o in _engine(cfg, rt).generate(reqs)]
+    eng = _engine(cfg, rt, mesh_shape=(2, 1))
+    chaos = ChaosInjector(kill_replica_at=(1, 1))
+    out = eng.generate(reqs, chaos=chaos)
+    st = eng.last_stats
+    assert chaos.killed == [1]
+    assert st.replicas_lost == 1
+    assert st.failover_requests > 0
+    assert all(s == FINISHED for s in _statuses(eng))
+    assert [o.tolist() for o in out] == dp1
+    assert st.decode_traces == 1
+    audit(eng)
+    assert not eng.router.is_up(1) and eng.router.is_up(0)
+
+
+@needs2
+def test_dp2_kill_then_next_generate_still_serves():
+    """After a failover generate, the engine keeps serving on the
+    surviving replicas (the dead one stays out of the rotation)."""
+    cfg, rt = _runtime()
+    reqs = _requests(cfg, n=3)
+    dp1 = [o.tolist() for o in _engine(cfg, rt).generate(reqs)]
+    eng = _engine(cfg, rt, mesh_shape=(2, 1))
+    eng.generate(reqs, chaos=ChaosInjector(kill_replica_at=(1, 0)))
+    again = [o.tolist() for o in eng.generate(reqs)]
+    assert again == dp1
+    assert all(s == FINISHED for s in _statuses(eng))
+    audit(eng)
+
+
+# ---------------------------------------------------------------------------
+# pool-invariant property test (host-side only, no model)
+# ---------------------------------------------------------------------------
+
+
+def _drive_pools(seed, n_ops=150):
+    """Random interleaving of plan / release / cancel / evict over a
+    Scheduler(BlockManager + PrefixCache + AdapterRegistry), auditing
+    the pool invariants after every operation and draining to empty."""
+    rng = np.random.default_rng(seed)
+    bm = BlockManager(8, 4)
+    prefix = PrefixCache(bm)
+    reg = AdapterRegistry(2)
+    sched = Scheduler(bm, prefix, registry=reg)
+    live = []                   # (prompt, blocks, task) per admitted req
+
+    def check():
+        audit_pools(bm, prefix, [b for _, b, _ in live],
+                    registry=reg, pinned_tasks=[t for _, _, t in live])
+
+    for _ in range(n_ops):
+        op = rng.integers(0, 4)
+        if op == 0:             # plan (admission attempt)
+            plen = int(rng.integers(1, 9))
+            prompt = rng.integers(0, 50, plen).tolist()
+            task = int(rng.integers(0, 5))
+            plan = sched.plan(prompt, int(rng.integers(0, 6)), task=task)
+            if plan is not None:
+                if plan.adapter_fault:
+                    reg.mark_loaded(task)   # the engine's scatter step
+                live.append((prompt, plan.blocks, task))
+        elif op == 1 and live:  # release (normal finish, registers)
+            prompt, blocks, task = live.pop(rng.integers(0, len(live)))
+            sched.release(prompt, blocks, task=task)
+        elif op == 2 and live:  # cancel-style release (no registration)
+            prompt, blocks, task = live.pop(rng.integers(0, len(live)))
+            sched.release(prompt, blocks, register=False, task=task)
+        elif op == 3:           # pressure-evict cached prefix blocks
+            prefix.evict_lru(int(rng.integers(1, 3)))
+        check()
+    while live:                 # drain
+        prompt, blocks, task = live.pop()
+        sched.release(prompt, blocks, task=task)
+        check()
+    prefix.evict_lru(bm.num_blocks)
+    check()
+    assert bm.free_blocks == bm.num_blocks      # drained to empty
+    assert all(p == 0 for p in reg._pins)
+
+
+def test_pool_invariants_random_interleaving_seeded():
+    for seed in range(10):
+        _drive_pools(seed)
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as hst
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(seed=hst.integers(min_value=0, max_value=2**32 - 1))
+    def test_pool_invariants_random_interleaving_hypothesis(seed):
+        _drive_pools(seed, n_ops=80)
+else:
+    def test_pool_invariants_random_interleaving_hypothesis():
+        pytest.importorskip("hypothesis")
