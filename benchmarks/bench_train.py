@@ -1,0 +1,157 @@
+"""Training-path benchmarks: the memory/step-time story of DESIGN.md §14.
+
+Two comparisons, emitted as ``name,us_per_call,derived`` rows and merged
+into ``BENCH_train.json``:
+
+  * flash-backward vs reference backward — compile-time peak temp memory
+    at T=2048 (the blockwise backward must NOT materialize the (T, T)
+    score matrix; the ref path does) plus wall-clock step time at a small
+    T (interpret mode on CPU is a correctness emulator, not a speed
+    number; TPU is the target),
+  * DMRG sweep-on vs sweep-off training — mean step time and final loss
+    for a rank-annealed run against its fixed-rank baseline, with a
+    non-divergence assertion (the sweep must not wreck optimization).
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_train.py [--smoke] [--json]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro import configs as registry
+from repro.config.base import (KernelConfig, OptimizerConfig, RunConfig,
+                               SHAPES, TrainConfig)
+from repro.core import tt as ttlib
+from repro.core.dmrg import RankSchedule
+from repro.data import LMStream
+from repro.kernels import dispatch
+from repro.train.trainer import Trainer
+
+#: analytic size of the buffer the blockwise backward keeps out of HBM
+_TT_BYTES = lambda t: t * t * 4
+
+
+def _flash_grad_fn(policy, t):
+    def loss(q, k, v):
+        return jnp.sum(dispatch.flash_attention(q, k, v, causal=True,
+                                                policy=policy))
+    sds = jax.ShapeDtypeStruct((1, t, 1, 64), jnp.float32)
+    return jax.jit(jax.grad(loss, argnums=(0, 1, 2))), sds
+
+
+def _flash_bwd_rows(rows, *, smoke: bool = False) -> None:
+    pallas = dispatch.resolve(KernelConfig(backend="pallas",
+                                           interpret=True))
+
+    # ---- peak temp memory, compile-only, at the acceptance shape T=2048
+    t_mem = 2048
+    temps = {}
+    for label, pol in (("pallas", pallas), ("ref", None)):
+        fn, sds = _flash_grad_fn(pol, t_mem)
+        ma = fn.lower(sds, sds, sds).compile().memory_analysis()
+        temps[label] = int(ma.temp_size_in_bytes)
+        rows.append(emit(f"train/flash_bwd_peak_{label}", 0.0,
+                         f"T={t_mem},temp_mb={temps[label] / 1e6:.1f},"
+                         f"tt_buffer_mb={_TT_BYTES(t_mem) / 1e6:.1f}"))
+    if temps["pallas"] >= temps["ref"]:
+        raise AssertionError(
+            f"flash backward lost the memory win: pallas temp "
+            f"{temps['pallas']} >= ref temp {temps['ref']}")
+
+    # ---- wall-clock step time at a small T (emulator numbers on CPU)
+    t_time = 64 if smoke else 128
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, t_time, 1, 64), jnp.float32)
+    for label, pol, iters, warmup in (("pallas_interpret", pallas, 3, 1),
+                                      ("ref", None, 5, 2)):
+        fn, _ = _flash_grad_fn(pol, t_time)
+        us = time_call(fn, q, q, q, iters=iters, warmup=warmup)
+        rows.append(emit(f"train/flash_bwd_step_{label}", us,
+                         f"T={t_time},interpret={int(pol is not None)}"))
+
+
+def _make_trainer(steps, steps_per_epoch, rank_schedule, seed=3):
+    cfg = registry.get_smoke_config("stablelm-1.6b")
+    run = RunConfig(
+        model=cfg, shape=SHAPES["train_4k"], adapter_kind="metatt",
+        adapter_rank=8, adapter_alpha=4.0,
+        optimizer=OptimizerConfig(lr=2e-2, warmup_ratio=0.1),
+        train=TrainConfig(seed=seed, remat="none"))
+    data = LMStream(vocab_size=cfg.vocab_size, seq_len=32, batch=8,
+                    seed=11, branching=2)
+    return Trainer(run=run, data=data, total_steps=steps,
+                   steps_per_epoch=steps_per_epoch,
+                   rank_schedule=rank_schedule)
+
+
+def _sweep_rows(rows, *, smoke: bool = False) -> None:
+    steps = 12 if smoke else 30
+    spe = 4 if smoke else 10
+    sched = RankSchedule(milestones=((1, 6), (2, 4)))
+    finals = {}
+    for label, schedule in (("sweep_on", sched), ("sweep_off", None)):
+        tr = _make_trainer(steps, spe, schedule)
+        tr.train()
+        losses = tr.losses()
+        if not np.isfinite(losses).all():
+            raise AssertionError(f"{label}: non-finite loss {losses}")
+        finals[label] = float(np.mean(losses[-3:]))
+        step_us = float(np.mean([m["step_time_s"]
+                                 for _, m in tr.history])) * 1e6
+        ranks = ttlib.ranks(tr.state.adapter["cores"])
+        rows.append(emit(f"train/{label}", step_us,
+                         f"steps={steps},final_loss={finals[label]:.4f},"
+                         f"ranks={'-'.join(str(r) for r in ranks)}"))
+    # rank annealing trades capacity for size; it must not diverge
+    if finals["sweep_on"] > finals["sweep_off"] + 1.0:
+        raise AssertionError(
+            f"sweep-on diverged: {finals['sweep_on']:.4f} vs fixed-rank "
+            f"{finals['sweep_off']:.4f}")
+
+
+def _merge_rows_into_json(rows) -> None:
+    """Same-name rows are replaced, everything else preserved — composes
+    with other writers regardless of execution order (bench_serving
+    idiom)."""
+    import json
+    import os
+    from benchmarks.run import REPO_ROOT, _row_dicts
+    path = os.path.join(REPO_ROOT, "BENCH_train.json")
+    payload = {"rows": []}
+    if os.path.exists(path):
+        with open(path) as f:
+            payload = json.load(f)
+    new = _row_dicts(rows)
+    names = {r["name"] for r in new}
+    payload["rows"] = [r for r in payload.get("rows", [])
+                       if r["name"] not in names] + new
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"# merged {sorted(names)} into {path}", flush=True)
+
+
+def run(*, smoke: bool = False) -> list:
+    rows = []
+    _flash_bwd_rows(rows, smoke=smoke)
+    _sweep_rows(rows, smoke=smoke)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes/steps for CI")
+    ap.add_argument("--json", action="store_true",
+                    help="merge rows into BENCH_train.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    out = run(smoke=args.smoke)
+    if args.json:
+        _merge_rows_into_json(out)

@@ -11,8 +11,8 @@ quantized serving comparison (token parity, prefix-cache hit rate and
 peak-KV-memory assertions from the engine's own stats) — cheap enough to
 gate every CI run against kernel regressions and benchmark bit-rot.
 
-``--json`` additionally writes ``BENCH_kernels.json`` and
-``BENCH_serving.json`` at the repo root — the same rows as the CSV (parsed
+``--json`` additionally writes ``BENCH_kernels.json``, ``BENCH_serving.json``
+and ``BENCH_train.json`` at the repo root — the same rows as the CSV (parsed
 into objects) plus, for serving, the engines' own stats objects — so
 future PRs can diff the perf trajectory machine-readably instead of
 scraping stdout.
@@ -43,26 +43,29 @@ def _write_json(path: str, payload: dict) -> None:
     print(f"# wrote {full}", flush=True)
 
 
-def _emit_json(kernel_rows: list, serving_rows: list) -> None:
-    from benchmarks import bench_serving
+def _emit_json(kernel_rows: list, serving_rows: list,
+               train_rows: list) -> None:
+    from benchmarks import bench_serving, bench_train
     _write_json("BENCH_kernels.json", {"rows": _row_dicts(kernel_rows)})
     # merge (replace same-name rows / same-label stats, keep the rest)
     # rather than overwrite, so rows written by other jobs — e.g. the
     # sharded-parity job's serving/tp4_vs_tp1 (`bench_serving --mesh`) —
     # survive this writer regardless of execution order
     bench_serving._merge_rows_into_json(serving_rows)
+    bench_train._merge_rows_into_json(train_rows)
 
 
 def main(*, smoke: bool = False, emit_json: bool = False) -> None:
     print("name,us_per_call,derived")
     from benchmarks import (bench_fig2_dmrg, bench_init_ablation,
                             bench_kernels, bench_serving, bench_table1,
-                            bench_table2, roofline)
+                            bench_table2, bench_train, roofline)
     if smoke:
         kernel_rows = bench_kernels.run(smoke=True)
         serving_rows = bench_serving.run(smoke=True)
+        train_rows = bench_train.run(smoke=True)
         if emit_json:
-            _emit_json(kernel_rows, serving_rows)
+            _emit_json(kernel_rows, serving_rows, train_rows)
         return
     bench_table1.run()
     bench_table2.run()
@@ -70,8 +73,9 @@ def main(*, smoke: bool = False, emit_json: bool = False) -> None:
     bench_init_ablation.run()
     serving_rows = bench_serving.run()
     kernel_rows = bench_kernels.run()
+    train_rows = bench_train.run()
     if emit_json:
-        _emit_json(kernel_rows, serving_rows)
+        _emit_json(kernel_rows, serving_rows, train_rows)
     # roofline summary rows (from dry-run artifacts, if present)
     for out_dir, label in (("artifacts/dryrun", "baseline"),
                            ("artifacts/dryrun_opt", "optimized")):
@@ -96,7 +100,8 @@ if __name__ == "__main__":
                          "benches (incl. paged-vs-dense and fp-vs-int8 "
                          "engine parity)")
     ap.add_argument("--json", action="store_true",
-                    help="write BENCH_kernels.json / BENCH_serving.json "
-                         "at the repo root (rows + engine stats)")
+                    help="write BENCH_kernels.json / BENCH_serving.json / "
+                         "BENCH_train.json at the repo root (rows + "
+                         "engine stats)")
     args = ap.parse_args()
     main(smoke=args.smoke, emit_json=args.json)

@@ -91,3 +91,18 @@ python benchmarks/bench_serving.py --multitask --smoke
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python -m pytest -x -q tests/test_chaos.py tests/test_fault_tolerance.py
 python benchmarks/bench_serving.py --chaos --smoke
+
+# train-parity job (DESIGN.md §14): the blockwise flash-attention
+# backward and the fused linear VJPs must match finite differences and
+# their ref twins (f32 <=1e-5 / bf16 <=1e-3 on odd shapes + GQA), the
+# T=2048 backward HLO must show no (T, T) materialization, and the
+# DMRG-in-training path (warm-moment carry, post-sweep checkpoint
+# triple, mesh resharding) must hold on a forced 4-device mesh; the
+# train bench asserts the compile-time memory win and sweep-on
+# non-divergence and merges its rows into BENCH_train.json
+XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    python -m pytest -x -q tests/test_grads.py tests/test_hlo_analysis.py
+XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    python -m pytest -x -q tests/test_train_integration.py -k dmrg
+XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    python benchmarks/bench_train.py --smoke --json

@@ -138,10 +138,18 @@ class CheckpointManager:
             tmp = base + f".tmp.{os.getpid()}"
             with open(tmp + ".npz", "wb") as f:
                 np.savez(f, **arrays)
-            if meta is not None:
-                with open(tmp + ".json", "w") as f:
-                    json.dump({"step": step, **meta}, f)
-                os.replace(tmp + ".json", base + ".json")
+            # per-leaf shape manifest: DMRG sweeps change TT bond shapes
+            # mid-run, so the sidecar records what was actually saved —
+            # restore() is shape-flexible, and tools/tests can audit the
+            # reshaped (params, opt-state, schedule-position) triple
+            # without loading the npz
+            manifest = {"step": step,
+                        "shapes": {k: list(v.shape)
+                                   for k, v in arrays.items()},
+                        **(meta or {})}
+            with open(tmp + ".json", "w") as f:
+                json.dump(manifest, f)
+            os.replace(tmp + ".json", base + ".json")
             os.replace(tmp + ".npz", base + ".npz")
             self._gc()
 

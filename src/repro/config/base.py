@@ -563,6 +563,9 @@ class TrainConfig:
     ckpt_keep: int = 3
     grad_compression: str = "none"  # none | int8 | topk
     train_base: bool = False       # True -> full fine-tuning baseline (FT row)
+    # DMRG-in-training: transport AdamW moments through each sweep (warm
+    # carry, core/dmrg.py) instead of the paper's cold re-initialization
+    dmrg_warm_moments: bool = True
 
 
 @dataclasses.dataclass(frozen=True)

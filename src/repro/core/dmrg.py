@@ -6,9 +6,17 @@ cores, truncates with an SVD to a target rank, and re-splits:
   left→right:  G_i ← U,   G_{i+1} ← S·Vᵀ     (i = 1 .. d-1)
   right→left:  G_{i-1} ← U·S,   G_i ← Vᵀ     (i = d .. 2)
 
-After a sweep the bond ranks (and hence parameter shapes) change, so the
-optimizer moments must be re-initialized (paper §3.3) — see
-optim/adamw.py::reinit_state and train/trainer.py.
+After a sweep the bond ranks (and hence parameter shapes) change. The paper
+(§3.3) re-initializes the Adam moments; beyond that we can also *transport*
+them through the sweep (``moments=``): every two-site step replaces the pair
+(a, b) with (a', b') related by per-side transfer matrices (old ≈ new ·
+transfer, computed by pseudo-inverse projection), so the gradient EMAs map
+through the chain rule (mu' = mu · tᵀ on the left bond side, sᵀ · mu on the
+right) and the second moments through the elementwise-SQUARED coefficients
+(exact if per-coordinate gradients were independent; always preserves
+non-negativity). This keeps warm optimizer statistics across a mid-training
+rank change instead of restarting Adam cold — see
+optim/adamw.py::carry_state and train/trainer.py.
 
 Beyond the paper's fixed-target sweep we also provide:
   * adaptive truncation by relative singular-value tolerance (`rtol`),
@@ -35,17 +43,49 @@ class SweepResult:
     # singular-value spectra per bond from the final (right-to-left) pass —
     # the diagnostic the paper uses to pick rank schedules (App. C).
     spectra: tuple
+    # transported optimizer moments, mirroring the ``moments=`` input
+    # pytrees with the post-sweep core shapes (None when not requested)
+    moments: tuple | None = None
+
+
+def _transport_pair(mom_cores, i, old_a, old_b, new_a, new_b) -> None:
+    """Transport moment cores at bond ``i`` through one two-site update.
+
+    ``mom_cores`` is ``(mu_list, nu_list)`` of per-core moment arrays,
+    mutated in place. The transfer matrices project old factors onto the
+    new ones (old ≈ new · transfer, via pseudo-inverse); first moments map
+    linearly through them, second moments through the squared coefficients
+    so they stay non-negative.
+    """
+    ra, rn = old_a.shape[-1], new_a.shape[-1]
+    mat_oa = old_a.reshape(-1, ra).astype(jnp.float32)
+    mat_na = new_a.reshape(-1, rn).astype(jnp.float32)
+    t = jnp.linalg.pinv(mat_na) @ mat_oa                      # (r_new, r_old)
+    mat_ob = old_b.reshape(ra, -1).astype(jnp.float32)
+    mat_nb = new_b.reshape(rn, -1).astype(jnp.float32)
+    s = mat_ob @ jnp.linalg.pinv(mat_nb)                      # (r_old, r_new)
+    mu, nu = mom_cores
+    for lst, ca, cb in ((mu, t.T, s.T), (nu, t.T ** 2, s.T ** 2)):
+        lst[i] = (lst[i].reshape(-1, ra).astype(jnp.float32) @ ca
+                  ).reshape(new_a.shape)
+        lst[i + 1] = (cb @ lst[i + 1].reshape(ra, -1).astype(jnp.float32)
+                      ).reshape(new_b.shape)
 
 
 def dmrg_sweep(params: Params, target_rank: int | Sequence[int] | None = None,
                *, rtol: float | None = None, max_rank: int | None = None,
-               canonicalize: bool = False) -> SweepResult:
+               canonicalize: bool = False,
+               moments: tuple | None = None) -> SweepResult:
     """One full DMRG sweep (Algorithm 1). Host-side: changes array shapes.
 
     target_rank: hard per-bond target (int -> uniform). If None, ranks are
         chosen adaptively from singular values via ``rtol`` (and capped at
         ``max_rank``).
     canonicalize: QR left-canonicalize first (beyond-paper numerical nicety).
+    moments: optional ``(mu, nu)`` params-like pytrees (AdamW first/second
+        moments); their cores are transported through every two-site step
+        (see module docstring) and come back on ``SweepResult.moments``
+        with the post-sweep shapes.
     """
     cores = list(params["cores"])
     d = len(cores)
@@ -61,14 +101,31 @@ def dmrg_sweep(params: Params, target_rank: int | Sequence[int] | None = None,
     else:
         targets = [None] * nbonds
 
+    mom_cores = None
+    if moments is not None:
+        mom_cores = tuple(list(m["cores"]) for m in moments)
+
     if canonicalize:
-        cores = tt.left_canonicalize(cores)
+        if mom_cores is None:
+            cores = tt.left_canonicalize(cores)
+        else:
+            # inline QR pass so each gauge move transports the moments too
+            for i in range(d - 1):
+                r_prev, n, r_next = cores[i].shape
+                q, r = jnp.linalg.qr(cores[i].reshape(r_prev * n, r_next))
+                new_a = q.reshape(r_prev, n, q.shape[1])
+                new_b = jnp.tensordot(r, cores[i + 1], axes=[[1], [0]])
+                _transport_pair(mom_cores, i, cores[i], cores[i + 1],
+                                new_a, new_b)
+                cores[i], cores[i + 1] = new_a, new_b
 
     # left -> right (lines 1-5): G_i <- U (isometry), G_{i+1} <- S Vt
     for i in range(d - 1):
         merged = tt.merge_pair(cores[i], cores[i + 1])
         a, b, _ = tt.split_merged(merged, targets[i], left_orthogonal=True,
                                   rtol=rtol, max_rank=max_rank)
+        if mom_cores is not None:
+            _transport_pair(mom_cores, i, cores[i], cores[i + 1], a, b)
         cores[i], cores[i + 1] = a, b
 
     # right -> left (lines 6-10): G_{i-1} <- U S, G_i <- Vt
@@ -78,13 +135,20 @@ def dmrg_sweep(params: Params, target_rank: int | Sequence[int] | None = None,
         a, b, s = tt.split_merged(merged, targets[i - 1],
                                   left_orthogonal=False,
                                   rtol=rtol, max_rank=max_rank)
+        if mom_cores is not None:
+            _transport_pair(mom_cores, i - 1, cores[i - 1], cores[i], a, b)
         cores[i - 1], cores[i] = a, b
         spectra[i - 1] = s
 
     out = dict(params)
     out["cores"] = cores
+    out_moments = None
+    if moments is not None:
+        out_moments = tuple(
+            {**dict(m), "cores": list(mc)}
+            for m, mc in zip(moments, mom_cores))
     return SweepResult(params=out, ranks=tt.ranks(cores),
-                       spectra=tuple(spectra))
+                       spectra=tuple(spectra), moments=out_moments)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -20,13 +20,14 @@ exactly the code the model executes — no benchmark-only kernel calls.
 The fused linear is differentiable: a custom VJP whose dx GEMM is itself
 the fused kernel with transposed operands (dx = g·Wᵀ + α·(g·Bᵀ)·Aᵀ has the
 same base-matmul + rank-r-epilogue shape as the forward), so the *training*
-hot path stays on the kernel in both directions. Flash attention recomputes
-attention via the REFERENCE path in its backward — correct, but that leg
-materializes the (T, S) score matrix, so the flash memory win currently
-holds for forward/inference only; a blockwise flash backward kernel is the
-known follow-up at this seam. Future backends (GPU Triton, new TPU
-generations) plug in here: add a branch to resolve() and the whole stack
-follows.
+hot path stays on the kernel in both directions. Flash attention is also
+differentiable end-to-end on the blockwise path: the forward stashes the
+per-row log-sum-exp and the backward runs the two-pass recompute kernels
+(``kernels/flash_attention.py::flash_attention_bwd``), so neither direction
+ever materializes the (T, S) score matrix — the flash memory win holds for
+training as well as inference (DESIGN.md §14). Future backends (GPU Triton,
+new TPU generations) plug in here: add a branch to resolve() and the whole
+stack follows.
 
 Sharded serving (DESIGN.md §9): these entry points are shard_map-safe —
 under the engine's tensor-parallel mesh each shard calls them with its
@@ -195,23 +196,58 @@ def tt_linear_batched_a_q(x, wq, a, b, *, alpha: float = 1.0,
     return y.astype(x.dtype)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _fused_tt_linear_ba(pol: KernelPolicy, alpha: float, x, w, a, b):
+    return ops.tt_linear_batched_a(x, w, a, b, alpha=alpha,
+                                   backend="pallas", interpret=pol.interpret,
+                                   bm=pol.bm, bn=pol.bn, bk=pol.bk)
+
+
+def _fused_tt_linear_ba_fwd(pol, alpha, x, w, a, b):
+    return _fused_tt_linear_ba(pol, alpha, x, w, a, b), (x, w, a, b)
+
+
+def _fused_tt_linear_ba_bwd(pol, alpha, res, g):
+    x, w, a, b = res
+    # decode-shaped (one token per slot row): the backward contractions
+    # are per-row rank-r epilogues, so plain XLA einsums in f32 suffice
+    squeeze = x.ndim == 3
+    xf = (x[:, 0] if squeeze else x).astype(jnp.float32)
+    gf = (g[:, 0] if squeeze else g).astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    gb = gf @ b.astype(jnp.float32).T                       # (S, r)
+    dx = (gf @ w.astype(jnp.float32).T
+          + alpha * jnp.einsum("sr,skr->sk", gb, af))
+    dw = xf.T @ gf
+    da = alpha * jnp.einsum("sk,sr->skr", xf, gb)
+    p = jnp.einsum("sk,skr->sr", xf, af)
+    db = alpha * (p.T @ gf)
+    if squeeze:
+        dx = dx[:, None]
+    return (dx.astype(x.dtype), dw.astype(w.dtype), da.astype(a.dtype),
+            db.astype(b.dtype))
+
+
+_fused_tt_linear_ba.defvjp(_fused_tt_linear_ba_fwd, _fused_tt_linear_ba_bwd)
+
+
 def tt_linear_batched_a(x, w, a, b, *, alpha: float = 1.0,
                         policy: Optional[KernelPolicy] = None):
     """Per-row-A adapted linear (the (4+1)d slot-task routing form).
 
     x: (S, [1,] K); w: (K, N); a: (S, K, r); b: (r, N). The Pallas kernel
-    handles the decode shape (one token per slot row); other shapes (e.g. a
+    handles the decode shape (one token per slot row) through a custom VJP
+    (differentiable like the plain fused linear); other shapes (e.g. a
     per-example task vector during training) run the batched-einsum
     reference from the same seam.
     """
     decode_shaped = x.ndim == 2 or (x.ndim == 3 and x.shape[1] == 1)
     if decode_shaped:
         fused = policy is not None and policy.fused_linear
-        kw = dict(interpret=policy.interpret, bm=policy.bm, bn=policy.bn,
-                  bk=policy.bk) if fused else {}
-        return ops.tt_linear_batched_a(
-            x, w, a, b, alpha=float(alpha),
-            backend="pallas" if fused else "ref", **kw)
+        if fused:
+            return _fused_tt_linear_ba(policy, float(alpha), x, w, a, b)
+        return ops.tt_linear_batched_a(x, w, a, b, alpha=float(alpha),
+                                       backend="ref")
     # (B, T>1, K) generalization (per-example task vectors during
     # training) — no kernel for this shape yet; batched-einsum reference
     p = jnp.einsum("b...k,bkr->b...r", x, a.astype(x.dtype),
@@ -223,7 +259,7 @@ def tt_linear_batched_a(x, w, a, b, *, alpha: float = 1.0,
 
 
 # ---------------------------------------------------------------------------
-# attention (flash forward, reference-recompute backward)
+# attention (flash forward, blockwise flash backward)
 # ---------------------------------------------------------------------------
 
 
@@ -235,15 +271,21 @@ def _fused_flash(pol: KernelPolicy, causal: bool, q, k, v):
 
 
 def _fused_flash_fwd(pol, causal, q, k, v):
-    return _fused_flash(pol, causal, q, k, v), (q, k, v)
+    # the stats-emitting forward: one extra (B, H, T) f32 residual (lse)
+    # buys a backward that never builds (T, S)
+    out, lse = ops.flash_attention_fwd(q, k, v, causal=causal,
+                                       backend="pallas",
+                                       interpret=pol.interpret, bq=pol.bq,
+                                       bkv=pol.bkv)
+    return out, (q, k, v, out, lse)
 
 
 def _fused_flash_bwd(pol, causal, res, g):
-    q, k, v = res
-    _, vjp = jax.vjp(
-        lambda q_, k_, v_: ops.flash_attention(q_, k_, v_, causal=causal,
-                                               backend="ref"), q, k, v)
-    return vjp(g)
+    q, k, v, out, lse = res
+    return ops.flash_attention_bwd(q, k, v, out, lse, g, causal=causal,
+                                   backend="pallas",
+                                   interpret=pol.interpret, bq=pol.bq,
+                                   bkv=pol.bkv)
 
 
 _fused_flash.defvjp(_fused_flash_fwd, _fused_flash_bwd)

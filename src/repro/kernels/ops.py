@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import decode_attention as _decode_attn
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.flash_attention import flash_attention_bwd as _flash_bwd
+from repro.kernels.flash_attention import flash_attention_fwd as _flash_fwd
 from repro.kernels.paged_attention import (
     paged_decode_attention as _paged_attn)
 from repro.kernels.tt_linear import tt_linear as _tt_linear
@@ -244,6 +246,113 @@ def flash_attention(q, k, v, *, causal: bool = True, backend: str = "auto",
     out = _flash(qh, kh, vh, causal=causal, bq=bq, bkv=bkv,
                  interpret=_interp(interpret), kv_len=s0)
     return out[:, :t0].reshape(b, h, t0, d).transpose(0, 2, 1, 3)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True,
+                        backend: str = "auto", interpret: bool | None = None,
+                        bq: int = 0, bkv: int = 0):
+    """Stats-emitting GQA flash forward for training.
+
+    Same layout contract as ``flash_attention`` — q: (B, T, H, d); k, v:
+    (B, S, KV, d) — but also returns the per-row log-sum-exp residual
+    ``lse`` with shape (B, H, T) f32, which ``flash_attention_bwd`` needs
+    to rebuild probability tiles without ever materializing (T, S).
+    """
+    if _use_ref(backend):
+        g = q.shape[2] // k.shape[2]
+        kk = jnp.repeat(k, g, axis=2) if g > 1 else k
+        vv = jnp.repeat(v, g, axis=2) if g > 1 else v
+        qh = q.transpose(0, 2, 1, 3)
+        kh = kk.transpose(0, 2, 1, 3)
+        vh = vv.transpose(0, 2, 1, 3)
+        scale = q.shape[-1] ** -0.5
+        s = jnp.einsum("bhqd,bhkd->bhqk", qh, kh,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            t, s_len = q.shape[1], k.shape[1]
+            mask = jnp.arange(t)[:, None] >= jnp.arange(s_len)[None, :]
+            s = jnp.where(mask[None, None], s, -1e30)
+        lse = jax.nn.logsumexp(s, axis=-1)
+        p = jnp.exp(s - lse[..., None])
+        out = jnp.einsum("bhqk,bhkd->bhqd", p.astype(vh.dtype), vh)
+        return out.transpose(0, 2, 1, 3).astype(q.dtype), lse
+    b, t, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qh = q.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    kh = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, s, d)
+    vh = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, s, d)
+    bq = _pick_tile(t, bq, (256, 128))
+    bkv = _pick_tile(s, bkv, (256, 128))
+    qh, t0 = _pad_to(qh, 1, bq)
+    kh, s0 = _pad_to(kh, 1, bkv)
+    vh, _ = _pad_to(vh, 1, bkv)
+    out, lse = _flash_fwd(qh, kh, vh, causal=causal, bq=bq, bkv=bkv,
+                          interpret=_interp(interpret), kv_len=s0)
+    out = out[:, :t0].reshape(b, h, t0, d).transpose(0, 2, 1, 3)
+    return out, lse[:, :t0].reshape(b, h, t0)
+
+
+def _group_sum_kv(dx, b: int, kv: int, grp: int, s: int, d: int, dtype):
+    """(B·H, S, d) query-head grads -> (B, S, KV, d): sum each GQA group
+    of ``grp`` query heads back onto its shared KV head (the adjoint of
+    the jnp.repeat broadcast), accumulated in f32."""
+    dx = dx.astype(jnp.float32).reshape(b, kv, grp, s, d).sum(axis=2)
+    return dx.transpose(0, 2, 1, 3).astype(dtype)          # (B, S, KV, d)
+
+
+def flash_attention_bwd(q, k, v, o, lse, g, *, causal: bool = True,
+                        backend: str = "auto", interpret: bool | None = None,
+                        bq: int = 0, bkv: int = 0):
+    """Blockwise GQA flash backward: (dq, dk, dv) from stashed residuals.
+
+    q, o, g: (B, T, H, d); k, v: (B, S, KV, d); lse: (B, H, T) f32 from
+    ``flash_attention_fwd``. dk/dv come back in KV-head layout — the GQA
+    broadcast's adjoint sums each group of query heads in f32. Padded
+    query rows carry a +1e30 lse sentinel so their recomputed probability
+    tiles are exactly zero (no inf·0 NaNs); padded keys are masked by
+    ``kv_len`` inside the kernels.
+    """
+    b, t, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    grp = h // kv
+    if _use_ref(backend):
+        kk = jnp.repeat(k, grp, axis=2) if grp > 1 else k
+        vv = jnp.repeat(v, grp, axis=2) if grp > 1 else v
+        dq, dk, dv = _ref.flash_attention_bwd_ref(
+            q.transpose(0, 2, 1, 3), kk.transpose(0, 2, 1, 3),
+            vv.transpose(0, 2, 1, 3), o.transpose(0, 2, 1, 3), lse,
+            g.transpose(0, 2, 1, 3), causal=causal)
+        dq = dq.transpose(0, 2, 1, 3)
+        dk = _group_sum_kv(dk.reshape(b * h, s, d), b, kv, grp, s, d,
+                           k.dtype)
+        dv = _group_sum_kv(dv.reshape(b * h, s, d), b, kv, grp, s, d,
+                           v.dtype)
+        return dq, dk, dv
+    qh = q.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    kh = jnp.repeat(k.transpose(0, 2, 1, 3), grp, axis=1).reshape(b * h, s, d)
+    vh = jnp.repeat(v.transpose(0, 2, 1, 3), grp, axis=1).reshape(b * h, s, d)
+    oh = o.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    gh = g.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    lseh = lse.reshape(b * h, t)
+    bq = _pick_tile(t, bq, (256, 128))
+    bkv = _pick_tile(s, bkv, (256, 128))
+    qh, t0 = _pad_to(qh, 1, bq)
+    oh, _ = _pad_to(oh, 1, bq)
+    gh, _ = _pad_to(gh, 1, bq)
+    pad = (-t) % bq
+    if pad:
+        # sentinel, not zero: exp(s - 1e30) == 0 keeps padded rows inert
+        lseh = jnp.pad(lseh, ((0, 0), (0, pad)), constant_values=1e30)
+    kh, s0 = _pad_to(kh, 1, bkv)
+    vh, _ = _pad_to(vh, 1, bkv)
+    dq, dk, dv = _flash_bwd(qh, kh, vh, oh, lseh, gh, causal=causal,
+                            bq=bq, bkv=bkv, interpret=_interp(interpret),
+                            kv_len=s0)
+    dq = dq[:, :t0].reshape(b, h, t0, d).transpose(0, 2, 1, 3)
+    dk = _group_sum_kv(dk[:, :s0], b, kv, grp, s0, d, k.dtype)
+    dv = _group_sum_kv(dv[:, :s0], b, kv, grp, s0, d, v.dtype)
+    return dq, dk, dv
 
 
 def decode_attention(q, k, v, pos, *, backend: str = "auto",

@@ -56,6 +56,40 @@ def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
 
 
+def flash_attention_bwd_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                            o: jnp.ndarray, lse: jnp.ndarray,
+                            g: jnp.ndarray, causal: bool = True):
+    """Recompute-from-lse twin of the blockwise flash backward.
+
+    q, o, g: (B, H, T, d); k, v: (B, H, S, d); lse: (B, H, T) f32 per-row
+    log-sum-exp stashed by the forward. Returns (dq, dk, dv) via the same
+    math the Pallas kernels run — p = exp(s − lse), ds = p·(dp − D)·scale
+    with D = rowsum(g ⊙ o) — including the dtype casts of p/ds back to the
+    operand dtype before each contraction, so bf16 parity with the kernel
+    is exact rather than merely close.
+    """
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if causal:
+        t, s_len = q.shape[2], k.shape[2]
+        mask = jnp.arange(t)[:, None] >= jnp.arange(s_len)[None, :]
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jnp.exp(s - lse.astype(jnp.float32)[..., None])      # (B,H,T,S)
+    delta = jnp.sum(g.astype(jnp.float32) * o.astype(jnp.float32),
+                    axis=-1)                                  # (B,H,T)
+    dv = jnp.einsum("bhqk,bhqd->bhkd", p.astype(g.dtype), g,
+                    preferred_element_type=jnp.float32)
+    dp = jnp.einsum("bhqd,bhkd->bhqk", g, v,
+                    preferred_element_type=jnp.float32)
+    ds = p * (dp - delta[..., None]) * scale
+    dq = jnp.einsum("bhqk,bhkd->bhqd", ds.astype(k.dtype), k,
+                    preferred_element_type=jnp.float32)
+    dk = jnp.einsum("bhqk,bhqd->bhkd", ds.astype(q.dtype), q,
+                    preferred_element_type=jnp.float32)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
 def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                          pos: jnp.ndarray) -> jnp.ndarray:
     """Single-token cached decode. q: (BH, d); k, v: (BH, S, d);

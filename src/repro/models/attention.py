@@ -227,9 +227,9 @@ def attention(x: jnp.ndarray, w: dict, ctx: AdapterCtx, cfg: ModelConfig, *,
         eff_causal = causal and kv_x is None
         if _flash_ok(ctx) and (not eff_causal or t == k.shape[1]):
             # train/prefill flash route: blockwise online softmax — the
-            # (T, S) score matrix stays out of HBM in the forward (the
-            # backward currently recomputes via the reference path, see
-            # kernels/dispatch.py)
+            # (T, S) score matrix stays out of HBM in both directions (the
+            # backward runs the two-pass recompute kernels from the stashed
+            # per-row lse, see kernels/dispatch.py)
             out = dispatch.flash_attention(q, k, v, causal=eff_causal,
                                            policy=ctx.policy)
             out = out.reshape(b, t, n_kv, g, hd)

@@ -46,6 +46,20 @@ def reinit_state(params) -> AdamWState:
     return init_state(params)
 
 
+def carry_state(state: AdamWState, mu, nu) -> AdamWState:
+    """Warm-moment carry across a DMRG resplit: install moments that were
+    transported through the sweep (core/dmrg.py ``moments=``) and KEEP the
+    step counter — a sweep is a reparameterization, not a restart, so the
+    bias-correction schedule must not rewind (the old zero-reinit also
+    silently reset ``step`` to 0, restarting warmup-scale updates)."""
+    return AdamWState(
+        step=state.step,
+        mu=jax.tree_util.tree_map(
+            lambda m: jnp.asarray(m, jnp.float32), mu),
+        nu=jax.tree_util.tree_map(
+            lambda v: jnp.maximum(jnp.asarray(v, jnp.float32), 0.0), nu))
+
+
 def global_norm(tree) -> jnp.ndarray:
     leaves = jax.tree_util.tree_leaves(tree)
     return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))

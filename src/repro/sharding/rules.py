@@ -388,3 +388,19 @@ def params_sharding(params, mesh: Mesh):
     def one(path_spec, leaf):
         return NamedSharding(mesh, _filter_spec(mesh, path_spec, leaf.shape))
     return jax.tree_util.tree_map(one, params_pspec(params), params)
+
+
+def reshard_after_reshape(tree, mesh: Mesh | None = None):
+    """device_put a host-reshaped pytree back onto the ambient GSPMD mesh.
+
+    Built for the mid-training DMRG sweep: the sweep runs host-side and
+    returns cores / transported moments with NEW bond shapes, so their old
+    shardings are stale. This re-places every leaf under the standard
+    parameter rules (``spec_for_param`` — adapter cores and moments
+    replicate), ensuring each device holds the rank-changed arrays before
+    the next jitted train step retraces against them. No-op without an
+    ambient mesh (single-device training and unit tests)."""
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        return tree
+    return jax.device_put(tree, tree_sharding(tree, mesh, spec_for_param))

@@ -49,10 +49,20 @@ def init_train_state(adapter, compressor: GradCompressor) -> TrainState:
 
 
 def reinit_after_dmrg(state: TrainState, new_adapter,
-                      compressor: GradCompressor) -> TrainState:
-    """Paper §3.3: ranks changed -> rebuild Adam moments (fresh state)."""
-    return TrainState(adapter=new_adapter,
-                      opt=adamw.init_state(new_adapter),
+                      compressor: GradCompressor,
+                      moments=None) -> TrainState:
+    """Rank change: rebuild the optimizer state for the new core shapes.
+
+    moments: optional ``(mu, nu)`` pytrees transported through the sweep
+    (core/dmrg.py ``moments=``) — the warm path keeps Adam statistics AND
+    the step counter across the resplit. Without them, fall back to the
+    paper's §3.3 fresh re-initialization (which restarts bias correction).
+    """
+    if moments is not None:
+        opt = adamw.carry_state(state.opt, *moments)
+    else:
+        opt = adamw.init_state(new_adapter)
+    return TrainState(adapter=new_adapter, opt=opt,
                       residual=compressor.init_residual(new_adapter),
                       step=state.step)
 

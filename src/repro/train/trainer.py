@@ -3,8 +3,14 @@ watchdog, multi-task cycling.
 
 The loop is deliberately host-driven (the paper's §3.3 uses a custom loop for
 the same reason: DMRG changes the *model shapes* mid-run, which no jitted
-graph can do). Rank changes trigger: sweep → fresh Adam moments (paper
-requirement) → automatic re-jit via new shapes.
+graph can do). Rank changes trigger: sweep (with AdamW moments transported
+through each two-site resplit when ``train.dmrg_warm_moments`` — the
+paper's cold re-init is the fallback) → re-place the rank-changed cores +
+moments onto the ambient GSPMD mesh → automatic re-jit via new shapes.
+Sweeps run BEFORE the boundary checkpoint and the applied schedule position
+is recorded in checkpoint meta, so a resume lands on the post-sweep
+(params, opt-state, schedule-position) triple instead of silently losing
+the rank change.
 """
 from __future__ import annotations
 
@@ -19,7 +25,9 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.config.base import RunConfig
 from repro.core import dmrg as dmrg_lib
+from repro.core import tt
 from repro.distributed import FailureInjector, GradCompressor, Watchdog
+from repro.sharding import rules
 from repro.models import model as model_lib
 from repro.peft import api as peft_api
 from repro.train import train_step as ts
@@ -57,6 +65,7 @@ class Trainer:
         self.watchdog.on_straggler = lambda s, dt, ew: \
             self.straggler_events.append((s, dt, ew))
         self.history: list = []
+        self._dmrg_applied: list = []      # epochs whose sweep already ran
         self._resume()
 
     # ------------------------------------------------------------------
@@ -70,7 +79,11 @@ class Trainer:
         self.state = state
         if "data_state" in meta and hasattr(self.data, "restore"):
             self.data.restore(meta["data_state"])
-        print(f"[trainer] resumed from checkpoint step {step}")
+        dm = meta.get("dmrg") or {}
+        self._dmrg_applied = list(dm.get("applied_epochs", []))
+        extra = (f" (dmrg epochs {self._dmrg_applied}, "
+                 f"ranks {tuple(dm.get('ranks', ()))})" if dm else "")
+        print(f"[trainer] resumed from checkpoint step {step}{extra}")
 
     def _save(self, step: int) -> None:
         if self.ckpt is None:
@@ -78,6 +91,14 @@ class Trainer:
         meta = {}
         if hasattr(self.data, "state"):
             meta["data_state"] = self.data.state()
+        adapter = self.state.adapter
+        if isinstance(adapter, dict) and "cores" in adapter:
+            # schedule position rides with the reshaped params/opt-state so
+            # a resume can't silently lose a rank change
+            meta["dmrg"] = {
+                "applied_epochs": list(self._dmrg_applied),
+                "ranks": [int(r) for r in tt.ranks(adapter["cores"])],
+            }
         self.ckpt.save(step, self.state, meta)
 
     # ------------------------------------------------------------------
@@ -90,15 +111,24 @@ class Trainer:
             return
         epoch = step // self.steps_per_epoch
         target = self.rank_schedule.rank_after_epoch(epoch)
-        if target is None:
+        if target is None or epoch in self._dmrg_applied:
             return
-        res = dmrg_lib.dmrg_sweep(self.state.adapter, target_rank=target)
+        warm = self.run.train.dmrg_warm_moments
+        moments = (self.state.opt.mu, self.state.opt.nu) if warm else None
+        res = dmrg_lib.dmrg_sweep(self.state.adapter, target_rank=target,
+                                  moments=moments)
         n_before = peft_api.count_trainable(self.spec, self.state.adapter)
         n_after = peft_api.count_trainable(self.spec, res.params)
         self.state = ts.reinit_after_dmrg(self.state, res.params,
-                                          self.compressor)
+                                          self.compressor,
+                                          moments=res.moments)
+        # the host-side resplit left stale placements: put the rank-changed
+        # cores + moments back onto the ambient mesh before the retrace
+        self.state = rules.reshard_after_reshape(self.state)
+        self._dmrg_applied.append(epoch)
         print(f"[trainer] DMRG sweep @step {step}: ranks -> {res.ranks} "
-              f"params {n_before} -> {n_after}")
+              f"params {n_before} -> {n_after} "
+              f"({'warm' if warm else 'cold'} moments)")
 
     # ------------------------------------------------------------------
     def _next_batch(self, step: int) -> dict:
@@ -127,10 +157,13 @@ class Trainer:
             self.history.append((step, metrics))
             if self.on_metrics is not None:
                 self.on_metrics(step, metrics)
+            # sweep BEFORE the boundary checkpoint: a save at an epoch edge
+            # must capture the post-sweep triple, or a resume from it would
+            # silently lose the rank change
+            self._maybe_dmrg(step + 1)
             if self.run.train.ckpt_every and \
                     (step + 1) % self.run.train.ckpt_every == 0:
                 self._save(step + 1)
-            self._maybe_dmrg(step + 1)
         if self.ckpt is not None:
             self._save(steps)
             self.ckpt.wait()

@@ -69,3 +69,53 @@ def test_instr_parser_handles_tuple_types_with_comments():
     assert ins.op == "while"
     assert H._TRIP_RE.search(ins.attrs).group(1) == "28"
     assert H._FLOW_CALLS.findall(ins.attrs) == ["%c", "%b"]
+
+
+# ---------------------------------------------------------------------------
+# training memory regression: no (T, T) score matrix in the flash backward
+# ---------------------------------------------------------------------------
+
+
+class TestFlashBackwardMemory:
+    """The blockwise backward must keep the (T, S) score matrix out of the
+    compiled graph entirely — recompute happens tile-by-tile inside the
+    kernel, so at T=2048 no [.., 2048, 2048] buffer may exist in the HLO.
+    The reference path is the positive control: its autodiff materializes
+    the scores, proving the scan actually detects them."""
+
+    T = 2048
+    _PAT = None  # compiled lazily to keep import side-effect free
+
+    @classmethod
+    def _tt_buffers(cls, text):
+        import re
+        if cls._PAT is None:
+            t = cls.T
+            cls._PAT = re.compile(r"\[(?:\d+,)*%d,%d\]" % (t, t))
+        return cls._PAT.findall(text)
+
+    def _grad_text(self, policy):
+        from repro.kernels import dispatch
+
+        t = self.T
+        q = jax.ShapeDtypeStruct((1, t, 1, 64), jnp.float32)
+
+        def loss(q, k, v):
+            return jnp.sum(dispatch.flash_attention(q, k, v, causal=True,
+                                                    policy=policy))
+
+        return jax.jit(jax.grad(loss, argnums=(0, 1, 2))) \
+            .lower(q, q, q).compile().as_text()
+
+    def test_pallas_backward_has_no_tt_buffer(self):
+        from repro.config.base import KernelConfig
+        from repro.kernels import dispatch
+
+        pol = dispatch.resolve(KernelConfig(backend="pallas",
+                                            interpret=True))
+        hits = self._tt_buffers(self._grad_text(pol))
+        assert hits == [], f"(T,T) buffers live in flash backward: {hits}"
+
+    def test_ref_backward_materializes_tt_buffer(self):
+        hits = self._tt_buffers(self._grad_text(None))
+        assert hits, "positive control: ref backward should show (T,T)"

@@ -256,3 +256,107 @@ def test_repetition_penalty_only_demotes_emitted_ids(seed, vocab, rp):
     out = sampling_lib.process_logits(lg, cfg, penalty_mask=mask)
     lg32 = lg.astype(jnp.float32)
     assert bool(jnp.all(jnp.where(mask, out <= lg32 + 1e-6, out == lg32)))
+
+
+# ---------------------------------------------------------------------------
+# DMRG-in-training invariants (rank-adaptive sweeps as a training-loop move)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=_seed, rank=st.integers(min_value=1, max_value=6))
+def test_two_site_resplit_exact_at_full_rank(seed, rank):
+    """The sweep's elementary move — merge two cores, SVD-resplit — is an
+    exact factorization whenever the bond is not actually truncated."""
+    cores = tt.random_tt(jax.random.PRNGKey(seed), (9, 7), rank)
+    merged = tt.merge_pair(cores[0], cores[1])
+    full = min(merged.shape[0] * merged.shape[1],
+               merged.shape[2] * merged.shape[3])
+    a, b, _ = tt.split_merged(merged, rank=full)
+    np.testing.assert_allclose(np.asarray(tt.merge_pair(a, b)),
+                               np.asarray(merged), atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=_seed, r_lo=st.integers(min_value=1, max_value=5),
+       dr=st.integers(min_value=0, max_value=3))
+def test_sweep_truncation_error_monotone_in_target_rank(seed, r_lo, dr):
+    """A larger target rank never reconstructs the adapter worse — the
+    property that makes RankSchedule's shrink-over-epochs well-ordered."""
+    p = {"cores": tt.random_tt(jax.random.PRNGKey(seed), (12, 5, 4, 12), 6)}
+    full = tt.materialize(p["cores"])
+
+    def err(r):
+        out = dmrg.dmrg_sweep(p, target_rank=r).params["cores"]
+        return float(jnp.linalg.norm(tt.materialize(out) - full))
+
+    assert err(r_lo + dr) <= err(r_lo) + 1e-4
+
+
+def _slice_bonds(cores, rd):
+    out = []
+    for i, c in enumerate(cores):
+        if i > 0:
+            c = c[:rd]
+        if i < len(cores) - 1:
+            c = c[..., :rd]
+        out.append(c)
+    return out
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=_seed, rd=st.integers(min_value=1, max_value=4))
+def test_bond_nesting_sliced_swept_train_is_sweep_fixed_point(seed, rd):
+    """Bond-dimension nesting, the identity the self-drafter relies on:
+    slicing every bond of a swept (canonical) train down to rd yields a
+    train the sweep itself cannot improve — re-sweeping the sliced cores
+    at target rd preserves their function exactly, so truncate_factors'
+    cheap slices behave like a genuine rank-rd sweep, not an arbitrary
+    crop."""
+    p = {"cores": tt.random_tt(jax.random.PRNGKey(seed), (10, 5, 4, 10), 6)}
+    swept = dmrg.dmrg_sweep(p, target_rank=6).params["cores"]
+    sliced = _slice_bonds(swept, rd)
+    reswept = dmrg.dmrg_sweep({"cores": sliced},
+                              target_rank=rd).params["cores"]
+    np.testing.assert_allclose(np.asarray(tt.materialize(reswept)),
+                               np.asarray(tt.materialize(sliced)),
+                               atol=1e-5)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=_seed, rd=st.integers(min_value=1, max_value=5))
+def test_truncate_factors_commutes_with_outer_bond_slice(seed, rd):
+    """The serving-layer half of the nesting identity: truncating the live
+    factor bundle (speculative.truncate_factors) equals rebuilding the
+    bundle from cores whose OUTER bonds were sliced — the drafter's crop
+    is a real TT operation, not a layout hack."""
+    from repro import configs as registry
+    from repro.config.base import RunConfig, SHAPES
+    from repro.models import model as M
+    from repro.peft import api as peft_api
+    from repro.serving import speculative
+
+    key = jax.random.PRNGKey(seed)
+    cfg = registry.get_smoke_config("stablelm-1.6b")
+    run = RunConfig(model=cfg, shape=SHAPES["train_4k"],
+                    adapter_kind="metatt", adapter_variant="4d",
+                    adapter_rank=6)
+    spec = M.build_adapter_spec(run)
+    params = M.init_params(cfg, spec, key)
+    cores = tt.random_tt(key, spec.cfg.mode_sizes, 6, scale=0.5)
+    bc, pl = peft_api.adapter_factors(spec, {"cores": cores},
+                                      params["frozen"])
+    bct, plt = speculative.truncate_factors("metatt", bc, pl, rd)
+    sl = list(cores)
+    sl[0] = sl[0][..., :rd]
+    sl[1] = sl[1][:rd]
+    sl[-2] = sl[-2][..., :rd]
+    sl[-1] = sl[-1][:rd]
+    bcs, pls = peft_api.adapter_factors(spec, {"cores": sl},
+                                        params["frozen"])
+    for k in bct:
+        np.testing.assert_allclose(np.asarray(bct[k]), np.asarray(bcs[k]),
+                                   atol=1e-6)
+    for k in plt:
+        np.testing.assert_allclose(np.asarray(plt[k]), np.asarray(pls[k]),
+                                   atol=1e-6)
